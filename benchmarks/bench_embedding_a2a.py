@@ -1,0 +1,47 @@
+"""Paper Fig. 8 & 12: embedding pooling + All-to-All, fused vs bulk,
+swept over {global batch | tables per device} like the paper's labels.
+
+Paper: 20% avg intra-node (up to 32%), 31% avg inter-node (up to 58%).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import model_bulk, model_fused, pct_reduction, timeit
+
+
+def run(report):
+    import jax
+
+    from repro.core.embedding_all_to_all import embedding_all_to_all
+    from repro.launch.mesh import make_host_mesh
+
+    ctx = make_host_mesh()
+    rng = np.random.default_rng(0)
+    reductions = []
+    V, D, L = 512, 32, 8
+    for B, T in [(64, 8), (128, 8), (128, 16)]:
+        idx = rng.integers(0, V, (B, T, L)).astype(np.int32)
+        tabs = rng.standard_normal((T, V, D)).astype(np.float32)
+        fns = {m: jax.jit(lambda i, t, m=m: embedding_all_to_all(ctx, i, t, mode=m))
+               for m in ["bulk", "fused"]}
+        t = {m: timeit(fns[m], idx, tabs) for m in fns}
+        red = pct_reduction(t["bulk"], t["fused"])
+        report(f"embed_a2a_cpu_proxy_b{B}_t{T}", t["fused"] * 1e6,
+               f"bulk_us={t['bulk']*1e6:.1f};reduction_pct={red:.1f}")
+        reductions.append(red)
+
+    # projection at paper scale: dim 256, pooling 70, world 16.
+    # Pooling is gather-bound (HBM); A2A wire is comparable -> overlap wins.
+    # "ici" = v5e scale-up links; "ib20" = the paper's 20 GB/s inter-node.
+    for B, T_per in [(512, 256), (1024, 256), (2048, 256), (4096, 256)]:
+        world = 16
+        flops = B * T_per * 70 * 256 * 2
+        hbm = B * T_per * 70 * 256 * 4          # gathered rows (fp32)
+        wire = B * T_per * 256 * 4 * (world - 1) / world
+        for label, bw in [("ici", 50e9), ("ib20", 20e9)]:
+            b = model_bulk(flops, hbm, wire, bw=bw)
+            f = model_fused(flops, hbm, wire, chunks=world, bw=bw)
+            report(f"embed_a2a_v5e_model_{label}_b{B}", f * 1e6,
+                   f"bulk_us={b*1e6:.1f};reduction_pct={pct_reduction(b, f):.1f}")
+    return reductions

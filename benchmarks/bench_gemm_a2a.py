@@ -1,0 +1,46 @@
+"""Paper Fig. 10: MoE expert GEMM + All-to-All combine, fused vs bulk.
+
+The paper reports 12% avg (20% max) lower execution time with a generic
+Triton GEMM (compute-dominated, which bounds the win).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import model_bulk, model_fused, pct_reduction, timeit
+
+
+def run(report):
+    import jax
+
+    from repro.core.moe_all_to_all import fused_expert_ffn_combine
+    from repro.launch.mesh import make_host_mesh
+
+    ctx = make_host_mesh()
+    rng = np.random.default_rng(0)
+    reductions = []
+    for C, D, F in [(16, 64, 128), (32, 128, 256)]:
+        n_ep, E = 4, 8
+        xd = rng.standard_normal((8, n_ep, E, C, D)).astype(np.float32)
+        wu = rng.standard_normal((E, D, F)).astype(np.float32)
+        wg = rng.standard_normal((E, D, F)).astype(np.float32)
+        wd = rng.standard_normal((E, F, D)).astype(np.float32)
+        fns = {m: jax.jit(lambda x, m=m: fused_expert_ffn_combine(
+            ctx, x, wu, wg, wd, act=jax.nn.silu, mode=m))
+            for m in ["bulk", "fused"]}
+        t = {m: timeit(fns[m], xd) for m in fns}
+        red = pct_reduction(t["bulk"], t["fused"])
+        report(f"gemm_a2a_cpu_proxy_C{C}xD{D}", t["fused"] * 1e6,
+               f"bulk_us={t['bulk']*1e6:.1f};reduction_pct={red:.1f}")
+        reductions.append(red)
+
+    # projection: expert shards (dbrx-like / deepseek-v3-like), tp=16
+    for tok, D, F in [(4096, 6144, 10752), (4096, 7168, 2048)]:
+        flops = 2 * 3 * tok * D * F / 16
+        hbm = 3 * D * F * 2            # expert weights read once (bf16)
+        wire = tok * D * 2 / 16 * 2    # dispatch + combine token bytes
+        b = model_bulk(flops, hbm, wire)
+        f = model_fused(flops, hbm, wire, chunks=16)
+        report(f"gemm_a2a_v5e_model_D{D}xF{F}", f * 1e6,
+               f"bulk_us={b*1e6:.1f};reduction_pct={pct_reduction(b, f):.1f}")
+    return reductions

@@ -1,0 +1,41 @@
+"""Paper Fig. 13 analogue: overlap granularity sweep.
+
+The paper sweeps GPU occupancy (slice size) and finds a sweet spot below
+the maximum: finer slices overlap better until per-slice overhead and
+contention win.  Our knob is ring-chunk count; we sweep it in the
+alpha-beta model and measure two points on the host mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import model_fused, model_bulk, timeit
+
+
+def run(report):
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.core.matmul_allreduce import matmul_allreduce
+
+    # model: v5e, row-parallel GEMM 4096 tokens x (14336/16 -> 4096)
+    flops = 2 * 4096 * 14336 / 16 * 4096
+    hbm = 14336 / 16 * 4096 * 2
+    wire = 4096 * 4096 * 2 * 2 / 16
+    best = None
+    for chunks in [1, 2, 4, 8, 16, 32, 64, 128]:
+        t = model_fused(flops, hbm, wire, chunks)
+        report(f"granularity_model_chunks{chunks}", t * 1e6,
+               f"bulk_us={model_bulk(flops, hbm, wire)*1e6:.1f}")
+        if best is None or t < best[1]:
+            best = (chunks, t)
+    report("granularity_model_best", best[1] * 1e6, f"chunks={best[0]}")
+
+    ctx = make_host_mesh()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 64, 256)).astype(np.float32)
+    w = rng.standard_normal((256, 256)).astype(np.float32)
+    for mode in ["bulk", "fused"]:
+        fn = jax.jit(lambda x, w, m=mode: matmul_allreduce(ctx, x, w, mode=m))
+        report(f"granularity_measured_{mode}", timeit(fn, x, w) * 1e6, "")
+    return best

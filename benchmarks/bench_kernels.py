@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks (interpret mode: correctness-level timing) and
+the device-initiated fused kernel vs XLA-fused vs bulk comparison."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import pct_reduction, timeit
+
+
+def run(report):
+    import jax
+
+    from repro.core.matmul_allreduce import matmul_allreduce
+    from repro.kernels.fused_gemv_allreduce.ops import fused_matmul_allreduce
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import ParallelContext
+
+    m = jax.make_mesh((8,), ("model",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+    ctx1d = ParallelContext.from_mesh(m)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 128)).astype(np.float32)
+    t_bulk = timeit(jax.jit(lambda x, w: matmul_allreduce(ctx1d, x, w, mode="bulk")), x, w, iters=5)
+    t_fused = timeit(jax.jit(lambda x, w: matmul_allreduce(ctx1d, x, w, mode="fused")), x, w, iters=5)
+    t_kernel = timeit(jax.jit(lambda x, w: fused_matmul_allreduce(ctx1d, x, w)), x, w, iters=2)
+    report("kernel_gemv_ar_bulk", t_bulk * 1e6, "")
+    report("kernel_gemv_ar_fused_xla", t_fused * 1e6, "")
+    report("kernel_gemv_ar_fused_dma_interp", t_kernel * 1e6,
+           "interpret-mode (correctness proxy, not perf)")
+
+    from repro.kernels.fused_embedding_a2a.ops import fused_embedding_a2a
+
+    idx = rng.integers(0, 32, (16, 16, 4)).astype(np.int32)
+    tabs = rng.standard_normal((16, 32, 16)).astype(np.float32)
+    t_edma = timeit(jax.jit(lambda i, t: fused_embedding_a2a(ctx1d, i, t)),
+                    idx, tabs, iters=2)
+    report("kernel_embed_a2a_fused_dma_interp", t_edma * 1e6,
+           "interpret-mode (correctness proxy, not perf)")
+    return t_kernel

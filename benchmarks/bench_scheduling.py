@@ -1,0 +1,46 @@
+"""Paper Fig. 14: communication-aware vs -oblivious scheduling skew.
+
+The paper measures ~7% inter-node execution skew with oblivious
+scheduling vs ~1% with comm-aware.  We measure wall-clock of the fused
+embedding+A2A under both schedules and compute the modelled exposed-wire
+difference (the skew mechanism: remote slices computed last leave their
+wire time exposed to the consumer).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ICI_BW, PEAK_FLOPS, pct_reduction, timeit
+
+
+def run(report):
+    import jax
+
+    from repro.core.embedding_all_to_all import embedding_all_to_all
+    from repro.launch.mesh import make_host_mesh
+
+    ctx = make_host_mesh()
+    rng = np.random.default_rng(0)
+    V, D, L, B, T = 512, 32, 8, 128, 8
+    idx = rng.integers(0, V, (B, T, L)).astype(np.int32)
+    tabs = rng.standard_normal((T, V, D)).astype(np.float32)
+    t = {}
+    for sched in ["comm_aware", "oblivious"]:
+        fn = jax.jit(lambda i, tb, s=sched: embedding_all_to_all(
+            ctx, i, tb, mode="fused", schedule=s))
+        t[sched] = timeit(fn, idx, tabs)
+    report("sched_measured_comm_aware", t["comm_aware"] * 1e6,
+           f"oblivious_us={t['oblivious']*1e6:.1f};"
+           f"aware_faster_pct={pct_reduction(t['oblivious'], t['comm_aware']):.1f}")
+
+    # modelled skew: oblivious exposes the last remote chunk's wire time
+    world, chunk_bytes, chunk_flops = 16, 2048 * 256 * 2 / 16, 2048 * 256 * 70 * 2 / 16
+    c = chunk_flops / PEAK_FLOPS
+    w = chunk_bytes / ICI_BW
+    total_aware = world * c + w              # wire hidden behind later chunks
+    total_obliv = world * c + (world - 1) * 0 + w * min(world - 1, 3)
+    skew_aware = w / total_aware * 100
+    skew_obliv = w * 3 / total_obliv * 100
+    report("sched_model_skew", skew_aware,
+           f"oblivious_skew_pct={skew_obliv:.1f};aware_skew_pct={skew_aware:.1f}")
+    return t

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+import argparse
+import os
+import sys
+import traceback
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+BENCHES = [
+    ("bench_gemv_allreduce", "Fig. 9  GEMV+AllReduce"),
+    ("bench_gemm_a2a", "Fig. 10 GEMM+All-to-All (MoE)"),
+    ("bench_embedding_a2a", "Fig. 8/12 embedding+All-to-All"),
+    ("bench_scheduling", "Fig. 14 comm-aware scheduling skew"),
+    ("bench_granularity", "Fig. 13 overlap granularity"),
+    ("bench_scaleout_sim", "Fig. 15 128-node DLRM scale-out sim"),
+    ("bench_kernels", "device-initiated kernel comparison"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name, title in BENCHES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# {title}", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(lambda name, us, derived="": print(
+                f"{name},{us:.1f},{derived}", flush=True))
+        except Exception:
+            failures += 1
+            print(f"# FAILED {mod_name}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

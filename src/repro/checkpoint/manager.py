@@ -1,0 +1,58 @@
+"""Checkpoint lifecycle: keep-k GC, latest discovery, resume."""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+
+from repro.checkpoint.checkpointer import AsyncCheckpointer, restore_checkpoint
+
+_STEP_RE = re.compile(r"step_(\d{8})$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async = AsyncCheckpointer() if async_save else None
+
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and not name.endswith(".tmp"):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_path(self):
+        steps = self.all_steps()
+        if not steps:
+            return None
+        return os.path.join(self.directory, f"step_{steps[-1]:08d}")
+
+    def save(self, step: int, tree):
+        if self._async is not None:
+            self._async.save(self.directory, step, tree)
+        else:
+            from repro.checkpoint.checkpointer import save_checkpoint
+
+            save_checkpoint(self.directory, step, tree)
+        self._gc()
+
+    def wait(self):
+        if self._async is not None:
+            self._async.wait()
+
+    def restore_latest(self, target_tree, shardings=None):
+        self.wait()
+        path = self.latest_path()
+        if path is None:
+            return None
+        return restore_checkpoint(path, target_tree, shardings)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

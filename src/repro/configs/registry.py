@@ -1,0 +1,311 @@
+"""Architecture registry: uniform bundle interface over the model zoo.
+
+Every assigned architecture (+ the paper's own DLRM) is exposed as an
+``ArchBundle`` with: init, loss (train_step body), prefill, decode,
+cache construction + logical sharding specs, per-shape input specs
+(ShapeDtypeStruct stand-ins, no allocation), and a reduced smoke config.
+
+Shapes (assignment):
+  train_4k     seq 4096   global_batch 256   -> train_step
+  prefill_32k  seq 32768  global_batch 32    -> prefill_step
+  decode_32k   seq 32768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288 global_batch 1     -> serve_step; SSM/hybrid only
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import split_params
+from repro.parallel.sharding import ParallelContext
+
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+DLRM_SHAPES = {
+    "train_8k": {"batch": 8192, "kind": "dlrm_train"},
+}
+
+_MODULES = {
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "dlrm": "repro.configs.dlrm",
+}
+
+ARCHS = list(_MODULES)
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str
+    config: Any
+    optimizer: str = "adamw"
+    microbatches: int = 1   # train-time gradient accumulation (memory knob)
+
+    # ---- model fns -------------------------------------------------------
+    def init_params(self, key):
+        if self.family == "transformer":
+            from repro.models.transformer import transformer_init
+
+            return transformer_init(key, self.config)
+        if self.family == "rwkv6":
+            from repro.models.rwkv6 import rwkv6_init
+
+            return rwkv6_init(key, self.config)
+        if self.family == "zamba2":
+            from repro.models.zamba2 import zamba2_init
+
+            return zamba2_init(key, self.config)
+        if self.family == "dlrm":
+            from repro.models.dlrm import dlrm_init
+
+            return dlrm_init(key, self.config)
+        raise ValueError(self.family)
+
+    def loss_fn(self, ctx: ParallelContext) -> Callable:
+        fam = self.family
+        cfg = self.config
+        if fam == "transformer":
+            from repro.models.transformer import train_forward
+
+            return lambda p, b: train_forward(ctx, p, cfg, b)
+        if fam == "rwkv6":
+            from repro.models.rwkv6 import train_forward
+
+            return lambda p, b: train_forward(ctx, p, cfg, b)
+        if fam == "zamba2":
+            from repro.models.zamba2 import train_forward
+
+            return lambda p, b: train_forward(ctx, p, cfg, b)
+        if fam == "dlrm":
+            from repro.models.dlrm import dlrm_loss
+
+            return lambda p, b: dlrm_loss(ctx, p, cfg, b)
+        raise ValueError(fam)
+
+    def prefill_fn(self, ctx: ParallelContext) -> Callable:
+        mod = {"transformer": "repro.models.transformer",
+               "rwkv6": "repro.models.rwkv6",
+               "zamba2": "repro.models.zamba2"}[self.family]
+        fn = importlib.import_module(mod).prefill_forward
+        cfg = self.config
+        return lambda p, b: fn(ctx, p, cfg, b)
+
+    def decode_fn(self, ctx: ParallelContext) -> Callable:
+        mod = {"transformer": "repro.models.transformer",
+               "rwkv6": "repro.models.rwkv6",
+               "zamba2": "repro.models.zamba2"}[self.family]
+        fn = importlib.import_module(mod).decode_step
+        cfg = self.config
+        return lambda p, t, c, pos: fn(ctx, p, cfg, t, c, pos)
+
+    # ---- caches ----------------------------------------------------------
+    def with_max_seq(self, max_seq: int) -> "ArchBundle":
+        if self.family in ("transformer", "zamba2"):
+            return dataclasses.replace(
+                self, config=dataclasses.replace(self.config, max_seq=max_seq))
+        return self
+
+    def init_cache(self, batch_size: int):
+        if self.family == "transformer":
+            from repro.models.transformer import init_cache
+
+            return init_cache(self.config, batch_size)
+        if self.family == "rwkv6":
+            from repro.models.rwkv6 import init_state
+
+            return init_state(self.config, batch_size)
+        if self.family == "zamba2":
+            from repro.models.zamba2 import init_cache
+
+            return init_cache(self.config, batch_size)
+        raise ValueError(self.family)
+
+    def cache_specs(self, cache):
+        if self.family == "transformer":
+            from repro.models.transformer import cache_logical_specs
+
+            return cache_logical_specs(self.config, cache)
+        if self.family == "rwkv6":
+            from repro.models.rwkv6 import state_logical_specs
+
+            return state_logical_specs(self.config, cache)
+        if self.family == "zamba2":
+            from repro.models.zamba2 import cache_logical_specs
+
+            return cache_logical_specs(self.config, cache)
+        raise ValueError(self.family)
+
+    def decode_param_specs(self, specs, params_struct=None):
+        """Serve-time placement (weight-stationary decode):
+        - expert weights shard over the (data x model) EP world;
+        - large dense weights swap their FSDP dim for the EP world where
+          the dim divides it -- XLA then emits partial-matmul + psum
+          (activation-sized) instead of per-layer weight all-gathers."""
+        if self.family != "transformer":
+            return specs
+        ep_world = 256
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+        expert_remap = {
+            (None, "tp", "fsdp", None): (None, "ep", None, None),
+            (None, "tp", None, "fsdp"): (None, "ep", None, None),
+            ("tp", "fsdp", None): ("ep", None, None),
+            ("tp", None, "fsdp"): ("ep", None, None),
+        }
+
+        moe = getattr(self.config, "moe", None)
+        ep_ok = moe is not None and moe.n_experts % ep_world == 0
+
+        def remap(spec, leaf):
+            if ep_ok and spec in expert_remap:
+                return expert_remap[spec]
+            # large dense [in, out] weights: row-parallel serve placement
+            # (contraction dim over model) -> partial matmul + small AR,
+            # the paper's GEMV+AllReduce pattern, instead of FSDP gathers
+            if "fsdp" in spec and "tp" not in spec and "ep" not in spec \
+                    and leaf is not None and leaf.size >= 2 ** 22 \
+                    and len(spec) >= 2:
+                i = len(spec) - 2  # contraction dim of x @ w
+                if leaf.shape[i] % 16 == 0:
+                    return tuple(
+                        "tp" if j == i else None for j in range(len(spec)))
+            return spec
+
+        if params_struct is None:
+            return jax.tree.map(lambda s: expert_remap.get(s, s), specs,
+                                is_leaf=is_spec)
+        flat_s, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+        flat_p = jax.tree.leaves(params_struct)
+        return jax.tree.unflatten(
+            treedef, [remap(s, p) for s, p in zip(flat_s, flat_p)])
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return bool(getattr(self.config, "sub_quadratic", False))
+
+    def shapes(self):
+        if self.family == "dlrm":
+            return dict(DLRM_SHAPES)
+        out = {}
+        for name, sh in SHAPES.items():
+            if name == "long_500k" and not self.sub_quadratic:
+                continue  # quadratic attention: skipped per DESIGN.md
+            out[name] = sh
+        return out
+
+    # ---- per-shape input specs (ShapeDtypeStruct, no allocation) ---------
+    def batch_struct(self, shape_name: str, ctx: ParallelContext):
+        """Returns (batch_tree of ShapeDtypeStruct, logical spec tree)."""
+        cfg = self.config
+        if self.family == "dlrm":
+            sh = DLRM_SHAPES[shape_name]
+            B, T, L = sh["batch"], cfg.n_tables, cfg.pooling
+            batch = {
+                "dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+                "indices": jax.ShapeDtypeStruct((B, T, L), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+            }
+            specs = {"dense": ("world", None), "indices": (None, "world", None),
+                     "labels": ("world",)}
+            return batch, specs
+        sh = SHAPES[shape_name]
+        S, B = sh["seq"], sh["batch"]
+        kind = sh["kind"]
+        bspec = "batch" if B % ctx.dp == 0 else None
+        if kind == "decode":
+            batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+            specs = {"tokens": (bspec, None)}
+            return batch, specs
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        specs = {"tokens": (bspec, None), "labels": (bspec, None)}
+        fe = getattr(cfg, "frontend", None)
+        if fe == "audio":
+            batch["frame_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                         jnp.bfloat16)
+            specs["frame_embeds"] = (bspec, "seq", None)
+        if fe == "vision":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                          jnp.bfloat16)
+            batch["vision_mask"] = jax.ShapeDtypeStruct((S,), jnp.bool_)
+            batch["positions_thw"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            specs["vision_embeds"] = (bspec, "seq", None)
+            specs["vision_mask"] = (None,)
+            specs["positions_thw"] = (None, bspec, None)
+        return batch, specs
+
+    # ---- reduced smoke config --------------------------------------------
+    def reduced(self) -> "ArchBundle":
+        c = self.config
+        if self.family == "transformer":
+            over = dict(n_layers=2 + c.dense_prefix if c.dense_prefix else
+                        2 * c.pattern_len, d_model=64,
+                        d_ff=128, vocab=512, head_dim=None, max_seq=64,
+                        param_dtype="float32", compute_dtype="float32")
+            # keep head structure but tiny
+            hd = 16
+            over["head_dim"] = hd
+            over["n_heads"] = max(4, min(c.n_heads, 4))
+            kv = min(c.n_kv_heads, over["n_heads"])
+            over["n_kv_heads"] = kv if over["n_heads"] % kv == 0 else over["n_heads"]
+            if c.window:
+                over["window"] = 16
+            if c.mla is not None:
+                over["n_heads"] = 4
+                over["n_kv_heads"] = 4
+                over["mla"] = dataclasses.replace(
+                    c.mla, d_model=64, n_heads=4, q_lora_rank=32,
+                    kv_lora_rank=16, qk_nope_dim=hd, qk_rope_dim=8,
+                    v_head_dim=hd)
+            if c.moe is not None:
+                over["moe"] = dataclasses.replace(
+                    c.moe, n_experts=8, top_k=min(c.moe.top_k, 2), d_model=64,
+                    d_ff=32)
+            if c.rope_style == "mrope":
+                over["mrope_sections"] = (4, 6, 6)
+                over["head_dim"] = 32
+            if c.dense_prefix:
+                over["dense_prefix"] = 1
+                over["n_layers"] = 3
+            return dataclasses.replace(
+                self, config=dataclasses.replace(c, **over))
+        if self.family == "rwkv6":
+            return dataclasses.replace(self, config=dataclasses.replace(
+                c, n_layers=2, d_model=64, d_ff=128, vocab=512, head_size=16,
+                lora_r=8, chunk=8, param_dtype="float32",
+                compute_dtype="float32"))
+        if self.family == "zamba2":
+            return dataclasses.replace(self, config=dataclasses.replace(
+                c, n_layers=5, d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                vocab=256, d_state=8, attn_every=2, lora_r=4, max_seq=64,
+                param_dtype="float32", compute_dtype="float32"))
+        if self.family == "dlrm":
+            return dataclasses.replace(self, config=dataclasses.replace(
+                c, n_tables=8, table_vocab=128, embed_dim=16, n_dense=4,
+                bottom_mlp=(32, 16), top_mlp=(32, 1), pooling=5))
+        raise ValueError(self.family)
+
+
+def get_arch(name: str) -> ArchBundle:
+    mod = importlib.import_module(_MODULES[name])
+    return ArchBundle(name=name, family=mod.FAMILY, config=mod.CONFIG,
+                      optimizer=getattr(mod, "OPTIMIZER", "adamw"),
+                      microbatches=getattr(mod, "MICROBATCHES", 1))

@@ -1,0 +1,1 @@
+from repro.core import fused  # noqa: F401

@@ -1,0 +1,109 @@
+"""Fused AllGather x matmul and matmul x ReduceScatter (sequence parallel).
+
+These are the sequence-parallel counterparts of the paper's GEMM+collective
+fusion: under SP the row-parallel AllReduce splits into a reduce-scatter
+(fused here with the producing matmul) and the next layer's all-gather
+(fused here with the consuming matmul).  Each ring hop's collective-permute
+is issued as soon as the corresponding chunk is computed/consumed, giving
+the paper's intra-kernel overlap at the XLA level.
+
+allgather_matmul:  x [B, S, K] with S sharded over tp, w [K, N] col-sharded
+                   -> y [B, S, N] full S, N sharded over tp.
+matmul_reducescatter: x [B, S, K] full S, K sharded over tp; w [K, N]
+                   -> y [B, S, N] with S sharded over tp (sum over ranks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import ring_permute, ring_reduce_scatter_compute
+from repro.parallel.sharding import ParallelContext
+
+
+def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None):
+    """y[b, s, :] = (AG_tp(x) @ w_colshard)[b, s, :].
+
+    Fused: the locally-held sequence chunk is multiplied first (it is
+    available at t=0, hiding the first hop), then each arriving chunk is
+    multiplied while the next is on the wire.
+    """
+    mode = mode or ctx.fusion.resolve("ag_matmul")
+    axis, n = ctx.tp_axis, ctx.tp
+    b, s, k = x.shape
+    nout = w.shape[1]
+    dp = ctx.batch_axes if b % ctx.dp == 0 else None
+
+    def local_fn(xl, wl):
+        if mode == "bulk":
+            xg = lax.all_gather(xl, axis, axis=1, tiled=True)
+            return xg @ wl
+        d = lax.axis_index(axis)
+        s_loc = xl.shape[1]
+        out = jnp.zeros((xl.shape[0], s_loc * n, wl.shape[1]), xl.dtype)
+        buf = xl
+        out = lax.dynamic_update_slice_in_dim(out, xl @ wl, d * s_loc, axis=1)
+        for i in range(1, n):
+            buf = ring_permute(buf, axis, n)
+            src = (d - i) % n
+            out = lax.dynamic_update_slice_in_dim(out, buf @ wl, src * s_loc, axis=1)
+        return out
+
+    return jax.shard_map(
+        local_fn,
+        mesh=ctx.mesh,
+        in_specs=(P(dp, ctx.tp_axis, None), P(None, ctx.tp_axis)),
+        out_specs=P(dp, None, ctx.tp_axis),
+        check_vma=False,
+    )(x, w)
+
+
+def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
+                         schedule: str | None = None):
+    """y = ReduceScatter_tp(x @ w_rowshard) scattered over the sequence dim."""
+    mode = mode or ctx.fusion.resolve("matmul_rs")
+    schedule = schedule or ctx.fusion.schedule
+    axis, n = ctx.tp_axis, ctx.tp
+    b, s, k = x.shape
+    nout = w.shape[1]
+    dp = ctx.batch_axes if b % ctx.dp == 0 else None
+
+    def local_fn(xl, wl):
+        if mode == "bulk":
+            y = xl @ wl
+            return lax.psum_scatter(y, axis, scatter_dimension=1, tiled=True)
+        s_full = xl.shape[1]
+        chunk = s_full // n
+
+        def partial(c):
+            xi = lax.dynamic_slice_in_dim(xl, c * chunk, chunk, axis=1)
+            return xi @ wl
+
+        return ring_reduce_scatter_compute(partial, axis, schedule=schedule)
+
+    return jax.shard_map(
+        local_fn,
+        mesh=ctx.mesh,
+        in_specs=(P(dp, None, ctx.tp_axis), P(ctx.tp_axis, None)),
+        out_specs=P(dp, ctx.tp_axis, None),
+        check_vma=False,
+    )(x, w)
+
+
+def allgather_seq(ctx: ParallelContext, x, *, axis_pos: int = 1):
+    """Plain AG of a sequence-sharded activation (layout boundaries)."""
+    b = x.shape[0]
+    dp = ctx.batch_axes if b % ctx.dp == 0 else None
+    in_spec = [dp, None, None]
+    in_spec[axis_pos] = ctx.tp_axis
+    out_spec = [dp, None, None]
+
+    def local_fn(xl):
+        return lax.all_gather(xl, ctx.tp_axis, axis=axis_pos, tiled=True)
+
+    return jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(*in_spec),), out_specs=P(*out_spec), check_vma=False,
+    )(x)

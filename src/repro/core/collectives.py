@@ -1,0 +1,181 @@
+"""Decomposed compute-collective combinators (TPU-adapted paper core).
+
+The paper's GPU kernels issue a non-blocking RDMA PUT per output slice as
+soon as the slice's workgroups finish.  The XLA-level TPU equivalent is a
+chunked loop in which each chunk's collective (a ``collective-permute``
+ring hop or direct offset permute) is issued immediately after that
+chunk's compute, while the loop body continues with the next chunk.  The
+loops are *unrolled* in python so XLA's latency-hiding scheduler can hoist
+``collective-permute-start`` above the following chunk's compute —
+yielding the paper's fine-grained overlap without kernel-boundary sync.
+
+All functions here execute *inside* ``jax.shard_map``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.scheduling import ring_offsets
+
+
+def _ring_perm(n: int, shift: int = 1):
+    return [(j, (j + shift) % n) for j in range(n)]
+
+
+def ring_permute(x, axis_name: str, n: int, shift: int = 1):
+    """ppermute with the payload dtype pinned.
+
+    Without the barrier XLA may hoist a downstream bf16->f32 convert
+    through the permute ("convert of permute == permute of convert"),
+    silently doubling wire bytes; the barrier keeps the narrow dtype on
+    the wire."""
+    return lax.ppermute(lax.optimization_barrier(x), axis_name,
+                        _ring_perm(n, shift))
+
+
+# ---------------------------------------------------------------------------
+# reduce-scatter fused with per-chunk compute (GEMV/GEMM + AllReduce core)
+# ---------------------------------------------------------------------------
+def ring_reduce_scatter_compute(
+    partial_fn: Callable,
+    axis_name: str,
+    *,
+    schedule: str = "comm_aware",
+):
+    """sum_over_ranks(partial_fn(chunk)) -> own rank's reduced chunk.
+
+    ``partial_fn(c)`` returns this rank's *partial* contribution to output
+    chunk ``c`` (``c`` is a traced index).  The comm-aware schedule is the
+    overlapped ring: the carry destined for rank ``d`` starts at ``d+1``,
+    each hop adds the local partial for the in-flight chunk, and a rank's
+    own chunk is accumulated last — remote data is on the wire while local
+    partials are still being computed (paper Fig. 7b).
+
+    The oblivious schedule computes *all* partials first (natural order)
+    and only then runs the pure ring reduce — communication is exposed at
+    the tail exactly like the paper's communication-oblivious baseline.
+    """
+    n = lax.axis_size(axis_name)
+    d = lax.axis_index(axis_name)
+    if n == 1:
+        return partial_fn(jnp.int32(0))
+
+    if schedule == "comm_aware":
+        acc = partial_fn((d - 1) % n)
+        for i in range(1, n):
+            acc = ring_permute(acc, axis_name, n)
+            acc = acc + partial_fn((d - i - 1) % n)
+        return acc
+
+    if schedule == "oblivious":
+        # All compute up front, then a bare ring reduce-scatter.
+        parts = [partial_fn((d - 1 - i) % n) for i in reversed(range(n))]
+        # parts[j] is the partial for chunk (d - n + j) mod n; the carry
+        # schedule consumes them in reverse creation order so the own
+        # chunk was produced first (local-first, the paper's baseline).
+        acc = parts[-1]  # chunk (d-1)
+        for i in range(1, n):
+            acc = ring_permute(acc, axis_name, n)
+            acc = acc + parts[-(i + 1)]
+        return acc
+
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+# ---------------------------------------------------------------------------
+# all-gather fused with per-chunk consumption (AG + matmul / KV-gather core)
+# ---------------------------------------------------------------------------
+def ring_all_gather_compute(
+    x_local,
+    consume_fn: Callable,
+    axis_name: str,
+    *,
+    combine: str = "place",
+    out_init=None,
+):
+    """Gather ``x_local`` around the ring, applying ``consume_fn`` to each
+    arriving shard immediately (while the next hop is in flight).
+
+    consume_fn(src_index, x_src, acc) -> acc'   (src_index is traced)
+
+    combine="place" is a convenience: consume_fn returns (y_src, position
+    placer handled by caller through acc).  The local shard is consumed
+    first — it is available at t=0, so its compute hides the first hop.
+    """
+    n = lax.axis_size(axis_name)
+    d = lax.axis_index(axis_name)
+    acc = consume_fn(d, x_local, out_init)
+    buf = x_local
+    for i in range(1, n):
+        buf = ring_permute(buf, axis_name, n)
+        acc = consume_fn((d - i) % n, buf, acc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# direct all-to-all fused with per-destination compute (GEMM/embedding + A2A)
+# ---------------------------------------------------------------------------
+def direct_all_to_all_compute(
+    produce_fn: Callable,
+    out_shape_dtype,
+    axis_name: str,
+    *,
+    schedule: str = "comm_aware",
+):
+    """Fused compute + All-to-All via per-destination direct sends.
+
+    ``produce_fn(dest)`` computes the chunk this rank owes rank ``dest``
+    (traced index).  Each chunk is sent with a single offset
+    collective-permute the moment it is ready — the TPU analogue of the
+    paper's per-slice RDMA PUT (one logical point-to-point transaction per
+    destination, data moved in final layout, no post-shuffle).
+
+    Returns ``[n, *chunk_shape]`` stacked by *source* rank.
+
+    comm_aware: farthest destination first, own chunk last (paper's
+    remote-ahead-of-local rule).  oblivious: natural order (Fig. 14
+    baseline).
+    """
+    n = lax.axis_size(axis_name)
+    d = lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + tuple(out_shape_dtype.shape), out_shape_dtype.dtype)
+
+    for off in ring_offsets(n, schedule):
+        dest = (d + off) % n
+        y = produce_fn(dest)
+        if off == 0:
+            recv, src = y, d
+        else:
+            recv = ring_permute(y, axis_name, n, shift=off)
+            src = (d - off) % n
+        out = lax.dynamic_update_slice_in_dim(out, recv[None], src, axis=0)
+    return out
+
+
+def bulk_all_to_all(x, axis_name: str):
+    """Baseline: single All-to-All over leading dim [n, ...] -> [n, ...]."""
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=False)
+
+
+# ---------------------------------------------------------------------------
+# partial-softmax merge (context-sharded decode attention)
+# ---------------------------------------------------------------------------
+def attention_partial_merge(o, m, l, axis_name: str):
+    """Merge flash-attention partials across a KV-sharded axis.
+
+    o: [..., d] unnormalized partial output (sum of exp(s - m) * v)
+    m: [...]    local running max
+    l: [...]    local sum of exp(s - m)
+
+    One tiny psum/pmax pair replaces the paper's ``sliceRdy`` polling: the
+    collective itself is the readiness signal.
+    """
+    m_glob = lax.pmax(lax.stop_gradient(m), axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = lax.psum(l * corr, axis_name)
+    o_glob = lax.psum(o * corr[..., None], axis_name)
+    return o_glob / jnp.maximum(l_glob, 1e-30)[..., None]

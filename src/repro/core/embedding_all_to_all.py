@@ -1,0 +1,106 @@
+"""Fused embedding pooling + All-to-All (paper §III-A, Fig. 6 — DLRM).
+
+DLRM shards embedding tables across the whole device world (table/model
+parallelism) while the top-MLP runs data parallel; the switch between the
+two is an All-to-All of pooled embeddings.  The paper's kernel pools a
+*slice* (a batch-fragment of one table's output) and PUTs it to the
+owning node the moment the slice's workgroups finish, remote slices
+scheduled ahead of local ones.
+
+TPU adaptation: the world is the flattened (dp x tp) axis set; pooling is
+evaluated per-destination batch fragment and shipped with an offset
+collective-permute as soon as it is pooled (direct sends — data arrives
+already in the {local batch, tables x dim} layout the downstream
+interaction op wants, no shuffle kernel).  The Pallas ``embedding_pool``
+kernel covers the compute hot-spot; "kernel" mode routes pooling through
+it inside the same fused loop.
+
+Shapes (global):
+  indices: [B, T_global, L] int32  — L lookups per bag (pooling size)
+  offsets/weights omitted: fixed-L bags, mean-pooled (matches the DLRM
+  data generator used by the paper's evaluation)
+  tables:  [T_global, V, D]        — T sharded over the world axis
+  output:  [B, T_global, D]        — B sharded over the world axis
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
+from repro.parallel.sharding import ParallelContext
+
+
+def _pool(table, idx, kernel: bool):
+    """Mean-pool rows of one table.  idx: [b, L] -> [b, D]."""
+    if kernel:
+        from repro.kernels.embedding_pool.ops import embedding_pool
+
+        return embedding_pool(table, idx)
+    return jnp.take(table, idx, axis=0).mean(axis=1)
+
+
+def embedding_all_to_all(
+    ctx: ParallelContext,
+    indices,
+    tables,
+    *,
+    mode: str | None = None,
+    schedule: str | None = None,
+):
+    """Pooled embeddings exchanged table-parallel -> data-parallel.
+
+    Every world rank holds T_local tables and the categorical indices for
+    the *global* batch on its tables; it pools all of them and owes each
+    peer the fragment of pooled vectors for that peer's batch shard.
+    Returns [B, T_global, D] with B sharded over the world.
+    """
+    mode = mode or ctx.fusion.resolve("embed_a2a")
+    schedule = schedule or ctx.fusion.schedule
+    world_axes = tuple(ctx.dp_axes) + (ctx.tp_axis,)
+    n = ctx.world
+    B, T, L = indices.shape
+    _, V, D = tables.shape
+    use_kernel = mode == "kernel"
+
+    def local_fn(idx_l, tab_l):
+        # idx_l: [B, T_local, L] (full batch), tab_l: [T_local, V, D]
+        t_local = tab_l.shape[0]
+        b_chunk = B // n
+
+        pool_tables = jax.vmap(
+            lambda tab, ix: _pool(tab, ix, use_kernel), in_axes=(0, 1), out_axes=1
+        )  # ([T_local,V,D], [b,T_local,L]) -> [b, T_local, D]
+
+        def pool_fragment(dest):
+            # pooled embeddings of this rank's tables for dest's batch rows
+            frag = lax.dynamic_slice_in_dim(idx_l, dest * b_chunk, b_chunk, axis=0)
+            return pool_tables(tab_l, frag)  # [b_chunk, T_local, D]
+
+        if mode == "bulk":
+            # pool everything, then one All-to-All (RCCL-style baseline)
+            full = jnp.concatenate(
+                [pool_fragment(jnp.int32(c)) for c in range(n)], axis=0
+            )  # [B, T_local, D]
+            stacked = full.reshape((n, b_chunk, t_local, D))
+            recv = bulk_all_to_all(stacked, _FLAT_AXIS)
+        else:
+            recv = direct_all_to_all_compute(
+                pool_fragment,
+                jax.ShapeDtypeStruct((b_chunk, t_local, D), tables.dtype),
+                _FLAT_AXIS,
+                schedule=schedule,
+            )
+        # recv: [n_src, b_chunk, T_local, D] -> [b_chunk, T_global, D]
+        return jnp.moveaxis(recv, 0, 1).reshape((b_chunk, n * t_local, D))
+
+    # Flatten the whole mesh into one logical world axis for the exchange.
+    _FLAT_AXIS = world_axes
+    return jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(None, world_axes, None), P(world_axes, None, None)),
+        out_specs=P(world_axes, None, None),
+        check_vma=False,
+    )(indices, tables)

@@ -1,0 +1,36 @@
+"""Public API for the fused computation-collective operators.
+
+This is the "PyTorch custom operator" integration level of the paper:
+model code calls these ops and a single ``FusionConfig`` switch flips the
+whole model between bulk-synchronous baseline, fused-decomposed (paper),
+and Pallas device-initiated kernels — nothing else in the model changes.
+"""
+from repro.core.matmul_allreduce import matmul_allreduce
+from repro.core.allgather_matmul import allgather_matmul, matmul_reducescatter, allgather_seq
+from repro.core.moe_all_to_all import moe_dispatch_all_to_all, fused_expert_ffn_combine
+from repro.core.embedding_all_to_all import embedding_all_to_all
+from repro.core.loss import sharded_cross_entropy
+from repro.core.collectives import (
+    ring_reduce_scatter_compute,
+    ring_all_gather_compute,
+    direct_all_to_all_compute,
+    attention_partial_merge,
+)
+from repro.parallel.sharding import FusionConfig, ParallelContext
+
+__all__ = [
+    "FusionConfig",
+    "ParallelContext",
+    "matmul_allreduce",
+    "allgather_matmul",
+    "matmul_reducescatter",
+    "allgather_seq",
+    "moe_dispatch_all_to_all",
+    "fused_expert_ffn_combine",
+    "embedding_all_to_all",
+    "sharded_cross_entropy",
+    "ring_reduce_scatter_compute",
+    "ring_all_gather_compute",
+    "direct_all_to_all_compute",
+    "attention_partial_merge",
+]

@@ -1,0 +1,216 @@
+"""Vocab-sharded cross-entropy with fused AllGather x logits-matmul and an
+analytic ring backward (custom VJP).
+
+Forward: activations arrive sequence-sharded over tp, the embedding table
+vocab-sharded.  The ring that gathers sequence chunks is fused with the
+logits matmul AND the softmax statistics: each arriving chunk is reduced
+to per-token (max, sumexp, label-logit) stats immediately — the full
+[tokens, vocab] logits tensor never exists.
+
+Backward: autodiff through the unrolled ring would keep every chunk's f32
+logits alive simultaneously (~tokens*V_loc*4 bytes per rank).  The custom
+VJP instead *recomputes* one chunk's logits at a time: the x-chunk ring is
+replayed, and each chunk's dx accumulator travels around the ring *with*
+its chunk, collecting every rank's vocab-slice contribution — after a
+full loop it lands back on the owning rank fully reduced.  Peak backward
+memory is one chunk's logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import ring_permute
+from repro.parallel.sharding import ParallelContext
+
+NEG = -1e30
+
+
+def _perm(n, shift=1):
+    return [(j, (j + shift) % n) for j in range(n)]
+
+
+def _cap_fwd(lg, cap):
+    if not cap:
+        return lg
+    return jnp.tanh(lg / cap) * cap
+
+
+def _cap_bwd(lg_raw, cap):
+    """d capped / d raw."""
+    if not cap:
+        return 1.0
+    t = jnp.tanh(lg_raw / cap)
+    return 1.0 - t * t
+
+
+def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
+                   logit_softcap, n_world: int):
+    """Builds the per-rank CE with custom VJP (runs inside shard_map)."""
+
+    @jax.custom_vjp
+    def local_ce(xl, el, yl):
+        loss, _ = _fwd(xl, el, yl)
+        return loss
+
+    def _stats_chunk(xc, yc, el, v_off, v_loc):
+        lg = _cap_fwd((xc @ el.T).astype(jnp.float32), logit_softcap)
+        m = lg.max(axis=-1)
+        se = jnp.exp(lg - m[..., None]).sum(-1)
+        rel = yc - v_off
+        ok = (rel >= 0) & (rel < v_loc)
+        picked = jnp.take_along_axis(
+            lg, jnp.clip(rel, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+        return m, se, jnp.where(ok, picked, 0.0)
+
+    def _fwd(xl, el, yl):
+        d = lax.axis_index(axis)
+        v_loc = el.shape[0]
+        v_off = d * v_loc
+        b = xl.shape[0]
+
+        if seq_sharded:
+            s_loc = xl.shape[1]
+            S = s_loc * n
+            m_all = jnp.full((b, S), NEG, jnp.float32)
+            se_all = jnp.zeros((b, S), jnp.float32)
+            lab_all = jnp.zeros((b, S), jnp.float32)
+
+            def place(buf, val, src):
+                return lax.dynamic_update_slice_in_dim(buf, val, src * s_loc,
+                                                       axis=1)
+
+            buf = xl
+            for i in range(n):
+                src = (d - i) % n
+                yc = lax.dynamic_slice_in_dim(yl, src * s_loc, s_loc, axis=1)
+                m, se, lab = _stats_chunk(buf, yc, el, v_off, v_loc)
+                m_all = place(m_all, m, src)
+                se_all = place(se_all, se, src)
+                lab_all = place(lab_all, lab, src)
+                if i < n - 1:
+                    buf = ring_permute(buf, axis, n)
+        else:
+            m_all, se_all, lab_all = _stats_chunk(xl, yl, el, v_off, v_loc)
+
+        m_g = lax.pmax(m_all, axis)
+        se_g = lax.psum(se_all * jnp.exp(m_all - m_g), axis)
+        lab_g = lax.psum(lab_all, axis)
+        nll = jnp.log(se_g) + m_g - lab_g
+        loss = nll.mean()
+        if dp is not None:
+            loss = lax.pmean(loss, dp)
+        return loss[None], (m_g, se_g)
+
+    def fwd_rule(xl, el, yl):
+        loss, (m_g, se_g) = _fwd(xl, el, yl)
+        return loss, (xl, el, yl, m_g, se_g)
+
+    def bwd_rule(res, g):
+        xl, el, yl, m_g, se_g = res
+        d = lax.axis_index(axis)
+        v_loc = el.shape[0]
+        v_off = d * v_loc
+        b = xl.shape[0]
+        s_loc = xl.shape[1]
+        n_tok = b * s_loc * (n if seq_sharded else 1) * n_dp
+        # check_vma=False splits a replicated output's cotangent evenly
+        # across ranks; undo it (validated numerically in tests)
+        gt = (g[0] * n_world / n_tok).astype(jnp.float32)
+
+        def chunk_grads(xc, yc, mc, sec):
+            """(d logits_raw) for one chunk vs my vocab slice -> dx, dEl.
+
+            d logits = gt * (p - onehot(label)).  The onehot term is never
+            materialized at [tokens, V]: its dx contribution is a row
+            gather of el and its dEl contribution a small scatter-add —
+            a [tokens, V] scatter would dominate backward memory."""
+            raw = (xc @ el.T).astype(jnp.float32)
+            lg = _cap_fwd(raw, logit_softcap)
+            p = jnp.exp(lg - mc[..., None]) / sec[..., None]
+            draw = (p * _cap_bwd(raw, logit_softcap) * gt).astype(xc.dtype)
+            dxc = (draw @ el).astype(jnp.float32)               # [b,s,D]
+            dEl = jnp.einsum("bsv,bsd->vd", draw,
+                             xc.astype(draw.dtype)).astype(jnp.float32)
+            # label (onehot) corrections
+            rel = yc - v_off
+            ok = (rel >= 0) & (rel < v_loc)
+            clip = jnp.clip(rel, 0, v_loc - 1)
+            if logit_softcap:
+                raw_lab = jnp.take_along_axis(raw, clip[..., None], -1)[..., 0]
+                cb_lab = _cap_bwd(raw_lab, logit_softcap)
+            else:
+                cb_lab = 1.0
+            w_lab = jnp.where(ok, gt * cb_lab, 0.0)             # [b,s]
+            dxc = dxc - w_lab[..., None] * jnp.take(el, clip, axis=0
+                                                    ).astype(jnp.float32)
+            dEl = dEl.at[clip.reshape(-1)].add(
+                -(w_lab[..., None] * xc.astype(jnp.float32)
+                  ).reshape(-1, xc.shape[-1]))
+            return dxc, dEl
+
+        if not seq_sharded:
+            dxc, dEl = chunk_grads(xl, yl, m_g, se_g)
+            return dxc.astype(xl.dtype), dEl.astype(el.dtype), None
+
+        # ring replay: each chunk's dx accumulator travels with the chunk.
+        # The accumulator rides in the operand dtype (bf16 wire for bf16
+        # models — halves ring bytes; f32 models keep f32 exactness).
+        dEl_acc = jnp.zeros(el.shape, jnp.float32)
+        xbuf = xl
+        src = d
+        yc = lax.dynamic_slice_in_dim(yl, src * s_loc, s_loc, axis=1)
+        mc = lax.dynamic_slice_in_dim(m_g, src * s_loc, s_loc, axis=1)
+        sec = lax.dynamic_slice_in_dim(se_g, src * s_loc, s_loc, axis=1)
+        dxc, dEl = chunk_grads(xbuf, yc, mc, sec)
+        dxbuf = dxc.astype(xl.dtype)
+        dEl_acc += dEl
+        for i in range(1, n):
+            xbuf = ring_permute(xbuf, axis, n)
+            dxbuf = ring_permute(dxbuf, axis, n)
+            src = (d - i) % n
+            yc = lax.dynamic_slice_in_dim(yl, src * s_loc, s_loc, axis=1)
+            mc = lax.dynamic_slice_in_dim(m_g, src * s_loc, s_loc, axis=1)
+            sec = lax.dynamic_slice_in_dim(se_g, src * s_loc, s_loc, axis=1)
+            dxc, dEl = chunk_grads(xbuf, yc, mc, sec)
+            dxbuf = (dxbuf.astype(jnp.float32) + dxc).astype(xl.dtype)
+            dEl_acc += dEl
+        # one final hop returns each chunk's accumulated dx to its owner
+        dxl = ring_permute(dxbuf, axis, n)
+        return dxl.astype(xl.dtype), dEl_acc.astype(el.dtype), None
+
+    local_ce.defvjp(fwd_rule, bwd_rule)
+    return local_ce
+
+
+def sharded_cross_entropy(
+    ctx: ParallelContext,
+    x,          # [B, S, D] global, S sharded over tp (or replicated if small)
+    embed,      # [V, D] global, V sharded over tp
+    labels,     # [B, S] int32 global
+    *,
+    mode: str | None = None,
+    logit_softcap: float | None = None,
+):
+    """Mean token cross-entropy; logits stay chunk-local in fwd AND bwd."""
+    axis, n = ctx.tp_axis, ctx.tp
+    B, S, D = x.shape
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    n_dp = ctx.dp if dp is not None else 1
+    seq_sharded = S % n == 0 and S >= n
+
+    local_ce = _make_local_ce(axis, n, dp, n_dp, seq_sharded, logit_softcap,
+                              ctx.mesh.size)
+
+    x_spec = P(dp, axis, None) if seq_sharded else P(dp, None, None)
+    loss = jax.shard_map(
+        local_ce, mesh=ctx.mesh,
+        in_specs=(x_spec, P(axis, None), P(dp, None)),
+        out_specs=P(None),
+        check_vma=False,
+    )(x, embed, labels)
+    return loss.mean()

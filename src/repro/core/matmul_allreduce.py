@@ -1,0 +1,116 @@
+"""Fused GEMV/GEMM + AllReduce (paper §III-B, Fig. 7).
+
+Megatron row-parallel layer: ``x`` carries the contraction dim sharded
+over TP, ``w`` is row-sharded; every rank produces a *partial* full-size
+output that must be summed across TP ranks.
+
+  bulk   : y = psum(x_local @ w_local)           (RCCL-baseline analogue)
+  fused  : the output is chunked; a matmul-interleaved ring reduce-scatter
+           accumulates each chunk while other chunks are still being
+           computed, followed by an all-gather of reduced chunks — the
+           two phases of the paper's direct AllReduce, with phase one
+           fused into the GEMV/GEMM.  Comm-aware scheduling: a rank's own
+           output chunk is computed last (Fig. 7b).
+  kernel : Pallas device-initiated kernel (remote DMA writes straight
+           into the peer's reduction buffer — zero-copy scale-up path).
+
+Chunking dimension is chosen automatically: rows (flattened leading dims)
+when they divide the ring, else output columns — decode-shape GEMV
+(B·1 rows) always chunks over columns, matching the paper's output-tile
+granularity for matrix-vector work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import ring_reduce_scatter_compute
+from repro.parallel.sharding import ParallelContext
+
+
+def _bulk(xl, wl, axis):
+    return lax.psum(xl @ wl, axis)
+
+
+def _fused_rows(xl, wl, axis, schedule):
+    n = lax.axis_size(axis)
+    (rows, k), nout = xl.shape, wl.shape[1]
+    chunk = rows // n
+
+    def partial(c):
+        xi = lax.dynamic_slice_in_dim(xl, c * chunk, chunk, axis=0)
+        return xi @ wl
+
+    mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule)
+    return lax.all_gather(mine, axis, axis=0, tiled=True)
+
+
+def _fused_cols(xl, wl, axis, schedule):
+    n = lax.axis_size(axis)
+    nout = wl.shape[1]
+    chunk = nout // n
+
+    def partial(c):
+        wi = lax.dynamic_slice_in_dim(wl, c * chunk, chunk, axis=1)
+        return xl @ wi
+
+    mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule)
+    return lax.all_gather(mine, axis, axis=1, tiled=True)
+
+
+def matmul_allreduce(
+    ctx: ParallelContext,
+    x,
+    w,
+    *,
+    mode: str | None = None,
+    schedule: str | None = None,
+):
+    """y = AllReduce_tp(x @ w) for row-parallel ``w``.
+
+    x: [..., K] global, K sharded over tp.   w: [K, N] global, row-sharded.
+    Returns [..., N] replicated over tp (sharded over dp on leading dims).
+    """
+    mode = mode or ctx.fusion.resolve("matmul_rs")
+    schedule = schedule or ctx.fusion.schedule
+    axis = ctx.tp_axis
+    n = ctx.tp
+
+    lead = x.shape[:-1]
+    k, nout = w.shape
+    xf = x.reshape((-1, x.shape[-1]))
+    rows = xf.shape[0]
+    # batch=1 decode shapes cannot shard rows over dp -> replicate there
+    dp = ctx.batch_axes if rows % ctx.dp == 0 else None
+    rows_local = rows // (ctx.dp if dp is not None else 1)
+    use_rows = rows_local % n == 0 and rows_local >= n and mode != "bulk"
+
+    if mode == "kernel":
+        # Device-initiated Pallas path (scale-up zero-copy); the kernel is
+        # registered lazily to avoid import cycles.
+        from repro.kernels.fused_gemv_allreduce.ops import fused_matmul_allreduce_kernel_available
+
+        if not fused_matmul_allreduce_kernel_available(ctx.mesh):
+            mode = "fused"
+
+    def local_fn(xl, wl):
+        if mode == "bulk":
+            return _bulk(xl, wl, axis)
+        if mode == "kernel":
+            from repro.kernels.fused_gemv_allreduce.ops import fused_matmul_allreduce_shard
+
+            return fused_matmul_allreduce_shard(xl, wl, axis)
+        if use_rows:
+            return _fused_rows(xl, wl, axis, schedule)
+        return _fused_cols(xl, wl, axis, schedule)
+
+    yf = jax.shard_map(
+        local_fn,
+        mesh=ctx.mesh,
+        in_specs=(P(dp, ctx.tp_axis), P(ctx.tp_axis, None)),
+        out_specs=P(dp, None),
+        check_vma=False,
+    )(xf, w)
+    return yf.reshape(lead + (nout,))

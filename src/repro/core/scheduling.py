@@ -1,0 +1,51 @@
+"""Communication-aware chunk scheduling (paper §III, Fig. 6b/7b/14).
+
+The paper schedules logical workgroups that produce *remote* slices ahead
+of those producing locally-consumed slices, so remote wire time hides
+behind local compute.  On TPU the unit of scheduling is the chunk-loop
+iteration order inside a fused op; these helpers produce that order.
+
+All orders are python-level (static) permutations of ring offsets, so
+they are free at runtime — the schedule is baked into the lowered HLO.
+"""
+from __future__ import annotations
+
+
+def ring_offsets(world: int, schedule: str = "comm_aware") -> list[int]:
+    """Order in which a device visits destination offsets 0..world-1.
+
+    Offset 0 is the locally-consumed chunk; offsets 1..world-1 are remote.
+
+    comm_aware: farthest-first remote chunks, local chunk last.  Farthest
+      first maximizes the time available to hide the longest wire path
+      (multi-hop on a torus) and matches the paper's remote-ahead-of-local
+      rule.
+    oblivious: natural order starting at the local chunk (the paper's
+      baseline scheduling, reproduced for the Fig. 14 skew benchmark).
+    """
+    if schedule == "comm_aware":
+        return [w for w in range(world - 1, 0, -1)] + [0]
+    if schedule == "oblivious":
+        return list(range(world))
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def reduce_ring_chunk_order(world: int, schedule: str = "comm_aware") -> list[int]:
+    """Chunk index (relative to own rank) computed at each ring step of a
+    reduce-scatter ring.
+
+    In the overlapped reduce-scatter ring, the carry that finally lands on
+    rank ``d`` starts at rank ``d+1``; at ring step ``i`` rank ``d`` adds
+    its partial for chunk ``(d - i - 1) mod world``.  That ordering is
+    inherently comm-aware — the own chunk ``d`` is accumulated *last*
+    (step world-1), i.e. remote contributions are computed and on the wire
+    first.  The oblivious variant accumulates its own chunk first, which
+    exposes the full ring latency at the end (used only as the Fig. 14
+    baseline).
+    """
+    if schedule == "comm_aware":
+        return [-(i + 1) % world for i in range(world)]
+    if schedule == "oblivious":
+        # own chunk first, then ring hops: strictly worse overlap.
+        return [(i) % world for i in range(world)]
+    raise ValueError(f"unknown schedule {schedule!r}")

@@ -1,0 +1,34 @@
+"""Input pipeline: sharded host loading + double-buffered device prefetch.
+
+``prefetch`` keeps N batches in flight (device transfers are async in
+JAX), hiding host->HBM time behind the previous step's compute — the
+same overlap philosophy as the paper, applied at the input edge.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterator
+
+import jax
+
+
+def shard_batch(batch, sharding_tree):
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), batch, sharding_tree)
+
+
+def prefetch(it: Iterator, sharding_tree, depth: int = 2):
+    buf = collections.deque()
+
+    def enqueue(n):
+        for _ in range(n):
+            try:
+                batch = next(it)
+            except StopIteration:
+                return
+            buf.append(shard_batch(batch, sharding_tree))
+
+    enqueue(depth)
+    while buf:
+        yield buf.popleft()
+        enqueue(1)

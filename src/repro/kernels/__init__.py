@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Each kernel package ships three modules:
+  kernel.py - pl.pallas_call body with explicit BlockSpec VMEM tiling
+  ops.py    - jit'd public wrapper (shape checks, dtype policy, vmap rules)
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+``interpret=True`` (CPU) is used for validation; on TPU the same calls
+lower to Mosaic.  The fused_* kernels use device-initiated remote DMA
+(pltpu.make_async_remote_copy) — the TPU analogue of the paper's
+GPU-initiated RDMA PUTs.
+"""
+
+
+def interpret_mode() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,1 @@
+from repro.kernels.embedding_pool.ops import embedding_pool  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the embedding-pool kernel."""
+import jax.numpy as jnp
+
+
+def embedding_pool_ref(table, idx):
+    return jnp.take(table, idx, axis=0).mean(axis=1).astype(table.dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale, causal=True):
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq = q.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sq), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

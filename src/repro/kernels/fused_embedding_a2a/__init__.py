@@ -1,0 +1,4 @@
+from repro.kernels.fused_embedding_a2a.ops import (  # noqa: F401
+    fused_embedding_a2a,
+    fused_embedding_a2a_kernel_available,
+)

@@ -1,0 +1,145 @@
+"""Device-initiated fused embedding pooling + All-to-All (paper §III-A,
+Fig. 6 — the scale-out flagship).
+
+One Pallas kernel per chip pools its local tables' bags AND communicates
+each destination's batch fragment the moment the fragment's last bag
+completes — the TPU analogue of the paper's persistent HIP kernel with
+ROC_SHMEM PUTs:
+
+* grid = (destination, batch row, table); the destination axis iterates
+  in communication-aware order (farthest peer first, the local fragment
+  last — paper Fig. 6b);
+* embedding rows are fetched by scalar-prefetched indices driving the
+  table BlockSpec (one row DMA per lookup — the TPU gather idiom);
+* a fragment accumulates in VMEM; on its last bag it is PUT directly
+  into the *destination's output buffer* at this source's table columns
+  (zero-copy: the data lands in the layout the interaction op consumes,
+  no shuffle kernel — the paper's "no explicit rearrangement" property);
+* DMA completion semaphores replace WG_Done/sliceRdy flags; the kernel
+  exits after its n-1 inbound fragments have landed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, idx_ref, row_ref, out_ref, frag_ref, send_sem,
+            recv_sem, *, n_dev, b_loc, t_loc, L, comm_aware, id_style,
+            axis_name):
+    my = ids_ref[0]
+    i, b, t, l = (pl.program_id(k) for k in range(4))
+    # comm-aware destination order = [n-1, ..., 1, 0] (farthest first,
+    # local last) -- pure arithmetic in the grid step index
+    off = (n_dev - 1 - i) if comm_aware else i
+    dest = lax.rem(my + off, n_dev)
+
+    def dev_id(d):
+        if id_style == "mesh":
+            return {axis_name: d}, pltpu.DeviceIdType.MESH
+        return d, pltpu.DeviceIdType.LOGICAL
+
+    @pl.when(l == 0)
+    def _():
+        frag_ref[b, t] = jnp.zeros_like(frag_ref[b, t])
+
+    frag_ref[b, t] += row_ref[0, 0].astype(jnp.float32)
+
+    last_bag = (l == L - 1)
+
+    @pl.when(last_bag)
+    def _():
+        frag_ref[b, t] = frag_ref[b, t] / L
+
+    frag_done = last_bag & (b == b_loc - 1) & (t == t_loc - 1)
+
+    @pl.when(frag_done & (dest != my))
+    def _():
+        # PUT the fragment straight into dest's output at MY table columns
+        did, dt = dev_id(dest)
+        pltpu.make_async_remote_copy(
+            src_ref=frag_ref,
+            dst_ref=out_ref.at[:, pl.ds(my * t_loc, t_loc)],
+            send_sem=send_sem,
+            recv_sem=recv_sem,
+            device_id=did,
+            device_id_type=dt,
+        ).start()
+
+    @pl.when(frag_done & (dest == my))
+    def _():
+        # local fragment: plain copy into our own output slice
+        out_ref[:, pl.ds(my * t_loc, t_loc)] = frag_ref[...].astype(out_ref.dtype)
+
+    # final grid step: drain sends, wait for all inbound fragments
+    is_last_step = (i == n_dev - 1) & frag_done
+
+    @pl.when(is_last_step)
+    def _():
+        wait = pltpu.make_async_remote_copy(
+            src_ref=frag_ref,
+            dst_ref=out_ref.at[:, pl.ds(my * t_loc, t_loc)],
+            send_sem=send_sem,
+            recv_sem=recv_sem,
+            device_id=dev_id(my)[0],
+            device_id_type=dev_id(my)[1],
+        )
+        for _ in range(n_dev - 1):
+            wait.wait_send()
+            wait.wait_recv()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_dev", "L", "comm_aware",
+                                    "collective_id", "interpret",
+                                    "id_style", "axis_name"))
+def fused_embedding_a2a_pallas(tables, idx, my, *, n_dev, L, axis_name,
+                               comm_aware=True, collective_id=9,
+                               interpret=True, id_style=None):
+    """tables: [T_loc, V, D]; idx: [B_global, T_loc, L] int32.
+
+    Returns [B_loc, n_dev * T_loc, D]: this device's batch fragment of
+    the pooled embeddings of ALL devices' tables, fully exchanged.
+    """
+    if id_style is None:
+        id_style = "logical" if interpret else "mesh"
+    t_loc, v, d = tables.shape
+    B, _, _ = idx.shape
+    b_loc = B // n_dev
+    kernel = functools.partial(_kernel, n_dev=n_dev, b_loc=b_loc,
+                               t_loc=t_loc, L=L, comm_aware=comm_aware,
+                               id_style=id_style, axis_name=axis_name)
+
+    def table_index(i, b, t, l, ids_ref, idx_ref):
+        off = (n_dev - 1 - i) if comm_aware else i
+        dest = (ids_ref[0] + off) % n_dev
+        gb = dest * b_loc + b
+        return (t, idx_ref[gb, t, l], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_dev, b_loc, t_loc, L),
+        in_specs=[pl.BlockSpec((1, 1, d), table_index)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((b_loc, t_loc, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    ids = jnp.stack([my.astype(jnp.int32)])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b_loc, n_dev * t_loc, d),
+                                       tables.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",) * 4,
+            collective_id=collective_id),
+        interpret=interpret,
+    )(ids, idx, tables)

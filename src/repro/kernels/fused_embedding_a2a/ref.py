@@ -1,0 +1,24 @@
+"""Oracle: pool all local tables for the global batch, exchange fragments."""
+import jax.numpy as jnp
+
+
+def fused_embedding_a2a_ref(all_tables, idx):
+    """Global semantics given every device's shards.
+
+    all_tables: [n, T_loc, V, D]; idx: [n, B, T_loc, L] (per source device)
+    -> [n, B_loc, n*T_loc, D] per destination device."""
+    n, t_loc, v, d = all_tables.shape
+    B = idx.shape[1]
+    b_loc = B // n
+    pooled = jnp.stack([
+        jnp.take(all_tables[s].reshape(t_loc * v, d),
+                 (idx[s] + (jnp.arange(t_loc) * v)[None, :, None]
+                  ).reshape(B, t_loc, -1),
+                 axis=0).reshape(B, t_loc, -1, d).mean(axis=2)
+        for s in range(n)
+    ])  # [n_src, B, T_loc, D]
+    outs = []
+    for dst in range(n):
+        frag = pooled[:, dst * b_loc:(dst + 1) * b_loc]   # [n_src, b_loc, T_loc, D]
+        outs.append(jnp.moveaxis(frag, 0, 1).reshape(b_loc, n * t_loc, d))
+    return jnp.stack(outs)

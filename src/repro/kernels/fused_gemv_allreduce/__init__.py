@@ -1,0 +1,5 @@
+from repro.kernels.fused_gemv_allreduce.ops import (  # noqa: F401
+    fused_matmul_allreduce_kernel_available,
+    fused_matmul_allreduce_shard,
+    fused_matmul_allreduce,
+)

@@ -1,0 +1,21 @@
+"""Oracle for the fused GEMV/GEMM+AllReduce kernel.
+
+Per-shard semantics: every ring rank holds x_r [B, K_loc], w_r [K_loc, N];
+the fused kernel must return sum_r x_r @ w_r on every rank.  The oracle
+computes that with plain jnp (given the gathered shards) and, under
+shard_map, with lax.psum.
+"""
+import jax.numpy as jnp
+from jax import lax
+
+
+def fused_matmul_allreduce_ref_global(x_full, w_full):
+    """x_full: [B, K_global]; w_full: [K_global, N] -> [B, N]."""
+    return jnp.dot(x_full, w_full, preferred_element_type=jnp.float32
+                   ).astype(x_full.dtype)
+
+
+def fused_matmul_allreduce_ref_shard(xl, wl, axis_name):
+    """Inside shard_map: bulk-synchronous baseline (matmul then psum)."""
+    return lax.psum(jnp.dot(xl, wl, preferred_element_type=jnp.float32
+                            ).astype(xl.dtype), axis_name)

@@ -1,0 +1,1 @@
+from repro.kernels.gemm.ops import gemm  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.gemv.ops import gemv  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the GEMV kernel."""
+import jax.numpy as jnp
+
+
+def gemv_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

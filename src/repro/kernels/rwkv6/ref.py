@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the WKV6 kernel: plain per-step recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """r,k,v,lw: [BH, T, N]; u: [BH, 1, N] -> o [BH, T, N] f32."""
+    w = jnp.exp(lw.astype(jnp.float32))
+    bh, t, n = r.shape
+
+    def step(S, xs):
+        rr, kk, vv, ww = xs
+        kv = jnp.einsum("bn,bm->bnm", kk, vv)
+        o = jnp.einsum("bn,bnm->bm", rr, S + u[:, 0][..., None] * kv)
+        return ww[..., None] * S + kv, o
+
+    S0 = jnp.zeros((bh, n, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    _, o = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(o, 0, 1)

@@ -1,0 +1,54 @@
+"""Multi-host initialization for real TPU pods.
+
+On a v5e pod slice every host runs the same binary;
+``jax.distributed.initialize()`` wires the hosts together (coordinator
+from the TPU metadata on GCP, or explicit addresses elsewhere).  After
+init, ``jax.devices()`` spans the slice and `make_production_mesh()`
+builds the global mesh exactly as the dry-run proved it.
+"""
+from __future__ import annotations
+
+import logging
+import os
+
+import jax
+
+log = logging.getLogger("repro.launch")
+
+
+def initialize_distributed(coordinator: str | None = None,
+                           num_processes: int | None = None,
+                           process_id: int | None = None):
+    """Idempotent multi-host init.
+
+    On GCP TPU VMs all arguments are discovered from the metadata server;
+    elsewhere pass coordinator ("host:port"), num_processes, process_id
+    (or set JAX_COORDINATOR_ADDRESS / JAX_NUM_PROCESSES / JAX_PROCESS_ID).
+    """
+    if jax.process_count() > 1:
+        return  # already initialized
+    kwargs = {}
+    coordinator = coordinator or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if coordinator:
+        kwargs = dict(
+            coordinator_address=coordinator,
+            num_processes=num_processes or int(os.environ["JAX_NUM_PROCESSES"]),
+            process_id=process_id or int(os.environ["JAX_PROCESS_ID"]),
+        )
+    try:
+        jax.distributed.initialize(**kwargs)
+        log.info("distributed init: process %d/%d, %d devices (%d local)",
+                 jax.process_index(), jax.process_count(),
+                 len(jax.devices()), len(jax.local_devices()))
+    except Exception as e:  # single-host dev boxes
+        log.info("single-host mode (%s)", e)
+
+
+def assert_production_topology(multi_pod: bool = False):
+    want = 512 if multi_pod else 256
+    have = len(jax.devices())
+    if have != want:
+        raise RuntimeError(
+            f"expected {want} chips for the "
+            f"{'multi-pod' if multi_pod else 'single-pod'} mesh, found "
+            f"{have}; adjust --mesh or the slice size")

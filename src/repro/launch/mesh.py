@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model);
+multi-pod: 2x16x16 = 512 chips (pod, data, model) — the ``pod`` axis
+composes with ``data`` into the DP/FSDP dimension everywhere, so the
+same model code runs on both meshes and the multi-pod dry-run proves the
+pod axis shards (its collectives cross the DCN boundary in the HLO).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.sharding import FusionConfig, ParallelContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_context(*, multi_pod: bool = False,
+                 fusion: FusionConfig | None = None) -> ParallelContext:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return ParallelContext.from_mesh(mesh, fusion=fusion)
+
+
+def make_host_mesh(shape=None, axes=("data", "model"),
+                   fusion: FusionConfig | None = None) -> ParallelContext:
+    """Small mesh over whatever devices exist (tests/examples on CPU)."""
+    n = len(jax.devices())
+    if shape is None:
+        model = min(4, n)
+        shape = (n // model, model)
+    mesh = jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return ParallelContext.from_mesh(mesh, fusion=fusion)

@@ -1,0 +1,353 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Terms (per device, seconds):
+  compute    = HLO_FLOPs / peak_FLOPs            (cost_analysis is per-device)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+collective_bytes is not in cost_analysis; it is parsed from the optimized
+HLO by summing *operand* sizes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute ops (async -start forms included).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?)([a-z0-9]+\[[0-9,]*\])"          # result (or first tuple elt)
+    r".{0,120}?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+)
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _nbytes(type_str: str) -> int:
+    m = _TYPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind (operand-size convention)."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        is_tuple, rtype, kind, start = m.group(1) == "(", m.group(2), m.group(3), m.group(4)
+        if start == "-done":
+            continue  # counted at -start
+        size = _nbytes(rtype)
+        g = _group_size(line)
+        if kind == "all-gather" and not (start == "-start" and is_tuple):
+            # sync form: result is the gathered tensor; operand = result/g
+            size = size // max(g, 1)
+        if kind == "reduce-scatter":
+            # result is the scattered tensor; operand = result*g
+            if not (start == "-start" and is_tuple):
+                size = size * g
+        out[kind] = out.get(kind, 0) + float(size)
+        count[kind] = count.get(kind, 0) + 1
+    out["_counts"] = count
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recursive HLO cost recount.
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE, so scan-over-layers
+# programs under-report flops/bytes/collective-bytes by ~n_layers.  We
+# re-derive them from the optimized HLO text: per computation we sum dot
+# flops (2 * prod(result) * prod(contracted)), materialized bytes
+# (result sizes of top-level instructions, x2 for write+read), and
+# collective operand bytes; the call graph is walked with while bodies
+# multiplied by their known_trip_count.
+# ---------------------------------------------------------------------------
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_HEAD_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_SCALAR_TYPE_RE = re.compile(r"^([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_OP_AFTER_TYPE_RE = re.compile(r"^\s*([a-z][a-z0-9\-]*)\(")
+_CALLEE_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+
+
+def _parse_instr(line: str):
+    """-> (name, result_type_str, op, rest_after_op) or None."""
+    m = _INSTR_HEAD_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rtype, tail = rest[: i + 1], rest[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        mt = _SCALAR_TYPE_RE.match(rest)
+        if not mt:
+            return None
+        rtype, tail = mt.group(1), rest[mt.end():]
+    mo = _OP_AFTER_TYPE_RE.match(tail)
+    if not mo:
+        return None
+    return name, rtype, mo.group(1), tail[mo.end() - 1:]
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(type_str: str):
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt = m.group(1)
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dt, dims
+
+
+def _first_tuple_elt(type_str: str) -> str:
+    if type_str.startswith("("):
+        inner = type_str[1:]
+        m = _TYPE_RE.search(inner)
+        return m.group(0) if m else "f32[]"
+    return type_str
+
+
+def hlo_analysis(txt: str) -> dict:
+    """Exact-ish per-device flops / bytes / collective bytes with loop
+    trip-count multipliers."""
+    # --- split into computations -----------------------------------------
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in txt.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # --- per-computation local costs + call edges --------------------------
+    local = {}
+    for name, lines in comps.items():
+        shapes: dict[str, str] = {}
+        flops = 0.0
+        bytes2 = 0.0
+        bytes_f32 = 0.0
+        big: dict[str, float] = {}
+        colls: dict[str, float] = {}
+        coll_counts: dict[str, int] = {}
+        edges: list[tuple[str, float, bool]] = []   # (callee, mult, count_bytes)
+        for line in lines:
+            parsed = _parse_instr(line)
+            if parsed is None:
+                continue
+            iname, rtype, op, tail = parsed
+            shapes[iname] = rtype
+            if op in ("call", "conditional"):
+                for callee in _CALLEE_RE.findall(line):
+                    edges.append((callee, 1.0, True))
+            elif op in ("fusion", "map", "reduce", "scatter", "sort",
+                        "reduce-window", "select-and-scatter"):
+                # bodies are in-register: flops count, bytes don't
+                for callee in _CALLEE_RE.findall(line):
+                    edges.append((callee, 1.0, False))
+            elif op == "while":
+                trip = 1.0
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trip = float(mt.group(1))
+                for callee in _CALLEE_RE.findall(line):
+                    edges.append((callee, trip, True))
+            # bytes: materialized top-level results (~1 write + 1 read);
+            # dynamic-update-slice aliases in place — count the update
+            # operand, not the full buffer
+            if op not in ("parameter", "tuple", "get-tuple-element",
+                          "constant", "bitcast", "while", "call"):
+                bt = _first_tuple_elt(rtype)
+                if op == "dynamic-update-slice":
+                    mo = _OPERAND_RE.search(tail)
+                    names = re.findall(r"%([\w\.\-]+)", mo.group(1)) if mo else []
+                    if len(names) >= 2 and names[1] in shapes:
+                        bt = _first_tuple_elt(shapes[names[1]])
+                nb = 2.0 * _nbytes_layout(bt)
+                bytes2 += nb
+                if bt.startswith("f32"):
+                    bytes_f32 += nb
+                if nb >= 2e6:  # track large contributors for attribution
+                    key = f"{op} {bt.split('{')[0]}"
+                    big[key] = big.get(key, 0.0) + nb
+            if op == "dot":
+                _, rdims = _shape_dims(_first_tuple_elt(rtype))
+                mo = _OPERAND_RE.search(tail)
+                k = 1
+                mc = _CONTRACT_RE.search(line)
+                if mo and mc:
+                    names = re.findall(r"%([\w\.\-]+)", mo.group(1))
+                    cdims = [int(d) for d in mc.group(1).split(",") if d]
+                    if names and names[0] in shapes:
+                        _, ldims = _shape_dims(_first_tuple_elt(shapes[names[0]]))
+                        for d in cdims:
+                            if d < len(ldims):
+                                k *= ldims[d]
+                prod_r = 1
+                for d in rdims:
+                    prod_r *= d
+                flops += 2.0 * prod_r * max(k, 1)
+            for kind in _COLL_KINDS:
+                if op == kind or op == kind + "-start":
+                    bt = _first_tuple_elt(rtype)
+                    size = float(_nbytes_layout(bt))
+                    g = _group_size(line)
+                    if kind == "all-gather" and not op.endswith("-start"):
+                        size = size / max(g, 1)
+                    if kind == "reduce-scatter" and not op.endswith("-start"):
+                        size = size * g
+                    colls[kind] = colls.get(kind, 0.0) + size
+                    coll_counts[kind] = coll_counts.get(kind, 0) + 1
+                    if bt.startswith("f32"):
+                        colls["_f32"] = colls.get("_f32", 0.0) + size
+        local[name] = {"flops": flops, "bytes": bytes2,
+                       "bytes_f32": bytes_f32, "colls": colls,
+                       "counts": coll_counts, "edges": edges, "big": big}
+
+    # --- DFS with multipliers ----------------------------------------------
+    memo: dict[str, dict] = {}
+
+    def total(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        lc = local.get(name)
+        if lc is None:
+            return {"flops": 0.0, "bytes": 0.0, "bytes_f32": 0.0,
+                    "colls": {}, "counts": {}, "big": {}}
+        memo[name] = {"flops": 0.0, "bytes": 0.0, "bytes_f32": 0.0,
+                      "colls": {}, "counts": {}, "big": {}}
+        acc = {"flops": lc["flops"], "bytes": lc["bytes"],
+               "bytes_f32": lc["bytes_f32"],
+               "colls": dict(lc["colls"]), "counts": dict(lc["counts"]),
+               "big": dict(lc["big"])}
+        for callee, mult, count_bytes in lc["edges"]:
+            sub = total(callee)
+            acc["flops"] += mult * sub["flops"]
+            if count_bytes:
+                acc["bytes"] += mult * sub["bytes"]
+                acc["bytes_f32"] += mult * sub["bytes_f32"]
+                for k, v in sub["big"].items():
+                    acc["big"][k] = acc["big"].get(k, 0.0) + mult * v
+            for k, v in sub["colls"].items():
+                acc["colls"][k] = acc["colls"].get(k, 0.0) + mult * v
+            for k, v in sub["counts"].items():
+                acc["counts"][k] = acc["counts"].get(k, 0) + mult * v
+        memo[name] = acc
+        return acc
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "colls": {}, "counts": {},
+                "big": {}}
+    res = total(entry)
+    f32_coll = res["colls"].pop("_f32", 0.0)
+    res["coll_total"] = sum(res["colls"].values())
+    res["coll_f32_bytes"] = f32_coll
+    # XLA CPU legalizes bf16 compute to f32, upcasting collective payloads
+    # that are bf16 in the source and would ride bf16 on TPU; the adjusted
+    # figure halves the f32 share (upper/lower bracket pair).
+    res["coll_total_tpu_adjusted"] = res["coll_total"] - f32_coll * 0.5
+    res["bytes_tpu_adjusted"] = res["bytes"] - res["bytes_f32"] * 0.5
+    res["top_buffers"] = sorted(res.pop("big").items(),
+                                key=lambda kv: -kv[1])[:15]
+    return res
+
+
+def _nbytes_layout(type_str: str) -> int:
+    """bytes of 'bf16[2,3]{1,0}' style type strings."""
+    return _nbytes(type_str)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float) -> dict:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = collective_bytes / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dom[0],
+            "bound_s": dom[1]}
+
+
+def model_flops(bundle, shape_name: str, param_count: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N per token
+    (decode); N = active params for MoE."""
+    from repro.configs.registry import SHAPES, DLRM_SHAPES
+
+    cfg = bundle.config
+    n_active = param_count
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        layers_moe = cfg.n_layers - getattr(cfg, "dense_prefix", 0)
+        expert_total = layers_moe * moe.n_experts * 3 * moe.d_model * moe.d_ff
+        expert_active = layers_moe * (moe.top_k + moe.n_shared_experts) * \
+            3 * moe.d_model * moe.d_ff
+        n_active = param_count - expert_total + expert_active
+    if bundle.family == "dlrm":
+        sh = DLRM_SHAPES[shape_name]
+        dense = sum(a * b for a, b in zip(
+            (cfg.n_dense,) + cfg.bottom_mlp[:-1], cfg.bottom_mlp))
+        n_vec = cfg.n_tables + 1
+        d_int = n_vec * (n_vec - 1) // 2 + cfg.embed_dim
+        dense += sum(a * b for a, b in zip((d_int,) + cfg.top_mlp[:-1], cfg.top_mlp))
+        return 6 * dense * sh["batch"]
+    sh = SHAPES[shape_name]
+    tokens = sh["batch"] * sh["seq"]
+    if sh["kind"] == "train":
+        return 6.0 * n_active * tokens
+    if sh["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh["batch"]  # decode: one token per sequence

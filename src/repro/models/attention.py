@@ -1,0 +1,405 @@
+"""Context-parallel attention with fused KV all-gather (train/prefill) and
+sequence-sharded KV caches with partial-softmax merge (decode).
+
+Sharding scheme (see DESIGN.md §5): activations are sequence-sharded over
+the tp axis; attention keeps *all* heads on every rank (uniform across the
+zoo's awkward head counts) and shards the KV sequence instead.
+
+Train/prefill: rank d owns query chunk d and ring-gathers KV chunks,
+running a flash-attention update on each arriving chunk while the next is
+on the wire — the fused AllGather x attention operator (the paper's
+decomposition applied to the KV gather).  Sliding-window layers
+statically bound the number of ring hops (window/chunk), which the bulk
+AG baseline cannot do.
+
+Decode: the KV cache stays sequence-sharded; every rank computes a flash
+partial over its local slice and one tiny pmax/psum pair merges them
+(replaces the paper's sliceRdy polling with the collective itself).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import attention_partial_merge, ring_permute
+from repro.parallel.sharding import ParallelContext
+
+NEG_INF = -1e30
+
+
+def _flash_update(carry, q5, k, v, mask, scale, cap):
+    """One flash-attention accumulation step (f32 carries).
+
+    carry = (m, l, o): [b,hk,g,sq], [b,hk,g,sq], [b,hk,g,sq,d]
+    q5: [b,sq,hk,g,d]; k,v: [b,sk,hk,d]; mask: [sq,sk] bool.
+    """
+    m, l, o = carry
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k).astype(jnp.float32) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    # additive 2D mask: broadcasts inside the fusion; a select against the
+    # full [b,h,g,q,k] score shape would get materialized + loop-hoisted
+    s = s + jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p.sum(axis=-1)
+    o = o * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return m_new, l, o
+
+
+def _span_flash(q5, k, v, qpos, kpos, carry, *, causal, window, scale, cap,
+                q_block, kv_block):
+    """Accumulate flash carries of q5 against one KV span, blocked so the
+    score matrix never exceeds [b, hk, g, q_block, kv_block]."""
+    b, sq, hk, g, d = q5.shape
+    sk = k.shape[1]
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+
+    def q_step(qi, mlo):
+        m, l, o = mlo
+        qs = lax.dynamic_slice_in_dim(q5, qi * qb, qb, axis=1)
+        qp = lax.dynamic_slice_in_dim(qpos, qi * qb, qb, axis=0)
+        cm = lax.dynamic_slice_in_dim(m, qi * qb, qb, axis=3)
+        cl = lax.dynamic_slice_in_dim(l, qi * qb, qb, axis=3)
+        co = lax.dynamic_slice_in_dim(o, qi * qb, qb, axis=3)
+
+        def kv_step(ki, mlo_q):
+            ks = lax.dynamic_slice_in_dim(k, ki * kb, kb, axis=1)
+            vs = lax.dynamic_slice_in_dim(v, ki * kb, kb, axis=1)
+            kp = lax.dynamic_slice_in_dim(kpos, ki * kb, kb, axis=0)
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            return _flash_update(mlo_q, qs, ks, vs, mask, scale, cap)
+
+        cm, cl, co = lax.fori_loop(0, sk // kb, kv_step, (cm, cl, co))
+        return (lax.dynamic_update_slice_in_dim(m, cm, qi * qb, axis=3),
+                lax.dynamic_update_slice_in_dim(l, cl, qi * qb, axis=3),
+                lax.dynamic_update_slice_in_dim(o, co, qi * qb, axis=3))
+
+    return lax.fori_loop(0, sq // qb, q_step, carry)
+
+
+def _init_carry(b, hk, g, sq, d):
+    return (jnp.full((b, hk, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hk, g, sq), jnp.float32),
+            jnp.zeros((b, hk, g, sq, d), jnp.float32))
+
+
+def _finalize(carry, b, sq, hq, d):
+    m, l, o = carry
+    o = o / jnp.maximum(l, 1e-30)[..., None]          # [b,hk,g,sq,d]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# flash backward over one KV span (blocked; recompute-in-backward)
+# ---------------------------------------------------------------------------
+def _span_flash_bwd(q5, kc, vc, do5, delta, m, l, qpos, kpos, dq5, *,
+                    causal, window, scale, cap, q_block, kv_block,
+                    dk0=None, dv0=None):
+    """Accumulate flash gradients of q5 against one KV span.
+
+    q5/do5/dq5: [b,sq,hk,g,d]; kc,vc: [b,skc,hk,d]; delta,m,l: [b,hk,g,sq].
+    dq5 and (dk0, dv0) are running accumulators (the latter travel the
+    ring with their chunk).  Scores are recomputed per (q_block, kv_block)
+    tile, never materialized whole.
+    """
+    b, sq, hk, g, dd = q5.shape
+    skc = kc.shape[1]
+    qb = min(q_block, sq)
+    kb = min(kv_block, skc)
+    dk = jnp.zeros((b, skc, hk, dd), jnp.float32) if dk0 is None else dk0
+    dv = jnp.zeros((b, skc, hk, dd), jnp.float32) if dv0 is None else dv0
+
+    def q_step(qi, carry):
+        dq5_, dk_, dv_ = carry
+        qs = lax.dynamic_slice_in_dim(q5, qi * qb, qb, axis=1)
+        dos = lax.dynamic_slice_in_dim(do5, qi * qb, qb, axis=1)
+        qp = lax.dynamic_slice_in_dim(qpos, qi * qb, qb, axis=0)
+        ms = lax.dynamic_slice_in_dim(m, qi * qb, qb, axis=3)
+        ls = lax.dynamic_slice_in_dim(l, qi * qb, qb, axis=3)
+        dls = lax.dynamic_slice_in_dim(delta, qi * qb, qb, axis=3)
+        dq_blk = jnp.zeros((b, qb, hk, g, dd), jnp.float32)
+
+        def kv_step(ki, inner):
+            dq_b, dk_b, dv_b = inner
+            ks = lax.dynamic_slice_in_dim(kc, ki * kb, kb, axis=1)
+            vs = lax.dynamic_slice_in_dim(vc, ki * kb, kb, axis=1)
+            kp = lax.dynamic_slice_in_dim(kpos, ki * kb, kb, axis=0)
+            raw = jnp.einsum("bqhgd,bkhd->bhgqk", qs, ks
+                             ).astype(jnp.float32) * scale
+            s = raw
+            if cap is not None:
+                s = jnp.tanh(raw / cap) * cap
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = s + jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+            p = jnp.exp(s - ms[..., None]) / jnp.maximum(ls, 1e-30)[..., None]
+            dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p,
+                              dos.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dos.astype(jnp.float32),
+                            vs.astype(jnp.float32))
+            ds = p * (dp - dls[..., None])
+            if cap is not None:
+                t = jnp.tanh(raw / cap)
+                ds = ds * (1.0 - t * t)
+            ds = ds * scale
+            dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds, ks.astype(jnp.float32))
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qs.astype(jnp.float32))
+            dk_b = lax.dynamic_update_slice_in_dim(
+                dk_b, lax.dynamic_slice_in_dim(dk_b, ki * kb, kb, 1) + dk_c,
+                ki * kb, axis=1)
+            dv_b = lax.dynamic_update_slice_in_dim(
+                dv_b, lax.dynamic_slice_in_dim(dv_b, ki * kb, kb, 1) + dv_c,
+                ki * kb, axis=1)
+            return dq_b + dq_c, dk_b, dv_b
+
+        dq_blk, dk_, dv_ = lax.fori_loop(0, skc // kb, kv_step,
+                                         (dq_blk, dk_, dv_))
+        dq5_ = lax.dynamic_update_slice_in_dim(
+            dq5_, lax.dynamic_slice_in_dim(dq5_, qi * qb, qb, 1) + dq_blk,
+            qi * qb, axis=1)
+        return dq5_, dk_, dv_
+
+    return lax.fori_loop(0, sq // qb, q_step, (dq5, dk, dv))
+
+
+def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
+                         q_block, kv_block, Hq, Hkv, hd, s_loc, n_world):
+    """Ring attention with analytic backward (custom VJP).
+
+    Forward: each arriving KV chunk is flash-consumed while the next hop's
+    collective-permute is in flight (the fused AllGather x attention op).
+    Backward: KV chunks ring again (recomputed masks/scores, flash-bwd per
+    chunk); each chunk's (dk, dv) accumulator travels the ring *with* the
+    chunk and is delivered back to its owner in one final offset permute.
+    Peak memory: one score tile — autodiff through the unrolled ring would
+    instead save every hop's probability tensors.
+    """
+    g = Hq // Hkv
+
+    @jax.custom_vjp
+    def ring_attn(ql, kl, vl):
+        o, _, _ = _fwd(ql, kl, vl)
+        return o
+
+    def _fwd(ql, kl, vl):
+        d = lax.axis_index(axis)
+        b = ql.shape[0]
+        qpos = d * s_loc + jnp.arange(s_loc)
+        q5 = ql.reshape(b, s_loc, Hkv, g, hd)
+        carry = _init_carry(b, Hkv, g, s_loc, hd)
+        carry = _span_flash(q5, kl, vl, qpos, d * s_loc + jnp.arange(s_loc),
+                            carry, causal=causal, window=window, scale=scale,
+                            cap=cap, q_block=q_block, kv_block=kv_block)
+        kbuf, vbuf = kl, vl
+        for i in range(1, hops + 1):
+            kbuf = ring_permute(kbuf, axis, n)
+            vbuf = ring_permute(vbuf, axis, n)
+            src = (d - i) % n
+            carry = _span_flash(q5, kbuf, vbuf, qpos,
+                                src * s_loc + jnp.arange(s_loc), carry,
+                                causal=causal, window=window, scale=scale,
+                                cap=cap, q_block=q_block, kv_block=kv_block)
+        m, l, _ = carry
+        o = _finalize(carry, b, s_loc, Hq, hd)
+        return o.astype(ql.dtype), m, l
+
+    def fwd_rule(ql, kl, vl):
+        o, m, l = _fwd(ql, kl, vl)
+        return o, (ql, kl, vl, o, m, l)
+
+    def bwd_rule(res, do):
+        ql, kl, vl, o, m, l = res
+        d = lax.axis_index(axis)
+        b = ql.shape[0]
+        qpos = d * s_loc + jnp.arange(s_loc)
+        q5 = ql.reshape(b, s_loc, Hkv, g, hd)
+        # output is fully sharded (not replicated), so the cotangent
+        # arrives unsplit — no world scaling (cf. the CE replicated case)
+        do5 = do.astype(jnp.float32).reshape(b, s_loc, Hkv, g, hd)
+        o5 = o.reshape(b, s_loc, Hkv, g, hd).astype(jnp.float32)
+        # delta = rowsum(do * o): [b,hk,g,sq]
+        delta = jnp.einsum("bqhgd,bqhgd->bhgq", do5, o5)
+        dq5 = jnp.zeros((b, s_loc, Hkv, g, hd), jnp.float32)
+
+        kpos0 = d * s_loc + jnp.arange(s_loc)
+        dq5, dk, dv = _span_flash_bwd(
+            q5, kl, vl, do5, delta, m, l, qpos, kpos0, dq5,
+            causal=causal, window=window, scale=scale, cap=cap,
+            q_block=q_block, kv_block=kv_block)
+        kbuf, vbuf = kl, vl
+        # traveling (dk, dv) accumulators ride in the operand dtype — bf16
+        # wire for bf16 models (halves ring bytes), f32 kept exact
+        dkbuf, dvbuf = dk.astype(kl.dtype), dv.astype(vl.dtype)
+        for i in range(1, hops + 1):
+            kbuf = ring_permute(kbuf, axis, n)
+            vbuf = ring_permute(vbuf, axis, n)
+            dkbuf = ring_permute(dkbuf, axis, n)
+            dvbuf = ring_permute(dvbuf, axis, n)
+            src = (d - i) % n
+            dq5, dkf, dvf = _span_flash_bwd(
+                q5, kbuf, vbuf, do5, delta, m, l, qpos,
+                src * s_loc + jnp.arange(s_loc), dq5,
+                causal=causal, window=window, scale=scale, cap=cap,
+                q_block=q_block, kv_block=kv_block,
+                dk0=dkbuf.astype(jnp.float32), dv0=dvbuf.astype(jnp.float32))
+            dkbuf, dvbuf = dkf.astype(kl.dtype), dvf.astype(vl.dtype)
+        # deliver accumulated (dk, dv) back to the owning rank: the chunk
+        # rests hops ranks ahead of its owner -> one offset permute home
+        if hops % n != 0:
+            dkbuf = ring_permute(dkbuf, axis, n, shift=-hops)
+            dvbuf = ring_permute(dvbuf, axis, n, shift=-hops)
+        dql = dq5.reshape(b, s_loc, Hq, hd).astype(ql.dtype)
+        return dql, dkbuf.astype(kl.dtype), dvbuf.astype(vl.dtype)
+
+    ring_attn.defvjp(fwd_rule, bwd_rule)
+    return ring_attn
+
+
+# ---------------------------------------------------------------------------
+# train/prefill: ring-gathered context attention
+# ---------------------------------------------------------------------------
+def context_attention(
+    ctx: ParallelContext,
+    q, k, v,                  # [B, S, Hq|Hkv, hd] global, S sharded over tp
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    softcap_val: float | None = None,
+    mode: str | None = None,
+    q_block: int = 256,
+    kv_block: int = 1024,
+):
+    mode = mode or ctx.fusion.resolve("kv_ag")
+    axis, n = ctx.tp_axis, ctx.tp
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    scale = scale if scale is not None else hd ** -0.5
+    s_loc = S // n
+    # sliding-window layers statically bound the ring (fused-mode win):
+    # only ceil(window / chunk) previous chunks can contain unmasked keys.
+    hops = n - 1
+    if window is not None and mode != "bulk" and causal:
+        hops = min(n - 1, -(-window // s_loc))
+
+    if mode != "bulk":
+        ring_attn = _make_ring_attention(
+            axis, n, hops, causal, window, scale, softcap_val,
+            q_block, kv_block, Hq, Hkv, hd, s_loc, ctx.mesh.size)
+
+    def local_fn(ql, kl, vl):
+        d = lax.axis_index(axis)
+        b = ql.shape[0]
+        qpos = d * s_loc + jnp.arange(s_loc)
+
+        if mode == "bulk":
+            q5 = ql.reshape(b, s_loc, Hkv, g, hd)
+            kg = lax.all_gather(kl, axis, axis=1, tiled=True)
+            vg = lax.all_gather(vl, axis, axis=1, tiled=True)
+            carry = _span_flash(q5, kg, vg, qpos, jnp.arange(S),
+                                _init_carry(b, Hkv, g, s_loc, hd),
+                                causal=causal, window=window, scale=scale,
+                                cap=softcap_val, q_block=q_block,
+                                kv_block=kv_block)
+            return _finalize(carry, b, s_loc, Hq, hd).astype(ql.dtype)
+
+        # fused: local chunk first (available at t=0), then each arriving
+        # ring chunk while the next hop's collective-permute is in flight;
+        # analytic backward (see _make_ring_attention).
+        return ring_attn(ql, kl, vl)
+
+    return jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, axis, None, None),) * 3,
+        out_specs=P(dp, axis, None, None),
+        check_vma=False,
+    )(q, k, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: sequence-sharded KV cache + partial merge
+# ---------------------------------------------------------------------------
+def decode_attention(
+    ctx: ParallelContext,
+    q,                  # [B, 1, Hq, hd] replicated over tp
+    k_cache, v_cache,   # [B, S_max, Hkv, hd] S sharded over tp
+    pos,                # [] int32 current position (kv already written)
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    softcap_val: float | None = None,
+):
+    axis, n = ctx.tp_axis, ctx.tp
+    B, S_max, Hkv, hd = k_cache.shape
+    Hq = q.shape[2]
+    g = Hq // Hkv
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    scale = scale if scale is not None else hd ** -0.5
+    s_loc = S_max // n
+
+    def local_fn(ql, kl, vl, p):
+        d = lax.axis_index(axis)
+        kpos = d * s_loc + jnp.arange(s_loc)
+        b = ql.shape[0]
+        q5 = ql.reshape(b, 1, Hkv, g, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kl).astype(jnp.float32) * scale
+        if softcap_val is not None:
+            s = jnp.tanh(s / softcap_val) * softcap_val
+        valid = kpos <= p
+        if window is not None:
+            valid &= p - kpos < window
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        m = s.max(axis=-1)
+        pr = jnp.exp(s - m[..., None])
+        l = pr.sum(axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", pr, vl.astype(jnp.float32))
+        o = attention_partial_merge(o, m, l, axis)
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, Hq, hd)
+
+    return jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, None, None, None), P(dp, axis, None, None),
+                  P(dp, axis, None, None), P()),
+        out_specs=P(dp, None, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, pos).astype(q.dtype)
+
+
+def cache_update(ctx: ParallelContext, cache, new, pos):
+    """Write ``new`` [B, 1, *rest] into a sequence-sharded cache
+    [B, S_max, *rest] at ``pos``; only the owning rank's slice is touched
+    (zero-copy-style: no gather, no staging buffer)."""
+    axis, n = ctx.tp_axis, ctx.tp
+    B, S_max = cache.shape[:2]
+    rest = (None,) * (cache.ndim - 2)
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    s_loc = S_max // n
+
+    def local_fn(cl, nl, p):
+        d = lax.axis_index(axis)
+        owner = p // s_loc
+        local_pos = jnp.clip(p - d * s_loc, 0, s_loc - 1)
+        old = lax.dynamic_slice_in_dim(cl, local_pos, 1, axis=1)
+        sel = jnp.where(owner == d, nl.astype(cl.dtype), old)
+        return lax.dynamic_update_slice_in_dim(cl, sel, local_pos, axis=1)
+
+    return jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, axis, *rest), P(dp, None, *rest), P()),
+        out_specs=P(dp, axis, *rest),
+        check_vma=False,
+    )(cache, new, pos)

@@ -1,0 +1,77 @@
+"""Functional parameter plumbing shared by the model zoo.
+
+Parameters are plain pytrees of jnp arrays; every init function returns a
+matching pytree of *logical sharding specs* alongside, so launchers can
+derive NamedShardings without a module framework.  Logical axes are those
+understood by ``ParallelContext.spec``:
+
+  "fsdp"  - parameter shard dim for FSDP (maps to (pod, data))
+  "tp"    - tensor/expert/vocab-parallel dim (maps to model)
+  None    - replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any
+    spec: tuple
+
+    def __iter__(self):  # allow tuple-unpacking
+        yield self.value
+        yield self.spec
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), tuple(p.spec)),
+    lambda spec, children: Param(children[0], spec),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Split a pytree of Param into (values, logical specs)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_param)
+    return values, specs
+
+
+def dense_init(key, shape, spec, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    v = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    return Param(v.astype(dtype), spec)
+
+
+def embed_init(key, shape, spec, dtype, std: float = 0.02):
+    v = jax.random.normal(key, shape, jnp.float32) * std
+    return Param(v.astype(dtype), spec)
+
+
+def zeros_init(shape, spec, dtype):
+    return Param(jnp.zeros(shape, dtype), spec)
+
+
+def ones_init(shape, spec, dtype):
+    return Param(jnp.ones(shape, dtype), spec)
+
+
+def key_iter(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))

@@ -1,0 +1,105 @@
+"""DLRM — the paper's own architecture (Fig. 2).
+
+Embedding tables are model-parallel across the *whole* device world;
+bottom/top MLPs are data-parallel.  The switch between the two
+parallelisms is the All-to-All the paper fuses into embedding pooling
+(repro.core.embedding_all_to_all).  The interaction op consumes the
+fused output directly in its {local batch, tables x dim} layout — the
+paper's "no explicit shuffle" property.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding_all_to_all import embedding_all_to_all
+from repro.models.common import Param, dense_init, embed_init, key_iter
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    n_tables: int = 64            # global embedding table count
+    table_vocab: int = 100_000
+    embed_dim: int = 92           # paper Table II
+    n_dense: int = 13
+    bottom_mlp: tuple = (512, 256, 92)
+    top_mlp: tuple = (682, 682, 682, 1)   # paper Table II avg size 682
+    pooling: int = 70             # avg pooling size (lookups per bag)
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def dlrm_init(key, cfg: DLRMConfig):
+    ks = key_iter(key)
+    params = {
+        "tables": embed_init(next(ks), (cfg.n_tables, cfg.table_vocab, cfg.embed_dim),
+                             ("world", None, None), cfg.pdtype),
+        "bottom": [], "top": [],
+    }
+    d = cfg.n_dense
+    for h in cfg.bottom_mlp:
+        params["bottom"].append({
+            "w": dense_init(next(ks), (d, h), (None, None), cfg.pdtype),
+            "b": Param(jnp.zeros((h,), cfg.pdtype), (None,)),
+        })
+        d = h
+    assert d == cfg.embed_dim, "bottom MLP must end at embed_dim"
+    n_vec = cfg.n_tables + 1
+    d_int = n_vec * (n_vec - 1) // 2 + cfg.embed_dim
+    d = d_int
+    for h in cfg.top_mlp:
+        params["top"].append({
+            "w": dense_init(next(ks), (d, h), (None, None), cfg.pdtype),
+            "b": Param(jnp.zeros((h,), cfg.pdtype), (None,)),
+        })
+        d = h
+    return params
+
+
+def _mlp(layers, x, final_act=None):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            x = jax.nn.relu(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def _interaction(bottom, pooled):
+    """Dot-product interaction.  bottom: [B, D]; pooled: [B, T, D]."""
+    B, T, D = pooled.shape
+    z = jnp.concatenate([bottom[:, None], pooled], axis=1)   # [B, T+1, D]
+    zz = jnp.einsum("bid,bjd->bij", z, z)
+    iu, ju = jnp.triu_indices(T + 1, k=1)
+    flat = zz[:, iu, ju]                                      # [B, (T+1)T/2]
+    return jnp.concatenate([bottom, flat], axis=-1)
+
+
+def dlrm_forward(ctx: ParallelContext, params, cfg: DLRMConfig, batch, *,
+                 mode: str | None = None):
+    """batch: dense [B, n_dense] (B world-sharded), indices [B, T, L] int32
+    (full global batch; table dim sharded over world).  Returns logits [B]."""
+    dense, indices = batch["dense"], batch["indices"]
+    bottom = _mlp(params["bottom"], dense)                    # [B_loc.., D] DP
+    pooled = embedding_all_to_all(ctx, indices, params["tables"], mode=mode)
+    x = _interaction(bottom, pooled)
+    return _mlp(params["top"], x)[:, 0]
+
+
+def dlrm_loss(ctx: ParallelContext, params, cfg: DLRMConfig, batch, *,
+              mode: str | None = None):
+    logits = dlrm_forward(ctx, params, cfg, batch, mode=mode)
+    y = batch["labels"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    loss = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return loss.mean()

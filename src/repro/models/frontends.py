@@ -1,0 +1,46 @@
+"""Stub modality frontends (per assignment: backbone-only for [audio]/[vlm]).
+
+These produce the precomputed frame/patch embeddings that
+``input_specs()`` advertises; they are deterministic, shape-correct, and
+cheap — stand-ins for EnCodec (musicgen) and the dynamic-resolution ViT
+(qwen2-vl).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def audio_frame_embeddings(key, batch: int, seq: int, d_model: int,
+                           dtype=jnp.float32):
+    """Stub EnCodec conditioning frames: [B, S, D]."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02
+
+
+def vision_patch_embeddings(key, batch: int, seq: int, d_model: int,
+                            n_patches: int, dtype=jnp.float32):
+    """Stub ViT patch embeddings occupying the first n_patches positions.
+
+    Returns (embeds [B, S, D], mask [S] bool)."""
+    emb = jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02
+    mask = jnp.arange(seq) < n_patches
+    return emb, mask
+
+
+def mrope_positions(batch: int, seq: int, n_patches: int, grid_h: int = 0):
+    """Synthetic (t, h, w) position streams for M-RoPE.  Vision patches get
+    a 2D grid; text tokens continue with equal t/h/w positions."""
+    g = grid_h or max(1, int(np.sqrt(max(n_patches, 1))))
+    t = np.zeros((seq,), np.int32)
+    h = np.zeros((seq,), np.int32)
+    w = np.zeros((seq,), np.int32)
+    for i in range(min(n_patches, seq)):
+        t[i] = 0
+        h[i] = i // g
+        w[i] = i % g
+    base = (max(n_patches, 1) // g) + 1
+    for i in range(n_patches, seq):
+        t[i] = h[i] = w[i] = base + (i - n_patches)
+    pos = np.stack([t, h, w])[:, None, :].repeat(batch, axis=1)
+    return jnp.asarray(pos)

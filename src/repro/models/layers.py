@@ -1,0 +1,148 @@
+"""Shared NN layers: norms, gated MLPs, vocab-parallel embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.allgather_matmul import allgather_matmul, matmul_reducescatter
+from repro.core.collectives import ring_reduce_scatter_compute
+from repro.core.matmul_allreduce import matmul_allreduce
+from repro.models.common import Param, dense_init, embed_init, ones_init, key_iter
+from repro.parallel.sharding import ParallelContext
+
+
+# ---------------------------------------------------------------------------
+# norms (always computed in f32)
+# ---------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-6, *, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:  # gemma-style (1 + w) parameterization
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def rms_norm_init(dim, dtype, *, zero: bool = False):
+    init = jnp.zeros if zero else jnp.ones
+    return Param(init((dim,), dtype), (None,))
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU) — the paper's GEMM/GEMV + AllReduce target
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, dtype, *, act="silu"):
+    ks = key_iter(key)
+    return {
+        "w_gate": dense_init(next(ks), (d_model, d_ff), ("fsdp", "tp"), dtype),
+        "w_up": dense_init(next(ks), (d_model, d_ff), ("fsdp", "tp"), dtype),
+        "w_down": dense_init(next(ks), (d_ff, d_model), ("tp", "fsdp"), dtype),
+    }
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+         "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+         "relu": jax.nn.relu}
+
+
+def mlp_apply(ctx: ParallelContext, params, x, *, act="silu", seq_sharded: bool):
+    """Column-parallel up/gate, row-parallel down.
+
+    seq_sharded (train/prefill): AG&matmul fused in, matmul&RS fused out —
+    the SP split of the paper's GEMM+AllReduce.
+    not seq_sharded (decode, S=1): local column matmuls + fused
+    GEMV+AllReduce out — the paper's flagship operator.
+    """
+    fn = _ACTS[act]
+    if seq_sharded:
+        g = allgather_matmul(ctx, x, params["w_gate"])
+        u = allgather_matmul(ctx, x, params["w_up"])
+        h = fn(g) * u
+        return matmul_reducescatter(ctx, h, params["w_down"])
+    # decode: x replicated over tp; shard the column matmuls over tp
+    g = _colshard_matmul(ctx, x, params["w_gate"])
+    u = _colshard_matmul(ctx, x, params["w_up"])
+    h = fn(g) * u
+    return matmul_allreduce(ctx, h, params["w_down"])
+
+
+def _colshard_matmul(ctx: ParallelContext, x, w):
+    """x replicated over tp  @  w column-sharded -> out col-sharded."""
+    b = x.shape[0]
+    dp = ctx.batch_axes if b % ctx.dp == 0 else None
+
+    def f(xl, wl):
+        return xl @ wl
+
+    return jax.shard_map(
+        f, mesh=ctx.mesh,
+        in_specs=(P(dp, None, None), P(None, ctx.tp_axis)),
+        out_specs=P(dp, None, ctx.tp_axis),
+        check_vma=False,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding (+ fused embed & reduce-scatter for SP output)
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab, d_model, dtype):
+    return {"table": embed_init(key, (vocab, d_model), ("tp", "fsdp"), dtype)}
+
+
+def embedding_lookup(ctx: ParallelContext, params, tokens, *, seq_shard: bool,
+                     scale: float | None = None):
+    """tokens [B, S] -> x [B, S, D].
+
+    seq_shard=True returns x sequence-sharded over tp: each rank computes
+    partial embeddings (its vocab slice) per sequence chunk and the chunks
+    are combined with a compute-interleaved ring reduce-scatter — the same
+    fused embedding+collective shape as the paper's DLRM operator, applied
+    to the LM token embedding (beyond-paper use of the technique).
+    """
+    table = params["table"]
+    V, D = table.shape
+    B, S = tokens.shape
+    axis, n = ctx.tp_axis, ctx.tp
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    do_seq = seq_shard and S % n == 0 and S >= n
+
+    def local_fn(tok, tab):
+        d = lax.axis_index(axis)
+        v_loc = tab.shape[0]
+
+        def embed_partial(ids):
+            rel = ids - d * v_loc
+            ok = (rel >= 0) & (rel < v_loc)
+            e = jnp.take(tab, jnp.clip(rel, 0, v_loc - 1), axis=0)
+            return jnp.where(ok[..., None], e, 0).astype(tab.dtype)
+
+        if do_seq:
+            s_loc = tok.shape[1] // n
+
+            def partial(c):
+                ids = lax.dynamic_slice_in_dim(tok, c * s_loc, s_loc, axis=1)
+                return embed_partial(ids)
+
+            x = ring_reduce_scatter_compute(partial, axis,
+                                            schedule=ctx.fusion.schedule)
+        else:
+            x = lax.psum(embed_partial(tok), axis)
+        if scale is not None:
+            x = (x.astype(jnp.float32) * scale).astype(x.dtype)
+        return x
+
+    out_spec = P(dp, axis, None) if do_seq else P(dp, None, None)
+    return jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, None), P(axis, None)),
+        out_specs=out_spec, check_vma=False,
+    )(tokens, table)

@@ -1,0 +1,152 @@
+"""Mamba-2 (SSD) block with chunked selective scan.
+
+Scalar-per-head decay makes the chunked form a plain matmul structure:
+pairwise decay ratios exp(la_t - la_s) for s<=t are bounded in (0,1], so
+the algorithm is numerically safe at any chunk size.  Heads are sharded
+over tp (head counts divide 16 for the assigned configs); the out
+projection is row-parallel with the fused matmul+AllReduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.matmul_allreduce import matmul_allreduce
+from repro.models.common import dense_init, key_iter, zeros_init, ones_init
+from repro.models.layers import rms_norm, rms_norm_init
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64          # N
+    head_dim: int = 64         # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key, cfg: Mamba2Config, dtype):
+    ks = key_iter(key)
+    D, Di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": dense_init(next(ks), (D, 2 * Di + 2 * N + H), ("fsdp", "tp"), dtype),
+        "conv": dense_init(next(ks), (cfg.conv_width, Di + 2 * N), (None, "tp"), dtype, scale=0.3),
+        "A_log": zeros_init((H,), (None,), jnp.float32),
+        "D": ones_init((H,), (None,), jnp.float32),
+        "dt_bias": zeros_init((H,), (None,), jnp.float32),
+        "norm": rms_norm_init(Di, jnp.float32),
+        "w_out": dense_init(next(ks), (Di, D), ("tp", "fsdp"), dtype),
+    }
+
+
+def ssd_chunked(x, dt, A_log, B, C, state, chunk: int):
+    """Chunked SSD scan.
+
+    x: [b, T, H, P]; dt: [b, T, H]; B, C: [b, T, N]; state: [b, H, N, P].
+    h_t = a_t h_{t-1} + dt_t B_t (x_t)^T ;  y_t = C_t . h_t
+    with a_t = exp(-dt_t * exp(A_log_h)) scalar per head.
+    """
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    c = min(chunk, T)
+    n_chunks = T // c
+    a = -jnp.exp(A_log)[None, None] * dt                   # log a_t  [b,T,H]
+    xs = (x.reshape(b, n_chunks, c, H, P).transpose(1, 0, 2, 3, 4),
+          dt.reshape(b, n_chunks, c, H).transpose(1, 0, 2, 3),
+          a.reshape(b, n_chunks, c, H).transpose(1, 0, 2, 3),
+          B.reshape(b, n_chunks, c, N).transpose(1, 0, 2, 3),
+          C.reshape(b, n_chunks, c, N).transpose(1, 0, 2, 3))
+
+    def chunk_step(S, inp):
+        xx, dtt, aa, BB, CC = inp                 # [b,c,H,P],[b,c,H],[b,c,H],[b,c,N]
+        la = jnp.cumsum(aa, axis=1)               # inclusive cumulative log-decay
+        # intra-chunk: y_t = sum_{s<=t} exp(la_t - la_s) (C_t.B_s) dt_s x_s
+        dec = jnp.exp(jnp.clip(la[:, :, None] - la[:, None, :], -60.0, 0.0))
+        mask = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])
+        scores = jnp.einsum("btn,bsn->bts", CC, BB)[:, :, :, None] * \
+            (dec * mask[None, :, :, None])        # [b,t,s,H]
+        y = jnp.einsum("btsh,bsh,bshp->bthp", scores, dtt, xx)
+        # inter-chunk: y_t += exp(la_t) C_t . S
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", CC, jnp.exp(jnp.clip(la, -60.0, 0.0)), S)
+        # state: S' = exp(la_end) S + sum_s exp(la_end - la_s) dt_s B_s x_s^T
+        la_end = la[:, -1]                        # [b,H]
+        sdec = jnp.exp(jnp.clip(la_end[:, None] - la, -60.0, 0.0)) * dtt  # [b,c,H]
+        S = jnp.exp(jnp.clip(la_end, -60.0, 0.0))[..., None, None] * S + \
+            jnp.einsum("bsh,bsn,bshp->bhnp", sdec, BB, xx)
+        return S, y
+
+    # checkpoint per chunk (cf. rwkv6): avoids stacking the pairwise-decay
+    # and score tensors across chunks as backward residuals
+    state, y = lax.scan(jax.checkpoint(chunk_step, prevent_cse=False),
+                        state, xs)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, T, H, P)
+    return y, state
+
+
+def ssd_step(x, dt, A_log, B, C, state):
+    """Single-token SSD step.  x: [b,1,H,P]; returns (y [b,1,H,P], state')."""
+    xx, dtt, BB, CC = x[:, 0], dt[:, 0], B[:, 0], C[:, 0]
+    a = jnp.exp(-jnp.exp(A_log)[None] * dtt)               # [b,H]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtt, BB, xx)
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", CC, state)
+    return y[:, None], state
+
+
+def _causal_conv(x, kernel, conv_state=None):
+    """Depthwise causal conv1d.  x: [b, T, C]; kernel: [W, C]."""
+    W = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i][None, None] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return out, new_state
+
+
+def mamba2_apply(ctx: ParallelContext, p, cfg: Mamba2Config, x, *,
+                 state=None, conv_state=None):
+    """x: [B, T, D] replicated over tp (heads shard inside projections).
+
+    Returns (out [B,T,D], (ssm_state, conv_state)) — states are None-safe
+    for training (zero-init, discarded)."""
+    b, T, D = x.shape
+    Di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = x @ p["w_in"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [Di, Di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    xh = xin.reshape(b, T, H, P).astype(jnp.float32)
+    if state is None:
+        state0 = jnp.zeros((b, H, N, P), jnp.float32)
+        y, new_state = ssd_chunked(xh, dt, p["A_log"], Bc.astype(jnp.float32),
+                                   Cc.astype(jnp.float32), state0, cfg.chunk)
+    else:
+        y, new_state = ssd_step(xh, dt, p["A_log"], Bc.astype(jnp.float32),
+                                Cc.astype(jnp.float32), state)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, T, Di).astype(x.dtype)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    # row-parallel out projection: fused matmul+AllReduce (paper op)
+    out = matmul_allreduce(ctx, y, p["w_out"])
+    return out, (new_state, new_conv)

@@ -1,0 +1,201 @@
+"""Multi-head Latent Attention (DeepSeek-V3) with context-parallel sharding.
+
+MLA compresses KV into a per-token latent (c_kv + shared rope key).  Under
+our context-parallel scheme this is a large communication win the paper's
+fusion amplifies: the train-time ring gathers the *latent* stream
+(kv_lora + rope dims per token instead of 2*H*hd), and each arriving
+latent chunk is expanded to K/V and flash-consumed while the next chunk
+is on the wire.  Decode uses the absorbed formulation: score and output
+accumulation happen in latent space, so the partial-merge collective is
+latent-sized too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import attention_partial_merge, ring_permute
+from repro.models.attention import NEG_INF, _span_flash, _init_carry, _finalize
+from repro.models.common import dense_init, key_iter
+from repro.models.layers import rms_norm
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self):
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(key, cfg: MLAConfig, dtype):
+    ks = key_iter(key)
+    D, H = cfg.d_model, cfg.n_heads
+    return {
+        "w_dq": dense_init(next(ks), (D, cfg.q_lora_rank), ("fsdp", None), dtype),
+        "q_norm": dense_init(next(ks), (cfg.q_lora_rank,), (None,), jnp.float32, scale=0.0),
+        "w_uq": dense_init(next(ks), (cfg.q_lora_rank, H * cfg.qk_dim), ("fsdp", None), dtype),
+        "w_dkv": dense_init(next(ks), (D, cfg.kv_lora_rank), ("fsdp", None), dtype),
+        "kv_norm": dense_init(next(ks), (cfg.kv_lora_rank,), (None,), jnp.float32, scale=0.0),
+        "w_kr": dense_init(next(ks), (D, cfg.qk_rope_dim), ("fsdp", None), dtype),
+        "w_uk": dense_init(next(ks), (cfg.kv_lora_rank, H, cfg.qk_nope_dim), ("fsdp", None, None), dtype),
+        "w_uv": dense_init(next(ks), (cfg.kv_lora_rank, H, cfg.v_head_dim), ("fsdp", None, None), dtype),
+        "w_o": dense_init(next(ks), (H * cfg.v_head_dim, D), (None, "fsdp"), dtype),
+    }
+
+
+def _mla_qkv_latent(params, cfg: MLAConfig, x, positions):
+    """Shared projections: full q heads + per-token latent/rope-key."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q = rms_norm(x @ params["w_dq"], 1.0 + params["q_norm"])
+    q = (q @ params["w_uq"]).reshape(B, S, H, cfg.qk_dim)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    c = rms_norm(x @ params["w_dkv"], 1.0 + params["kv_norm"])   # [B,S,ckv]
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        theta=cfg.rope_theta)[:, :, 0]            # [B,S,dr]
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_context_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
+                          *, mode: str | None = None):
+    """Train/prefill MLA.  x: [B, S, D] sequence-sharded over tp.
+
+    Ring-gathers the latent (c, k_rope) streams — ~(2*H*hd)/(ckv+dr) times
+    fewer wire bytes than gathering expanded KV — expanding each chunk
+    to K/V right before its flash update.
+    Returns attention output [B, S, D] seq-sharded, plus (c, k_rope) as
+    the prefill cache contribution.
+    """
+    mode = mode or ctx.fusion.resolve("kv_ag")
+    axis, n = ctx.tp_axis, ctx.tp
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    s_loc = S // n
+    scale = cfg.qk_dim ** -0.5
+
+    def local_fn(xl, pl):
+        w_uk, w_uv = pl["w_uk"], pl["w_uv"]
+        d = lax.axis_index(axis)
+        b = xl.shape[0]
+        positions = (d * s_loc + jnp.arange(s_loc))[None, :]
+        q_nope, q_rope, c, k_rope = _mla_qkv_latent(pl, cfg, xl, positions)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)     # [b,s,H,qk]
+        q5 = q_full.reshape(b, s_loc, H, 1, cfg.qk_dim)
+        qpos = d * s_loc + jnp.arange(s_loc)
+
+        def expand(cc, kr):
+            k_nope = jnp.einsum("bsc,chd->bshd", cc, w_uk)
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                          kr.shape[:2] + (H, cfg.qk_rope_dim))],
+                axis=-1)
+            v = jnp.einsum("bsc,chd->bshd", cc, w_uv)
+            return k, v
+
+        def span(cc, kr, kpos, carry):
+            k, v = expand(cc, kr)
+            return _span_flash(q5, k, v, qpos, kpos, carry, causal=True,
+                               window=None, scale=scale, cap=None,
+                               q_block=256, kv_block=1024)
+
+        carry = _init_carry(b, H, 1, s_loc, cfg.v_head_dim)
+        if mode == "bulk":
+            cg = lax.all_gather(c, axis, axis=1, tiled=True)
+            kg = lax.all_gather(k_rope, axis, axis=1, tiled=True)
+            carry = span(cg, kg, jnp.arange(S), carry)
+        else:
+            carry = span(c, k_rope, d * s_loc + jnp.arange(s_loc), carry)
+            cbuf, kbuf = c, k_rope
+            for i in range(1, n):
+                cbuf = ring_permute(cbuf, axis, n)
+                kbuf = ring_permute(kbuf, axis, n)
+                src = (d - i) % n
+                carry = span(cbuf, kbuf, src * s_loc + jnp.arange(s_loc), carry)
+        o = _finalize(carry, b, s_loc, H, cfg.v_head_dim)
+        out = o.reshape(b, s_loc, H * cfg.v_head_dim).astype(xl.dtype) @ pl["w_o"]
+        return out, c, k_rope
+
+    param_specs = jax.tree.map(lambda _: P(), params)
+    out, c, k_rope = jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, axis, None), param_specs),
+        out_specs=(P(dp, axis, None), P(dp, axis, None), P(dp, axis, None)),
+        check_vma=False,
+    )(x, params)
+    return out, (c, k_rope)
+
+
+def mla_decode_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
+                         c_cache, kr_cache, pos):
+    """Absorbed-form MLA decode.
+
+    x: [B, 1, D] replicated over tp; c_cache: [B, S_max, ckv] and
+    kr_cache: [B, S_max, dr], both sequence-sharded (current position
+    already written).  Partials are merged in latent space.
+    """
+    axis, n = ctx.tp_axis, ctx.tp
+    B, S_max, ckv = c_cache.shape
+    H = cfg.n_heads
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    s_loc = S_max // n
+    scale = cfg.qk_dim ** -0.5
+
+    def local_fn(xl, cl, krl, p, pl):
+        w_uk, w_uv = pl["w_uk"], pl["w_uv"]
+        d = lax.axis_index(axis)
+        b = xl.shape[0]
+        positions = jnp.broadcast_to(p, (1, 1))
+        q_nope, q_rope, _c_new, _kr_new = _mla_qkv_latent(pl, cfg, xl, positions)
+        # absorb W_uk into q: score_h(t) = q_eff_h . c_t + q_rope_h . kr_t
+        q_eff = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)     # [b,1,H,ckv]
+        kpos = d * s_loc + jnp.arange(s_loc)
+        s_lat = jnp.einsum("bqhc,bkc->bhqk", q_eff, cl)
+        s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, krl)
+        s = (s_lat + s_rope).astype(jnp.float32) * scale       # [b,H,1,k]
+        valid = kpos <= p
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m = s.max(axis=-1)
+        pr = jnp.exp(s - m[..., None])
+        l = pr.sum(axis=-1)
+        o_lat = jnp.einsum("bhqk,bkc->bhqc", pr, cl.astype(jnp.float32))
+        o_lat = attention_partial_merge(o_lat, m, l, axis)      # [b,H,1,ckv]
+        o = jnp.einsum("bhqc,chv->bqhv", o_lat.astype(xl.dtype), w_uv)
+        return o.reshape(b, 1, H * cfg.v_head_dim)
+
+    param_specs = jax.tree.map(lambda _: P(), params)
+    o = jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, None, None), P(dp, axis, None), P(dp, axis, None),
+                  P(), param_specs),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(x, c_cache, kr_cache, pos, params)
+    # output projection applied in global code so serve-time placement of
+    # w_o (EP-sharded contraction) lowers to partial-matmul + psum rather
+    # than a per-layer weight gather at the shard_map boundary
+    return o @ params["w_o"]
+
+
+def mla_latents_for_cache(params, cfg: MLAConfig, x, positions):
+    """Compute (c, k_rope) for a new token (cache write path)."""
+    c = rms_norm(x @ params["w_dkv"], 1.0 + params["kv_norm"])
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        theta=cfg.rope_theta)[:, :, 0]
+    return c, k_rope

@@ -1,0 +1,274 @@
+"""Mixture-of-Experts layer with expert parallelism and fused GEMM+All-to-All.
+
+Experts are sharded over the tp axis (EP); tokens arrive sequence-sharded,
+so the dispatch/combine All-to-Alls move tokens between tp ranks within
+each data row.  The combine All-to-All is fused into the expert FFN
+(paper §III, GEMM+All-to-All): the FFN is evaluated per combine
+destination and each destination's output block is shipped the moment it
+is computed, farthest peer first, local block last.  The dispatch
+All-to-All is decomposed the same way (beyond-paper symmetric fusion).
+
+Capacity-based routing (top-k, capacity factor, dropped tokens fall back
+to the residual stream) matches the paper's uniform-workload assumption
+while staying robust to imbalance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
+from repro.models.common import dense_init, key_iter
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                     # per-expert hidden dim
+    n_shared_experts: int = 0     # deepseek-style shared expert(s)
+    capacity_factor: float = 1.25
+    norm_topk_prob: bool = True
+    router_scale: float = 1.0     # deepseek-v3 routed_scaling_factor
+    act: str = "silu"
+
+
+def moe_init(key, cfg: MoEConfig, dtype):
+    ks = key_iter(key)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    params = {
+        "router": dense_init(next(ks), (D, E), (None, None), jnp.float32),
+        "w_gate": dense_init(next(ks), (E, D, F), ("tp", "fsdp", None), dtype),
+        "w_up": dense_init(next(ks), (E, D, F), ("tp", "fsdp", None), dtype),
+        "w_down": dense_init(next(ks), (E, F, D), ("tp", None, "fsdp"), dtype),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.d_ff * cfg.n_shared_experts
+        params["shared"] = {
+            "w_gate": dense_init(next(ks), (D, Fs), ("fsdp", None), dtype),
+            "w_up": dense_init(next(ks), (D, Fs), ("fsdp", None), dtype),
+            "w_down": dense_init(next(ks), (Fs, D), (None, "fsdp"), dtype),
+        }
+    return params
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def ep_world_axes(ctx: ParallelContext):
+    """Axes the decode EP layout shards experts over: (data, model)."""
+    return tuple(a for a in ctx.mesh.axis_names if a != "pod")
+
+
+def moe_apply(ctx: ParallelContext, params, x, cfg: MoEConfig, *,
+              mode: str | None = None):
+    """x: [B, S, D] sequence-sharded over tp -> same shape/sharding."""
+    mode = mode or ctx.fusion.resolve("moe_a2a")
+    schedule = ctx.fusion.schedule
+    axis, n_ep = ctx.tp_axis, ctx.tp
+    B, S, D = x.shape
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    seq_sharded = S % n_ep == 0 and S >= n_ep
+    x_spec = P(dp, axis, None) if seq_sharded else P(dp, None, None)
+    act = _ACTS[cfg.act]
+
+    # Decode (S==1): weight-stationary EP over the full (data x model)
+    # world — each device holds whole experts, tokens move instead of
+    # weights.  Kills the per-layer FSDP expert-weight all-gathers that
+    # otherwise dominate the serve-step memory term.
+    ep_ax = ep_world_axes(ctx)
+    n_world_ep = 1
+    for a in ep_ax:
+        n_world_ep *= ctx.mesh.shape[a]
+    if not seq_sharded and cfg.n_experts % n_world_ep == 0 and len(ep_ax) >= 2:
+        return _moe_decode_ep(ctx, params, x, cfg, act, ep_ax, n_world_ep)
+
+    shared = params.get("shared")
+    if shared is not None:
+        def fn(xl, w_r, wg, wu, wd, swg, swu, swd):
+            return _moe_local(cfg, xl, w_r, wg, wu, wd, (swg, swu, swd),
+                              mode, schedule, axis, n_ep, act)
+        in_specs = (x_spec, P(None, None), P(axis, None, None),
+                    P(axis, None, None), P(axis, None, None),
+                    P(None, None), P(None, None), P(None, None))
+        args = (x, params["router"], params["w_gate"], params["w_up"],
+                params["w_down"], shared["w_gate"], shared["w_up"],
+                shared["w_down"])
+    else:
+        def fn(xl, w_r, wg, wu, wd):
+            return _moe_local(cfg, xl, w_r, wg, wu, wd, None,
+                              mode, schedule, axis, n_ep, act)
+        in_specs = (x_spec, P(None, None), P(axis, None, None),
+                    P(axis, None, None), P(axis, None, None))
+        args = (x, params["router"], params["w_gate"], params["w_up"],
+                params["w_down"])
+
+    return jax.shard_map(
+        fn, mesh=ctx.mesh, in_specs=in_specs, out_specs=x_spec,
+        check_vma=False,
+    )(*args)
+
+
+def _moe_decode_ep(ctx: ParallelContext, params, x, cfg: MoEConfig, act,
+                   ep_ax, n_world_ep):
+    """Weight-stationary decode MoE: experts sharded over (data x model).
+
+    Tokens are all-gathered over 'data' (KB-scale), each rank runs its
+    local experts on the tokens routed to it, and a psum over the EP axes
+    combines contributions.  No expert-weight gathers at all."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    E_loc = E // n_world_ep
+    dp = ctx.batch_axes if B % ctx.dp == 0 else None
+    data_ax = ep_ax[0]              # batch rides this axis
+    n_data = ctx.mesh.shape[data_ax]
+
+    def local_fn(xl, w_r, wg, wu, wd):
+        # gather this pod's tokens over 'data' (tiny: [B_pod, D])
+        toks = xl.reshape(-1, D)
+        if dp is not None:
+            toks = lax.all_gather(toks, data_ax, axis=0, tiled=True)
+        T = toks.shape[0]
+        # redundant routing (router weights replicated, T is small)
+        logits = toks.astype(jnp.float32) @ w_r
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_i = lax.top_k(probs, K)
+        if cfg.norm_topk_prob:
+            gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        gate_w = gate_w * cfg.router_scale
+        C = int(max(1, -(-T * K * cfg.capacity_factor // E)))
+        flat_e = gate_i.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        # my expert range: [my_ep_idx * E_loc, ...)
+        idxs = [lax.axis_index(a) for a in ep_ax]
+        my_ep = idxs[0]
+        for a, i in zip(ep_ax[1:], idxs[1:]):
+            my_ep = my_ep * ctx.mesh.shape[a] + i
+        e_rel = flat_e - my_ep * E_loc
+        mine = (e_rel >= 0) & (e_rel < E_loc) & (pos < C)
+        e_clip = jnp.where(mine, e_rel, 0)
+        p_clip = jnp.where(mine, pos, 0)
+        src = jnp.where(mine[:, None], jnp.repeat(toks, K, axis=0), 0)
+        buf = jnp.zeros((E_loc, C, D), x.dtype).at[e_clip, p_clip].add(
+            src.astype(x.dtype), mode="drop")
+        # local expert FFN (weights stationary)
+        g = jnp.einsum("ecd,edf->ecf", buf, wg)
+        u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        out_buf = jnp.einsum("ecf,efd->ecd", act(g) * u, wd)
+        # scatter my contributions back to token rows, weighted
+        contrib = out_buf[e_clip, p_clip]                      # [T*K, D]
+        w = jnp.where(mine, gate_w.reshape(-1), 0.0)
+        y = jnp.zeros((T, D), jnp.float32).at[
+            jnp.repeat(jnp.arange(T), K)].add(
+            contrib.astype(jnp.float32) * w[:, None])
+        y = lax.psum(y, ep_ax)                                 # combine
+        if dp is not None:
+            d = lax.axis_index(data_ax)
+            t_loc = T // n_data
+            y = lax.dynamic_slice_in_dim(y, d * t_loc, t_loc, axis=0)
+        return y.reshape(xl.shape).astype(xl.dtype)
+
+    out = jax.shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(dp, None, None), P(None, None),
+                  P(ep_ax, None, None), P(ep_ax, None, None),
+                  P(ep_ax, None, None)),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+
+    shared = params.get("shared")
+    if shared is not None:
+        out = out + ((act(x @ shared["w_gate"]) * (x @ shared["w_up"]))
+                     @ shared["w_down"]).astype(out.dtype)
+    return out
+
+
+def _moe_local(cfg, xl, w_r, wg, wu, wd, shared, mode, schedule, axis,
+               n_ep, act):
+    """Per-rank MoE body: route -> dispatch A2A -> fused expert FFN+combine."""
+    D, E, K = cfg.d_model, cfg.n_experts, cfg.top_k
+    E_loc = E // n_ep
+    b_loc, s_loc, _ = xl.shape
+    toks = xl.reshape(-1, D)
+    T = toks.shape[0]
+
+    # --- routing (f32) -----------------------------------------------------
+    logits = toks.astype(jnp.float32) @ w_r
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = lax.top_k(probs, K)                  # [T, K]
+    if cfg.norm_topk_prob:
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    gate_w = gate_w * cfg.router_scale
+
+    # --- capacity slots ------------------------------------------------------
+    # capacity floor 1 (a floor of 4 pads decode's few tokens/rank 4x)
+    C = int(max(1, -(-T * K * cfg.capacity_factor // E)))
+    flat_e = gate_i.reshape(-1)                           # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    valid = pos < C
+    e_clip = jnp.where(valid, flat_e, 0)
+    p_clip = jnp.where(valid, pos, 0)
+    src = jnp.where(valid[:, None], jnp.repeat(toks, K, axis=0), 0)
+
+    buf = jnp.zeros((E, C, D), xl.dtype).at[e_clip, p_clip].add(
+        src.astype(xl.dtype), mode="drop")
+    buf = buf.reshape(n_ep, E_loc, C, D)
+
+    # --- dispatch All-to-All (decomposed per destination when fused) -------
+    if mode == "bulk":
+        recv = bulk_all_to_all(buf, axis)                 # [n_src, E_loc, C, D]
+    else:
+        def produce_d(dest):
+            return lax.dynamic_index_in_dim(buf, dest, axis=0, keepdims=False)
+        recv = direct_all_to_all_compute(
+            produce_d, jax.ShapeDtypeStruct((E_loc, C, D), xl.dtype),
+            axis, schedule=schedule)
+
+    # --- expert FFN fused with combine All-to-All (the paper's GEMM+A2A) ---
+    def ffn(xb):  # [E_loc, C, D] -> [E_loc, C, D]
+        g = jnp.einsum("ecd,edf->ecf", xb, wg)
+        u = jnp.einsum("ecd,edf->ecf", xb, wu)
+        return jnp.einsum("ecf,efd->ecd", act(g) * u, wd)
+
+    if mode == "bulk":
+        y = jax.vmap(ffn)(recv)                           # all GEMMs first...
+        comb = bulk_all_to_all(y, axis)                   # ...then one A2A
+    else:
+        def produce_c(dest):
+            xb = lax.dynamic_index_in_dim(recv, dest, axis=0, keepdims=False)
+            return ffn(xb)
+        comb = direct_all_to_all_compute(
+            produce_c, jax.ShapeDtypeStruct((E_loc, C, D), xl.dtype),
+            axis, schedule=schedule)
+
+    # --- un-permute + weighted combine --------------------------------------
+    out_buf = comb.reshape(E, C, D)
+    picked = out_buf[e_clip, p_clip]                      # [T*K, D]
+    picked = jnp.where(valid[:, None], picked, 0).reshape(T, K, D)
+    y = (picked.astype(jnp.float32) * gate_w[..., None]).sum(axis=1)
+    out = y.reshape(b_loc, s_loc, D).astype(xl.dtype)
+
+    # --- shared expert (dense, sequence-local) ------------------------------
+    if shared is not None:
+        swg, swu, swd = shared
+        out = out + ((act(xl @ swg) * (xl @ swu)) @ swd).astype(xl.dtype)
+    return out
+
+
+def moe_aux_loss(router_probs, gate_i, n_experts: int):
+    """Load-balance auxiliary loss (Switch-style)."""
+    me = router_probs.mean(axis=0)
+    onehot = jax.nn.one_hot(gate_i[:, 0], n_experts)
+    ce = onehot.mean(axis=0)
+    return n_experts * jnp.sum(me * ce)

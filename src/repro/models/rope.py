@@ -1,0 +1,57 @@
+"""Rotary position embeddings: standard, 2D (chatglm), and M-RoPE (qwen2-vl)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rot_half_interleaved(x):
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    return jnp.stack([-x2, x1], axis=-1).reshape(x.shape)
+
+
+def _angles(positions, dim, theta):
+    """positions [...,] -> cos/sin [..., dim//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0, rotary_dim: int | None = None):
+    """Standard RoPE.  x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _angles(positions, rd, theta)          # [B, S, rd//2]
+    cos = jnp.repeat(cos, 2, axis=-1)[:, :, None, :]  # [B, S, 1, rd]
+    sin = jnp.repeat(sin, 2, axis=-1)[:, :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    out = xr * cos.astype(x.dtype) + _rot_half_interleaved(xr) * sin.astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rd < hd else out
+
+
+def apply_rope_2d(x, positions, *, theta: float = 10000.0):
+    """ChatGLM-style 2D RoPE: rotary applied to the first half of head_dim
+    only (the second half stays un-rotated), matching GLM's
+    ``rotary_percentage=0.5`` with interleaved layout."""
+    return apply_rope(x, positions, theta=theta, rotary_dim=x.shape[-1] // 2)
+
+
+def apply_mrope(x, positions_thw, *, theta: float = 1_000_000.0,
+                sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: head_dim frequency bands are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  positions_thw: [3, B, S].  For pure-text positions the three
+    streams are identical, recovering standard RoPE."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions_thw[..., None].astype(jnp.float32) * inv  # [3, B, S, hd//2]
+    splits = [sum(sections[: i + 1]) for i in range(len(sections) - 1)]
+    parts = []
+    for i, a in enumerate(jnp.split(ang, splits, axis=-1)):
+        parts.append(a[i])  # pick stream i's angles for section i
+    ang = jnp.concatenate(parts, axis=-1)                     # [B, S, hd//2]
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)[:, :, None, :]
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)[:, :, None, :]
+    return x * cos.astype(x.dtype) + _rot_half_interleaved(x) * sin.astype(x.dtype)

@@ -1,0 +1,298 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Arch-applicability (DESIGN.md): the WKV6 recurrence is head-local, so we
+shard heads over tp — there is no dependent collective *inside* the
+recurrence to fuse.  The paper's technique applies to the surrounding
+projections: the time-mix output projection and the channel-mix value
+projection are row-parallel matmuls whose AllReduce is fused
+(matmul_allreduce), and the receptance/key/value/gate projections are
+column-parallel.
+
+The recurrence itself is evaluated chunkwise (GLA-style): pairwise decay
+ratios exp(lc_t - lc_s), s<=t, stay in (0,1] so the chunked form is
+numerically safe at any chunk length; cross-chunk state is carried by a
+scan.  ``repro.kernels.rwkv6`` provides the Pallas TPU kernel for this
+hot spot; this module is the XLA fallback and the kernels' oracle source.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.loss import sharded_cross_entropy
+from repro.core.matmul_allreduce import matmul_allreduce
+from repro.models.common import Param, dense_init, key_iter, zeros_init
+from repro.models.layers import embedding_lookup, embedding_init, rms_norm, rms_norm_init
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    head_size: int = 64
+    lora_r: int = 64            # decay/token-shift LoRA rank
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    chunk: int = 64
+    remat: bool = True
+    sub_quadratic: bool = True
+
+    @property
+    def n_heads(self):
+        return self.d_model // self.head_size
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _layer_init(key, cfg: RWKV6Config):
+    ks = key_iter(key)
+    D, R = cfg.d_model, cfg.lora_r
+    tm = {
+        # data-dependent token-shift mixing (5 streams: r,k,v,w,g)
+        "mu": zeros_init((5, D), (None, None), jnp.float32),
+        "lora_a": dense_init(next(ks), (D, 5 * R), ("fsdp", None), cfg.pdtype, scale=0.01),
+        "lora_b": dense_init(next(ks), (5, R, D), (None, None, "fsdp"), cfg.pdtype, scale=0.01),
+        "w_r": dense_init(next(ks), (D, D), ("fsdp", "tp"), cfg.pdtype),
+        "w_k": dense_init(next(ks), (D, D), ("fsdp", "tp"), cfg.pdtype),
+        "w_v": dense_init(next(ks), (D, D), ("fsdp", "tp"), cfg.pdtype),
+        "w_g": dense_init(next(ks), (D, D), ("fsdp", "tp"), cfg.pdtype),
+        # data-dependent decay: w = exp(-exp(w0 + lora_w(x)))
+        "w0": zeros_init((D,), (None,), jnp.float32),
+        "wlora_a": dense_init(next(ks), (D, R), ("fsdp", None), cfg.pdtype, scale=0.01),
+        "wlora_b": dense_init(next(ks), (R, D), (None, "fsdp"), cfg.pdtype, scale=0.01),
+        "u": zeros_init((D,), (None,), jnp.float32),   # bonus
+        "ln_x": rms_norm_init(D, jnp.float32),
+        "w_o": dense_init(next(ks), (D, D), ("tp", "fsdp"), cfg.pdtype),
+    }
+    cm = {
+        "mu": zeros_init((2, D), (None, None), jnp.float32),
+        "w_k": dense_init(next(ks), (D, cfg.d_ff), ("fsdp", "tp"), cfg.pdtype),
+        "w_v": dense_init(next(ks), (cfg.d_ff, D), ("tp", "fsdp"), cfg.pdtype),
+        "w_r": dense_init(next(ks), (D, D), ("fsdp", None), cfg.pdtype),
+    }
+    return {"ln1": rms_norm_init(D, jnp.float32), "tm": tm,
+            "ln2": rms_norm_init(D, jnp.float32), "cm": cm}
+
+
+def rwkv6_init(key, cfg: RWKV6Config):
+    from repro.models.transformer import stacked_init
+    ks = key_iter(key)
+    return {
+        "embed": embedding_init(next(ks), cfg.vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": rms_norm_init(cfg.d_model, jnp.float32),
+        "layers": stacked_init(next(ks), cfg.n_layers, lambda k: _layer_init(k, cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV6 recurrence (per head):  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+#                                      o_t = r_t (diag(u) k_t^T v_t + S_{t-1}... )
+# RWKV6 convention: o_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+# ---------------------------------------------------------------------------
+def wkv6_chunked(r, k, v, w, u, state, chunk: int):
+    """r,k,v,w: [B, T, H, N] (w = per-channel decay in (0,1)); u: [H, N].
+    state: [B, H, N, N] carry.  Returns (o [B,T,H,N], state')."""
+    B, T, H, N = r.shape
+    c = min(chunk, T)
+    n_chunks = T // c
+    rc = r.reshape(B, n_chunks, c, H, N)
+    kc = k.reshape(B, n_chunks, c, H, N)
+    vc = v.reshape(B, n_chunks, c, H, N)
+    lw = jnp.log(jnp.clip(w, 1e-8, 1.0)).reshape(B, n_chunks, c, H, N)
+
+    def chunk_step(S, xs):
+        rr, kk, vv, ll = xs                       # [B, c, H, N]
+        lc = jnp.cumsum(ll, axis=1)               # inclusive cumulative log-decay
+        # intra-chunk: o_t += sum_{s<t} (r_t * exp(lc_{t-1} - lc_s)) . k_s  v_s
+        #   decay from s (exclusive) to t (exclusive of t's own w): prod_{s<i<t} w_i
+        #   = exp(lc_{t-1} - lc_s); plus the diag(u) bonus for s == t.
+        lc_tm1 = lc - ll                          # cumulative up to t-1
+        # pairwise per-channel decay: [B, c(t), c(s), H, N], bounded (0,1]
+        dec = jnp.exp(jnp.clip(lc_tm1[:, :, None] - lc[:, None, :], -60.0, 0.0))
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        dec = dec * mask[None, :, :, None, None]
+        att = jnp.einsum("bthn,btshn,bshn->btsh", rr, dec, kk)
+        o = jnp.einsum("btsh,bshn->bthn", att, vv)
+        # bonus (s == t): r_t . diag(u) k_t  scaling v_t
+        o = o + (rr * u[None, None] * kk).sum(-1, keepdims=True) * vv
+        # inter-chunk: o_t += (r_t * exp(lc_{t-1})) . S
+        rdec = rr * jnp.exp(jnp.clip(lc_tm1, -60.0, 0.0))
+        o = o + jnp.einsum("bthn,bhnm->bthm", rdec, S)
+        # state update: S' = diag(prod w) S + sum_s exp(lc_end - lc_s) k_s^T v_s
+        lc_end = lc[:, -1]                        # [B, H, N]
+        kdec = kk * jnp.exp(jnp.clip(lc_end[:, None] - lc, -60.0, 0.0))
+        S = jnp.exp(jnp.clip(lc_end, -60.0, 0.0))[..., None] * S + \
+            jnp.einsum("bshn,bshm->bhnm", kdec, vv)
+        return S, o
+
+    xs = (rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4))
+    # checkpoint per chunk: without it the scan saves each chunk's pairwise
+    # decay tensor [b,c,c,H,N] for backward — the dominant memory term
+    state, o = lax.scan(jax.checkpoint(chunk_step, prevent_cse=False),
+                        state, xs)
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N)
+    return o, state
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """Single-token recurrence (decode).  r..w: [B, 1, H, N]."""
+    rr, kk, vv, ww = (t[:, 0] for t in (r, k, v, w))
+    kv = jnp.einsum("bhn,bhm->bhnm", kk, vv)
+    o = jnp.einsum("bhn,bhnm->bhm", rr, state + u[None, :, :, None] * kv)
+    state = ww[..., None] * state + kv
+    return o[:, None], state
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+def _ddlerp(x, x_prev, mu, lora_a, lora_b):
+    """RWKV6 data-dependent token shift for 5 streams at once.
+
+    x, x_prev: [B,T,D]; returns [5, B, T, D]."""
+    delta = x_prev - x
+    base = x + delta * mu[:, None, None]          # [5, B, T, D] via broadcast
+    xx = x + delta * mu[0][None, None]            # probe stream for the lora
+    r_ = jnp.tanh(xx @ lora_a)                    # [B,T,5R]
+    R = lora_b.shape[1]
+    r5 = r_.reshape(x.shape[0], x.shape[1], 5, R)
+    adj = jnp.einsum("btfr,frd->fbtd", r5, lora_b)
+    return (base + delta[None] * adj).astype(x.dtype)
+
+
+def _shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def time_mix(ctx, p, cfg: RWKV6Config, x, x_prev=None, state=None):
+    """x: [B,T,D] replicated over tp (heads sharded inside projections)."""
+    B, T, D = x.shape
+    H, N = cfg.n_heads, cfg.head_size
+    xp = _shift(x) if x_prev is None else jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    streams = _ddlerp(x, xp, p["mu"], p["lora_a"], p["lora_b"])
+    xr, xk, xv, xw, xg = streams
+    r = (xr @ p["w_r"]).reshape(B, T, H, N)
+    k = (xk @ p["w_k"]).reshape(B, T, H, N)
+    v = (xv @ p["w_v"]).reshape(B, T, H, N)
+    g = jax.nn.silu(xg @ p["w_g"])
+    lw = p["w0"][None, None] + jnp.tanh(xw @ p["wlora_a"]) @ p["wlora_b"]
+    w = jnp.exp(-jnp.exp(lw.astype(jnp.float32))).reshape(B, T, H, N)
+    u = p["u"].reshape(H, N)
+    if state is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+        o, new_state = wkv6_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                    v.astype(jnp.float32), w, u, state0, cfg.chunk)
+    else:
+        o, new_state = wkv6_step(r.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), w, u, state)
+    o = o.reshape(B, T, D).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"]) * g
+    # row-parallel output projection: the paper's GEMV/GEMM + AllReduce
+    return matmul_allreduce(ctx, o, p["w_o"]), new_state
+
+
+def channel_mix(ctx, p, x, x_prev=None):
+    xp = _shift(x) if x_prev is None else jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    delta = xp - x
+    xk = (x + delta * p["mu"][0][None, None]).astype(x.dtype)
+    xr = (x + delta * p["mu"][1][None, None]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    v = matmul_allreduce(ctx, k, p["w_v"])         # fused GEMM+AllReduce
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    return r * v
+
+
+def train_forward(ctx: ParallelContext, params, cfg: RWKV6Config, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
+    x = x.astype(cfg.cdtype)
+
+    def body(h, lp):
+        a, _ = time_mix(ctx, lp["tm"], cfg, rms_norm(h, lp["ln1"]))
+        h = h + a
+        h = h + channel_mix(ctx, lp["cm"], rms_norm(h, lp["ln2"]))
+        return h, ()
+
+    fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = lax.scan(fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    # reshard to sequence-sharded for the fused vocab-parallel CE
+    x = jax.lax.with_sharding_constraint(x, ctx.sharding("batch", "seq", None))
+    return sharded_cross_entropy(ctx, x, params["embed"]["table"], batch["labels"])
+
+
+def prefill_forward(ctx: ParallelContext, params, cfg: RWKV6Config, batch):
+    """Prefill: forward over the prompt collecting the recurrent state per
+    layer; returns (last-position logits [B,1,V], state)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
+    x = x.astype(cfg.cdtype)
+
+    def body(h, lp):
+        xin = rms_norm(h, lp["ln1"])
+        a, wkv = time_mix(ctx, lp["tm"], cfg, xin)
+        h = h + a
+        xin2 = rms_norm(h, lp["ln2"])
+        h = h + channel_mix(ctx, lp["cm"], xin2)
+        return h, {"tm_x": xin[:, -1:], "cm_x": xin2[:, -1:], "wkv": wkv}
+
+    x, state = lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), state
+
+
+def init_state(cfg: RWKV6Config, batch_size: int):
+    """Decode state: per layer (x_prev_tm, x_prev_cm, wkv state)."""
+    D, H, N = cfg.d_model, cfg.n_heads, cfg.head_size
+    L = cfg.n_layers
+    return {
+        "tm_x": jnp.zeros((L, batch_size, 1, D), cfg.cdtype),
+        "cm_x": jnp.zeros((L, batch_size, 1, D), cfg.cdtype),
+        "wkv": jnp.zeros((L, batch_size, H, N, N), jnp.float32),
+    }
+
+
+def state_logical_specs(cfg, state):
+    return {
+        "tm_x": (None, "batch", None, None),
+        "cm_x": (None, "batch", None, None),
+        "wkv": (None, "batch", "heads", None, None),
+    }
+
+
+def decode_step(ctx: ParallelContext, params, cfg: RWKV6Config, tokens, state, pos):
+    B = tokens.shape[0]
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
+    x = x.astype(cfg.cdtype)
+
+    def body(h, scanned):
+        lp, st = scanned
+        xin = rms_norm(h, lp["ln1"])
+        a, wkv = time_mix(ctx, lp["tm"], cfg, xin, x_prev=st["tm_x"], state=st["wkv"])
+        h = h + a
+        xin2 = rms_norm(h, lp["ln2"])
+        h = h + channel_mix(ctx, lp["cm"], xin2, x_prev=st["cm_x"])
+        return h, {"tm_x": xin, "cm_x": xin2, "wkv": wkv}
+
+    x, new_state = lax.scan(body, x, (params["layers"], state))
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), new_state

@@ -1,0 +1,318 @@
+"""Zamba2: Mamba-2 backbone + shared transformer (attention+MLP) blocks.
+
+Structure (arXiv:2411.15242, adapted): a stack of Mamba2 blocks; every
+``attn_every`` blocks, a *shared* transformer block (single parameter
+set reused at every invocation, with small per-invocation LoRA deltas on
+the QKV projection) is applied to the concatenation [hidden, embedding]
+(2*d_model wide) and projected back to d_model.
+
+The shared attention runs context-parallel (fused ring KV gather), the
+Mamba out-projections and the shared-MLP down-projection use the fused
+matmul+AllReduce — the paper's operators at every collective site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.loss import sharded_cross_entropy
+from repro.core.matmul_allreduce import matmul_allreduce
+from repro.models import mamba2 as m2
+from repro.models.attention import cache_update, context_attention, decode_attention
+from repro.models.common import dense_init, key_iter
+from repro.models.layers import (embedding_init, embedding_lookup, mlp_apply,
+                                 mlp_init, rms_norm, rms_norm_init)
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2Config:
+    name: str
+    n_layers: int               # total mamba blocks
+    d_model: int
+    n_heads: int                # shared-attention heads (on 2*d_model)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_state: int = 64
+    attn_every: int = 6
+    lora_r: int = 16
+    rope_theta: float = 10000.0
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    max_seq: int = 4096
+    remat: bool = True
+    sub_quadratic: bool = True
+
+    @property
+    def d_attn(self):
+        return 2 * self.d_model
+
+    @property
+    def hd(self):
+        return self.d_attn // self.n_heads
+
+    @property
+    def n_groups(self):
+        return self.n_layers // self.attn_every
+
+    @property
+    def n_tail(self):
+        return self.n_layers % self.attn_every
+
+    @property
+    def mamba(self):
+        return m2.Mamba2Config(d_model=self.d_model, d_state=self.d_state)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _shared_block_init(key, cfg: Zamba2Config):
+    ks = key_iter(key)
+    Da = cfg.d_attn
+    qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd
+    return {
+        "ln1": rms_norm_init(Da, jnp.float32),
+        "w_qkv": dense_init(next(ks), (Da, qkv), ("fsdp", None), cfg.pdtype),
+        "w_o": dense_init(next(ks), (cfg.n_heads * cfg.hd, Da), (None, "fsdp"), cfg.pdtype),
+        "ln2": rms_norm_init(Da, jnp.float32),
+        "mlp": mlp_init(next(ks), Da, cfg.d_ff, cfg.pdtype),
+        "w_down": dense_init(next(ks), (Da, cfg.d_model), ("fsdp", None), cfg.pdtype),
+    }
+
+
+def _group_init(key, cfg: Zamba2Config):
+    ks = key_iter(key)
+    qkv = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd
+    return {
+        "mamba": [  # attn_every mamba blocks (unrolled within the group)
+            {"ln": rms_norm_init(cfg.d_model, jnp.float32),
+             "m": m2.mamba2_init(next(ks), cfg.mamba, cfg.pdtype)}
+            for _ in range(cfg.attn_every)
+        ],
+        # per-invocation LoRA on the shared QKV
+        "lora_a": dense_init(next(ks), (cfg.d_attn, cfg.lora_r), ("fsdp", None), cfg.pdtype, scale=0.01),
+        "lora_b": dense_init(next(ks), (cfg.lora_r, qkv), (None, None), cfg.pdtype, scale=0.01),
+    }
+
+
+def zamba2_init(key, cfg: Zamba2Config):
+    from repro.models.transformer import stacked_init
+    ks = key_iter(key)
+    params: dict[str, Any] = {
+        "embed": embedding_init(next(ks), cfg.vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": rms_norm_init(cfg.d_model, jnp.float32),
+        "shared": _shared_block_init(next(ks), cfg),
+        "groups": stacked_init(next(ks), cfg.n_groups, lambda k: _group_init(k, cfg)),
+        "tail": [
+            {"ln": rms_norm_init(cfg.d_model, jnp.float32),
+             "m": m2.mamba2_init(next(ks), cfg.mamba, cfg.pdtype)}
+            for _ in range(cfg.n_tail)
+        ],
+    }
+    return params
+
+
+def _shared_attn(ctx, cfg: Zamba2Config, sp, gp, xcat, *, cache=None, pos=None):
+    """Shared transformer block on [B, T, 2D]."""
+    B, T, Da = xcat.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(xcat, sp["ln1"])
+    qkv = h @ sp["w_qkv"] + (h @ gp["lora_a"]) @ gp["lora_b"]
+    q, k, v = jnp.split(qkv, [Hq * hd, (Hq + Hkv) * hd], axis=-1)
+    q = q.reshape(B, T, Hq, hd)
+    k = k.reshape(B, T, Hkv, hd)
+    v = v.reshape(B, T, Hkv, hd)
+    if cache is None:
+        positions = jnp.arange(T)[None]
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        o = context_attention(ctx, q, k, v, causal=True)
+        new_cache = None
+    else:
+        positions = jnp.broadcast_to(pos, (1, 1))
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        kc = cache_update(ctx, cache["k"], k, pos)
+        vc = cache_update(ctx, cache["v"], v, pos)
+        o = decode_attention(ctx, q, kc, vc, pos)
+        new_cache = {"k": kc, "v": vc}
+    x = xcat + o.reshape(B, T, Hq * hd) @ sp["w_o"]
+    h2 = rms_norm(x, sp["ln2"])
+    x = x + mlp_apply(ctx, sp["mlp"], h2, seq_sharded=cache is None)
+    return x @ sp["w_down"], new_cache
+
+
+def train_forward(ctx: ParallelContext, params, cfg: Zamba2Config, batch):
+    tokens = batch["tokens"]
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
+    x = x.astype(cfg.cdtype)
+    x0 = x
+    shared = params["shared"]
+
+    def group_body(h, gp):
+        for mb in gp["mamba"]:
+            a, _ = m2.mamba2_apply(ctx, mb["m"], cfg.mamba, rms_norm(h, mb["ln"]))
+            h = h + a
+        # shared attention every attn_every blocks, on [h, x0]
+        hs = jax.lax.with_sharding_constraint(
+            jnp.concatenate([h, x0], axis=-1), ctx.sharding("batch", "seq", None))
+        delta, _ = _shared_attn(ctx, cfg, shared, gp, hs)
+        delta = jax.lax.with_sharding_constraint(delta, ctx.sharding("batch", None, None))
+        return h + delta, ()
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    x, _ = lax.scan(lambda h, gp: body(h, gp), x, params["groups"])
+    for mb in params["tail"]:
+        a, _ = m2.mamba2_apply(ctx, mb["m"], cfg.mamba, rms_norm(x, mb["ln"]))
+        x = x + a
+    x = rms_norm(x, params["final_norm"])
+    x = jax.lax.with_sharding_constraint(x, ctx.sharding("batch", "seq", None))
+    return sharded_cross_entropy(ctx, x, params["embed"]["table"], batch["labels"])
+
+
+def prefill_forward(ctx: ParallelContext, params, cfg: Zamba2Config, batch):
+    """Prefill: forward over the prompt collecting SSM/conv states and the
+    shared-attention KV; returns (last-position logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
+    x = x.astype(cfg.cdtype)
+    x0 = x
+    shared = params["shared"]
+
+    def group_body(h, gp):
+        ssms, convs = [], []
+        for mb in gp["mamba"]:
+            a, (s2, c2) = m2.mamba2_apply(ctx, mb["m"], cfg.mamba,
+                                          rms_norm(h, mb["ln"]))
+            h = h + a
+            ssms.append(s2)
+            convs.append(c2)
+        hs = jax.lax.with_sharding_constraint(
+            jnp.concatenate([h, x0], axis=-1), ctx.sharding("batch", "seq", None))
+        Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        hh = rms_norm(hs, shared["ln1"])
+        qkv = hh @ shared["w_qkv"] + (hh @ gp["lora_a"]) @ gp["lora_b"]
+        q, k, v = jnp.split(qkv, [Hq * hd, (Hq + Hkv) * hd], axis=-1)
+        positions = jnp.arange(S)[None]
+        q = apply_rope(q.reshape(B, S, Hq, hd), positions, theta=cfg.rope_theta)
+        k = apply_rope(k.reshape(B, S, Hkv, hd), positions, theta=cfg.rope_theta)
+        v = v.reshape(B, S, Hkv, hd)
+        o = context_attention(ctx, q, k, v, causal=True)
+        xa = hs + o.reshape(B, S, Hq * hd) @ shared["w_o"]
+        h2 = rms_norm(xa, shared["ln2"])
+        xa = xa + mlp_apply(ctx, shared["mlp"], h2, seq_sharded=True)
+        delta = xa @ shared["w_down"]
+        delta = jax.lax.with_sharding_constraint(
+            delta, ctx.sharding("batch", None, None))
+        return h + delta, {"ssm": jnp.stack(ssms), "conv": jnp.stack(convs),
+                           "k": k, "v": v}
+
+    x, ys = lax.scan(group_body, x, params["groups"])
+    tail_ssm, tail_conv = [], []
+    for mb in params["tail"]:
+        a, (s2, c2) = m2.mamba2_apply(ctx, mb["m"], cfg.mamba,
+                                      rms_norm(x, mb["ln"]))
+        x = x + a
+        tail_ssm.append(s2)
+        tail_conv.append(c2)
+    cache = {"mamba": {"ssm": ys["ssm"], "conv": ys["conv"]},
+             "attn": {"k": ys["k"], "v": ys["v"]},
+             "tail": ({"ssm": jnp.stack(tail_ssm), "conv": jnp.stack(tail_conv)}
+                      if params["tail"] else None)}
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), cache
+
+
+def init_cache(cfg: Zamba2Config, batch_size: int):
+    mc = cfg.mamba
+    G, E = cfg.n_groups, cfg.attn_every
+    def mstate(n):
+        return {"ssm": jnp.zeros((n, E, batch_size, mc.n_heads, mc.d_state, mc.head_dim), jnp.float32),
+                "conv": jnp.zeros((n, E, batch_size, mc.conv_width - 1, mc.d_inner + 2 * mc.d_state), cfg.cdtype)}
+    cache = {
+        "mamba": mstate(G),
+        "attn": {"k": jnp.zeros((G, batch_size, cfg.max_seq, cfg.n_kv_heads, cfg.hd), cfg.cdtype),
+                 "v": jnp.zeros((G, batch_size, cfg.max_seq, cfg.n_kv_heads, cfg.hd), cfg.cdtype)},
+        "tail": {"ssm": jnp.zeros((max(cfg.n_tail, 1), batch_size, mc.n_heads, mc.d_state, mc.head_dim), jnp.float32),
+                 "conv": jnp.zeros((max(cfg.n_tail, 1), batch_size, mc.conv_width - 1, mc.d_inner + 2 * mc.d_state), cfg.cdtype)},
+    }
+    return cache
+
+
+def cache_logical_specs(cfg: Zamba2Config, cache):
+    return {
+        "mamba": {"ssm": (None, None, "batch", "heads", None, None),
+                  "conv": (None, None, "batch", None, "tp")},
+        "attn": {"k": (None, "batch", "seq", None, None),
+                 "v": (None, "batch", "seq", None, None)},
+        "tail": {"ssm": (None, "batch", "heads", None, None),
+                 "conv": (None, "batch", None, "tp")},
+    }
+
+
+def decode_step(ctx: ParallelContext, params, cfg: Zamba2Config, tokens, cache, pos):
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
+    x = x.astype(cfg.cdtype)
+    x0 = x
+    shared = params["shared"]
+
+    def group_body(carry, gp):
+        h, mcache, acache, gi = carry
+        for i, mb in enumerate(gp["mamba"]):
+            mst = jax.tree.map(
+                lambda c: lax.dynamic_index_in_dim(
+                    lax.dynamic_index_in_dim(c, gi, 0, keepdims=False),
+                    i, 0, keepdims=False), mcache)
+            a, (s2, c2) = m2.mamba2_apply(
+                ctx, mb["m"], cfg.mamba, rms_norm(h, mb["ln"]),
+                state=mst["ssm"], conv_state=mst["conv"])
+            h = h + a
+            new = {"ssm": s2, "conv": c2}
+            mcache = jax.tree.map(
+                lambda c, n: lax.dynamic_update_slice(
+                    c, n[None, None],
+                    (gi, jnp.int32(i)) + (jnp.int32(0),) * (c.ndim - 2)),
+                mcache, new)
+        hs = jnp.concatenate([h, x0], axis=-1)
+        ast = jax.tree.map(
+            lambda c: lax.dynamic_index_in_dim(c, gi, 0, keepdims=False), acache)
+        delta, new_attn = _shared_attn(ctx, cfg, shared, gp, hs,
+                                       cache=ast, pos=pos)
+        acache = jax.tree.map(
+            lambda c, n: lax.dynamic_update_slice_in_dim(c, n[None], gi, axis=0),
+            acache, new_attn)
+        return (h + delta, mcache, acache, gi + 1), ()
+
+    (x, new_mamba, new_attn, _), _ = lax.scan(
+        group_body, (x, cache["mamba"], cache["attn"], jnp.int32(0)),
+        params["groups"])
+    new_tail_ssm, new_tail_conv = [], []
+    for i, mb in enumerate(params["tail"]):
+        a, (s2, c2) = m2.mamba2_apply(
+            ctx, mb["m"], cfg.mamba, rms_norm(x, mb["ln"]),
+            state=cache["tail"]["ssm"][i], conv_state=cache["tail"]["conv"][i])
+        x = x + a
+        new_tail_ssm.append(s2)
+        new_tail_conv.append(c2)
+    new_cache = {"mamba": new_mamba, "attn": new_attn,
+                 "tail": ({"ssm": jnp.stack(new_tail_ssm), "conv": jnp.stack(new_tail_conv)}
+                          if params["tail"] else cache["tail"])}
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"].astype(x.dtype))
+    return logits.astype(jnp.float32), new_cache

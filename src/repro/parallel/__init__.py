@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ParallelContext,
+    logical_to_sharding,
+    param_sharding_rules,
+)

@@ -1,0 +1,140 @@
+"""Sharding infrastructure: logical axes -> mesh axes, parallel context.
+
+The production mesh is (data, model) single-pod or (pod, data, model)
+multi-pod.  ``pod`` always composes with ``data`` into the DP/FSDP
+dimension so the same model code runs on both meshes.
+
+Logical axes used throughout the model zoo:
+
+  batch     -> (pod, data)         activation batch dim
+  seq       -> model               sequence dim under sequence/context parallelism
+  fsdp      -> (pod, data)         FSDP shard dim of parameters / optimizer state
+  tp        -> model               tensor-parallel dim (d_ff columns, heads, vocab, experts)
+  none      -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionConfig:
+    """Controls how dependent compute+collective pairs execute.
+
+    mode:
+      "bulk"   - bulk-synchronous baseline: full compute kernel, then the
+                 collective (what RCCL/NCCL-style libraries give you).
+      "fused"  - the paper's technique, TPU-adapted: the op is decomposed
+                 into chunks; each chunk's collective is issued as soon as
+                 its compute finishes, so XLA's latency-hiding scheduler
+                 overlaps wire time with the remaining chunks' compute.
+      "kernel" - Pallas device-initiated kernels (remote DMA) where
+                 available; falls back to "fused" elsewhere.
+    schedule:
+      "comm_aware"  - remote-destined chunks are computed first, the
+                      locally-consumed chunk last (paper Fig. 6b / 7b).
+      "oblivious"   - chunks computed in natural order (paper's baseline
+                      scheduling; exists to reproduce Fig. 14).
+    chunks: number of chunks per ring step multiplier; 0 means one chunk
+      per peer (ring world size), the paper's slice-per-peer granularity.
+    """
+
+    mode: str = "fused"
+    schedule: str = "comm_aware"
+    chunks: int = 0
+    fuse_ag_matmul: bool = True
+    fuse_matmul_rs: bool = True
+    fuse_moe_a2a: bool = True
+    fuse_embed_a2a: bool = True
+    fuse_kv_ag: bool = True
+
+    def resolve(self, which: str) -> str:
+        """Effective mode for one of the fused-op families."""
+        if self.mode == "bulk" or not getattr(self, f"fuse_{which}"):
+            return "bulk"
+        return self.mode
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """Mesh + axis-role assignment threaded through the model zoo."""
+
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fusion: FusionConfig = dataclasses.field(default_factory=FusionConfig)
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, fusion: FusionConfig | None = None) -> "ParallelContext":
+        names = mesh.axis_names
+        dp = tuple(n for n in names if n in ("pod", "data", "replica"))
+        tp = "model" if "model" in names else names[-1]
+        return cls(mesh=mesh, dp_axes=dp, tp_axis=tp, fusion=fusion or FusionConfig())
+
+    # -- sizes -----------------------------------------------------------
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp(self) -> int:
+        s = 1
+        for a in self.dp_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def world(self) -> int:
+        return self.dp * self.tp
+
+    # -- spec helpers ----------------------------------------------------
+    @property
+    def batch_axes(self):
+        if not self.dp_axes:
+            return None
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*[self._resolve(ax) for ax in logical])
+
+    def _resolve(self, ax: str | None):
+        if ax is None or ax == "none":
+            return None
+        if ax == "batch" or ax == "fsdp":
+            return self.batch_axes
+        if ax in ("seq", "tp", "model", "expert", "heads", "vocab"):
+            return self.tp_axis
+        if ax == "ep":  # decode expert-parallel world: (data, model)
+            non_pod = tuple(a for a in self.mesh.axis_names if a != "pod")
+            return non_pod
+        if ax == "world":  # flattened full-world axis (DLRM embedding A2A)
+            return tuple(self.dp_axes) + (self.tp_axis,)
+        raise ValueError(f"unknown logical axis {ax!r}")
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def with_fusion(self, fusion: FusionConfig) -> "ParallelContext":
+        return dataclasses.replace(self, fusion=fusion)
+
+
+def logical_to_sharding(ctx: ParallelContext, logical: Sequence[str | None]) -> NamedSharding:
+    return ctx.sharding(*logical)
+
+
+def param_sharding_rules(ctx: ParallelContext, params: Any, logical_tree: Any) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda spec: ctx.sharding(*spec),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shard_like(ctx: ParallelContext, x, *logical: str | None):
+    """with_sharding_constraint shorthand used inside jit-traced model code."""
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(*logical))

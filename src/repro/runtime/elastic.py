@@ -1,0 +1,44 @@
+"""Elastic scaling: re-shard a live state pytree onto a different mesh.
+
+When the world shrinks (lost pod) or grows (capacity arrives), training
+resumes by (1) re-building the mesh, (2) re-deriving NamedShardings from
+the *logical* spec tree — which is mesh-independent — and (3) placing
+either the live state or the latest checkpoint with the new shardings.
+Divisibility is re-checked; batch sizes rescale to keep per-device load.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.parallel.sharding import ParallelContext
+
+
+def reshard_tree(tree, logical_specs, new_ctx: ParallelContext):
+    """Place every leaf with the sharding its logical spec implies on the
+    new mesh.  Works device->device (live resize) and host->device
+    (restore)."""
+    def leaf_sharding(spec):
+        return new_ctx.sharding(*spec)
+
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+    shardings = jax.tree.map(leaf_sharding, logical_specs, is_leaf=is_spec)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings), shardings
+
+
+def rescale_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
+    """Keep per-device batch constant under world resize."""
+    per_dev = max(1, global_batch // old_dp)
+    return per_dev * new_dp
+
+
+def check_divisibility(ctx: ParallelContext, d_ff: int, vocab: int, seq: int):
+    problems = []
+    if d_ff % ctx.tp:
+        problems.append(f"d_ff {d_ff} % tp {ctx.tp}")
+    if vocab % ctx.tp:
+        problems.append(f"vocab {vocab} % tp {ctx.tp}")
+    if seq % ctx.tp:
+        problems.append(f"seq {seq} % tp {ctx.tp}")
+    return problems

@@ -1,0 +1,82 @@
+"""Fault-tolerant training supervisor.
+
+Wraps the step loop with: periodic (async) checkpoints, automatic
+restore-and-retry on failure with bounded restarts, and a straggler
+watchdog.  On a real cluster the inner failure is a lost host /
+NCCL-equivalent timeout surfacing as a RuntimeError from the collective;
+here any exception from the step function triggers the same path, which
+is what the chaos tests inject.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Iterator
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.straggler import StragglerMonitor
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 50
+    keep: int = 3
+    max_restarts: int = 3
+    async_save: bool = True
+
+
+class TrainSupervisor:
+    """Drives (state, batch) -> (state, metrics) with checkpoint/restart."""
+
+    def __init__(self, cfg: SupervisorConfig, step_fn: Callable,
+                 state_shardings=None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state_shardings = state_shardings
+        self.manager = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep,
+                                         async_save=cfg.async_save)
+        self.straggler = StragglerMonitor()
+        self.restarts = 0
+
+    def maybe_restore(self, state):
+        restored = self.manager.restore_latest(state, self.state_shardings)
+        if restored is None:
+            return state, 0
+        new_state, step = restored
+        log.info("restored checkpoint at step %d", step)
+        return new_state, step
+
+    def run(self, state, batches: Iterator, num_steps: int,
+            start_step: int = 0, on_metrics: Callable | None = None):
+        step = start_step
+        state, ckpt_step = self.maybe_restore(state)
+        step = max(step, ckpt_step)
+        it = iter(batches)
+        while step < num_steps:
+            batch = next(it)
+            t0 = time.monotonic()
+            try:
+                state, metrics = self.step_fn(state, batch)
+                # touching a metric forces dispatch, surfacing async errors
+                _ = float(metrics["loss"])
+            except Exception as e:  # node failure path
+                self.restarts += 1
+                log.error("step %d failed (%s); restart %d/%d", step, e,
+                          self.restarts, self.cfg.max_restarts)
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                state, ckpt_step = self.maybe_restore(state)
+                step = ckpt_step
+                continue
+            self.straggler.record(time.monotonic() - t0)
+            step += 1
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            if step % self.cfg.checkpoint_every == 0:
+                self.manager.save(step, state)
+        self.manager.wait()
+        return state, step

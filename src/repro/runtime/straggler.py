@@ -1,0 +1,44 @@
+"""Straggler detection + execution-skew statistics.
+
+The paper's Fig. 14 measures inter-node execution skew under
+communication-aware vs -oblivious scheduling; this monitor computes the
+same statistic online from per-step wall times and flags persistent
+stragglers (steps slower than median * threshold), the trigger for
+mitigation (re-shard / evict) at cluster scale.
+"""
+from __future__ import annotations
+
+import statistics
+from collections import deque
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 1.5):
+        self.window = deque(maxlen=window)
+        self.threshold = threshold
+        self.flags = 0
+
+    def record(self, step_time: float):
+        self.window.append(step_time)
+        if len(self.window) >= 10:
+            med = statistics.median(self.window)
+            if step_time > self.threshold * med:
+                self.flags += 1
+                return True
+        return False
+
+    @property
+    def skew(self) -> float:
+        """max/median - 1 over the window (the Fig. 14 metric)."""
+        if len(self.window) < 2:
+            return 0.0
+        med = statistics.median(self.window)
+        return max(self.window) / med - 1.0 if med > 0 else 0.0
+
+    def summary(self):
+        if not self.window:
+            return {}
+        return {"median_s": statistics.median(self.window),
+                "max_s": max(self.window),
+                "skew": self.skew,
+                "flags": self.flags}

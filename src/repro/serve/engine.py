@@ -1,0 +1,86 @@
+"""Batched decode engine: continuous batching over a shared KV cache.
+
+Serving substrate for the inference-shaped cells (decode_32k, long_500k):
+a slot-based scheduler admits requests into a fixed decode batch, runs
+the jitted ``decode_step`` (whose FFN is the paper's fused
+GEMV+AllReduce), samples greedily via the vocab-sharded argmax, and
+retires finished sequences.  Token-level continuous batching — a slot is
+re-admitted the step after its sequence finishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list
+    max_new: int = 32
+    tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, decode_fn: Callable, init_cache_fn: Callable,
+                 batch_size: int, eos_id: int = -1):
+        """decode_fn(tokens [B,1], cache, pos) -> (logits [B,1,V], cache)."""
+        self.decode_fn = decode_fn
+        self.batch = batch_size
+        self.eos = eos_id
+        self.cache = init_cache_fn(batch_size)
+        self.slots: list[Request | None] = [None] * batch_size
+        self.queue: list[Request] = []
+        self.cur_tok = np.zeros((batch_size, 1), np.int32)
+        self.pos = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # prompt is consumed token-by-token (prefill via decode);
+                # production would run a separate prefill graph.
+                self.cur_tok[i, 0] = req.prompt[0]
+                req._consumed = 1
+
+    def step(self):
+        self._admit()
+        logits, self.cache = self.decode_fn(
+            jnp.asarray(self.cur_tok), self.cache, jnp.int32(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        self.pos += 1
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req._consumed < len(req.prompt):
+                self.cur_tok[i, 0] = req.prompt[req._consumed]
+                req._consumed += 1
+                continue
+            tok = int(nxt[i])
+            req.tokens.append(tok)
+            self.cur_tok[i, 0] = tok
+            if tok == self.eos or len(req.tokens) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+        return nxt, finished
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        finished = []
+        steps = 0
+        while (any(s is not None for s in self.slots) or self.queue) \
+                and steps < max_steps:
+            _, fin = self.step()
+            finished.extend(fin)
+            steps += 1
+        return finished

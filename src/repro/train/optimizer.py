@@ -1,0 +1,161 @@
+"""Optimizers: AdamW (dtype-configurable state) and Adafactor-lite.
+
+State dtype matters at assigned-architecture scale: deepseek-v3-671b with
+f32 Adam moments does not fit 512 v5e chips; bf16 moments (or Adafactor)
+do.  Configs pick via ``optimizer_state_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"   # bf16 for the largest configs
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(cfg: OptimizerConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.betas
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / (1 - b1 ** step.astype(jnp.float32))
+        vh = v32 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, lr
+
+
+# ---------------------------------------------------------------------------
+# Adafactor-lite (factored second moment; for the 100B+ configs)
+# ---------------------------------------------------------------------------
+def adafactor_init(cfg: OptimizerConfig, params):
+    def make(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"v": jax.tree.map(make, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1) ** -0.8
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        if p.ndim >= 2:
+            g2 = g * g + 1e-30
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]) / \
+                jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], 1e-30)
+            u = g / jnp.sqrt(denom + 1e-30)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": decay * v["v"] + (1 - decay) * g * g}
+            u = g / jnp.sqrt(nv["v"] + 1e-30)
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        new_p = p.astype(jnp.float32) - lr * u
+        if p.ndim >= 2:
+            new_p = new_p - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), nv
+
+    is_v = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    g_flat, treedef = jax.tree.flatten(grads)
+    p_flat = jax.tree.leaves(params)
+    v_flat = jax.tree.leaves(state["v"], is_leaf=is_v)
+    out = [upd(g, v, p) for g, v, p in zip(g_flat, v_flat, p_flat)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+    new_v = jax.tree.unflatten(treedef, [t[1] for t in out])
+    return new_params, {"v": new_v, "step": step}, lr
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, adamw_update
+    if cfg.name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(cfg.name)
+
+
+def optimizer_state_specs(cfg: OptimizerConfig, param_specs):
+    """Optimizer state inherits each parameter's sharding."""
+    if cfg.name == "adamw":
+        return {"mu": param_specs, "nu": param_specs, "step": ()}
+
+    def make(spec):
+        # factored state drops the last / second-to-last axis spec
+        s = tuple(spec)
+        if len(s) >= 2:
+            return {"vr": s[:-1], "vc": s[:-2] + s[-1:]}
+        return {"v": s}
+
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+    return {"v": jax.tree.map(make, param_specs, is_leaf=is_spec),
+            "step": ()}

@@ -1,0 +1,85 @@
+"""train_step factory: loss -> grads -> clip -> (compress) -> optimizer.
+
+Microbatch gradient accumulation (for memory) is a scan over microbatch
+slices; remat policy lives in the model configs.  The returned step is a
+pure function ready for jax.jit with in/out shardings from the spec
+trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.grad_compression import CompressionConfig, compress_decompress, init_residuals
+from repro.train.optimizer import OptimizerConfig, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+    compression: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
+    microbatches: int = 1
+
+
+def init_train_state(tc: TrainConfig, params):
+    opt_init, _ = make_optimizer(tc.optimizer)
+    state = {"params": params, "opt": opt_init(tc.optimizer, params)}
+    if tc.compression.scheme != "none":
+        state["residuals"] = init_residuals(tc.compression, params)
+    return state
+
+
+def build_train_step(loss_fn: Callable, tc: TrainConfig):
+    """loss_fn(params, batch) -> scalar loss."""
+    _, opt_update = make_optimizer(tc.optimizer)
+
+    def split_micro(batch, i):
+        def sl(x):
+            mb = x.shape[0] // tc.microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        return jax.tree.map(sl, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def acc_body(carry, i):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, split_micro(batch, i))
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (loss_acc + l, g_acc), ()
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), g0),
+                jnp.arange(tc.microbatches))
+            loss = loss / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.optimizer.grad_clip)
+        new_state = dict(state)
+        if tc.compression.scheme != "none":
+            grads, new_state["residuals"] = compress_decompress(
+                tc.compression, grads, state["residuals"])
+        new_params, new_opt, lr = opt_update(tc.optimizer, grads, state["opt"], params)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": new_opt["step"]}
+        return new_state, metrics
+
+    return train_step
+
+
+def train_state_specs(tc: TrainConfig, param_specs):
+    from repro.train.optimizer import optimizer_state_specs
+
+    specs = {"params": param_specs,
+             "opt": optimizer_state_specs(tc.optimizer, param_specs)}
+    if tc.compression.scheme != "none":
+        specs["residuals"] = param_specs
+    return specs

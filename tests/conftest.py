@@ -1,0 +1,34 @@
+import os
+
+# 8 local CPU devices for multi-device shard_map tests (NOT the 512-device
+# production mesh — that is exercised only by launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.parallel.sharding import FusionConfig, ParallelContext  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def ctx(mesh):
+    return ParallelContext.from_mesh(mesh)
+
+
+@pytest.fixture(scope="session")
+def ctx1d():
+    m = jax.make_mesh((8,), ("model",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+    return ParallelContext.from_mesh(m)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

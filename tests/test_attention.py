@@ -1,0 +1,95 @@
+"""Context/decode attention vs dense reference; ring custom VJP vs autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (cache_update, context_attention,
+                                    decode_attention)
+
+
+def _ref(q, k, v, causal=True, window=None, scale=None, cap=None):
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    scale = scale or hd ** -0.5
+    q5 = q.reshape(B, S, Hkv, g, hd)
+    s = np.einsum("bqhgd,bkhd->bhgqk", q5, k) * scale
+    if cap is not None:
+        s = np.tanh(s / cap) * cap
+    i, j = np.arange(S)[:, None], np.arange(S)[None, :]
+    mask = np.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    s = np.where(mask[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bhgqk,bkhd->bhgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, hd)
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 24, None), (True, None, 30.0), (False, None, None)])
+@pytest.mark.parametrize("mode", ["bulk", "fused"])
+def test_context_attention(ctx, rng, causal, window, cap, mode):
+    B, S, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    q = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    out = jax.jit(lambda q, k, v: context_attention(
+        ctx, q, k, v, causal=causal, window=window, softcap_val=cap,
+        mode=mode, q_block=16, kv_block=16))(q, k, v)
+    np.testing.assert_allclose(np.asarray(out),
+                               _ref(q, k, v, causal, window, cap=cap),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 24, None), (True, None, 30.0)])
+def test_ring_attention_vjp(ctx, rng, causal, window, cap):
+    B, S, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    q = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    co = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+
+    def loss(mode):
+        return lambda q, k, v: (context_attention(
+            ctx, q, k, v, causal=causal, window=window, softcap_val=cap,
+            mode=mode, q_block=16, kv_block=16).astype(jnp.float32) * co).sum()
+
+    gf = jax.jit(jax.grad(loss("fused"), argnums=(0, 1, 2)))(q, k, v)
+    gb = jax.jit(jax.grad(loss("bulk"), argnums=(0, 1, 2)))(q, k, v)
+    for a, b in zip(gf, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefix(ctx, rng):
+    B, S_max, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    pos = 37
+    q = rng.standard_normal((B, S_max, Hq, hd)).astype(np.float32)
+    k = rng.standard_normal((B, S_max, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, S_max, Hkv, hd)).astype(np.float32)
+    kc = np.zeros_like(k)
+    vc = np.zeros_like(v)
+    kc[:, :pos + 1] = k[:, :pos + 1]
+    vc[:, :pos + 1] = v[:, :pos + 1]
+    ref = _ref(q[:, :pos + 1], k[:, :pos + 1], v[:, :pos + 1])[:, pos:pos + 1]
+    out = jax.jit(lambda q, kc, vc, p: decode_attention(ctx, q, kc, vc, p))(
+        q[:, pos:pos + 1], kc, vc, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_cache_update_touches_one_slot(ctx, rng):
+    B, S_max, Hkv, hd = 4, 64, 2, 16
+    cache = rng.standard_normal((B, S_max, Hkv, hd)).astype(np.float32)
+    new = rng.standard_normal((B, 1, Hkv, hd)).astype(np.float32)
+    out = jax.jit(lambda c, n, p: cache_update(ctx, c, n, p))(
+        cache, new, jnp.int32(41))
+    out = np.asarray(out)
+    np.testing.assert_allclose(out[:, 41], new[:, 0], rtol=1e-6)
+    np.testing.assert_allclose(np.delete(out, 41, 1), np.delete(cache, 41, 1),
+                               rtol=1e-6)

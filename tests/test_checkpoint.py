@@ -1,0 +1,94 @@
+"""Checkpointing: roundtrip, atomicity, GC, async, cross-mesh (elastic)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.elastic import rescale_batch, reshard_tree
+
+
+def _tree(rng):
+    return {"params": {"w": rng.standard_normal((8, 16)).astype(np.float32),
+                       "b": rng.standard_normal((16,)).astype(np.float32)},
+            "opt": {"step": np.int32(7)}}
+
+
+def test_roundtrip(tmp_path, rng):
+    tree = _tree(rng)
+    path = save_checkpoint(str(tmp_path), 7, tree)
+    restored, step = restore_checkpoint(path, tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_no_tmp_left(tmp_path, rng):
+    save_checkpoint(str(tmp_path), 1, _tree(rng))
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+def test_manager_keep_k_and_latest(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = _tree(rng)
+    for s in [10, 20, 30, 40]:
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [30, 40]
+    restored = mgr.restore_latest(tree)
+    assert restored is not None and restored[1] == 40
+
+
+def test_async_save(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = _tree(rng)
+    mgr.save(5, tree)
+    mgr.wait()
+    restored, step = mgr.restore_latest(tree)
+    assert step == 5
+
+
+def test_shape_mismatch_rejected(tmp_path, rng):
+    tree = _tree(rng)
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    bad = {"params": {"w": np.zeros((4, 4), np.float32),
+                      "b": tree["params"]["b"]},
+           "opt": {"step": np.int32(0)}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, bad)
+
+
+def test_elastic_cross_mesh_restore(tmp_path, rng):
+    """Checkpoint on an 8-device mesh, restore re-sharded onto 4 devices."""
+    from repro.parallel.sharding import ParallelContext
+
+    mesh8 = jax.make_mesh((2, 4), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx8 = ParallelContext.from_mesh(mesh8)
+    devs = np.array(jax.devices()[:4]).reshape(2, 2)
+    mesh4 = jax.sharding.Mesh(devs, ("data", "model"))
+    ctx4 = ParallelContext.from_mesh(mesh4)
+
+    tree = {"w": rng.standard_normal((8, 16)).astype(np.float32)}
+    specs = {"w": ("fsdp", "tp")}
+    placed8, _ = reshard_tree(tree, specs, ctx8)
+    path = save_checkpoint(str(tmp_path), 3, placed8)
+    restored, step = restore_checkpoint(path, tree)
+    placed4, sh4 = reshard_tree(restored, specs, ctx4)
+    np.testing.assert_array_equal(np.asarray(placed4["w"]), tree["w"])
+    assert placed4["w"].sharding.mesh.shape["model"] == 2
+    assert rescale_batch(256, old_dp=16, new_dp=8) == 128
+
+
+def test_straggler_monitor():
+    from repro.runtime.straggler import StragglerMonitor
+
+    mon = StragglerMonitor(window=20, threshold=1.5)
+    for _ in range(15):
+        mon.record(0.1)
+    assert not mon.record(0.1)
+    assert mon.record(1.0)  # 10x median -> flagged
+    assert mon.skew > 1.0
+    assert mon.summary()["flags"] >= 1

@@ -1,0 +1,36 @@
+"""Sharded cross-entropy: forward + custom VJP vs dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.loss import sharded_cross_entropy
+
+
+def _dense(x, e, y, cap=None):
+    lg = jnp.einsum("bsd,vd->bsv", x, e)
+    if cap:
+        lg = jnp.tanh(lg / cap) * cap
+    m = jax.lax.stop_gradient(lg.max(-1, keepdims=True))
+    lse = jnp.log(jnp.exp(lg - m).sum(-1)) + m[..., 0]
+    nll = lse - jnp.take_along_axis(lg, y[..., None], -1)[..., 0]
+    return nll.mean()
+
+
+@pytest.mark.parametrize("cap", [None, 20.0])
+@pytest.mark.parametrize("S", [16, 2])  # seq-sharded and replicated paths
+def test_ce_matches_dense(ctx, rng, cap, S):
+    B, D, V = 4, 32, 64
+    x = rng.standard_normal((B, S, D)).astype(np.float32)
+    e = rng.standard_normal((V, D)).astype(np.float32)
+    y = rng.integers(0, V, (B, S)).astype(np.int32)
+    l1 = jax.jit(lambda x, e: sharded_cross_entropy(ctx, x, e, y,
+                                                    logit_softcap=cap))(x, e)
+    np.testing.assert_allclose(float(l1), float(_dense(x, e, y, cap)), rtol=1e-4)
+
+    g = jax.jit(jax.grad(lambda x, e: sharded_cross_entropy(
+        ctx, x, e, y, logit_softcap=cap), argnums=(0, 1)))(x, e)
+    gr = jax.grad(lambda x, e: _dense(x, e, y, cap), argnums=(0, 1))(x, e)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-5)

@@ -1,0 +1,90 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduling import reduce_ring_chunk_order, ring_offsets
+from repro.train.grad_compression import _dequantize_int8, _quantize_int8
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 64))
+@settings(**SETTINGS)
+def test_ring_offsets_cover_all_peers(world):
+    for schedule in ["comm_aware", "oblivious"]:
+        offs = ring_offsets(world, schedule)
+        assert sorted(offs) == list(range(world))
+    # comm-aware: local chunk strictly last
+    assert ring_offsets(world, "comm_aware")[-1] == 0
+
+
+@given(st.integers(2, 64))
+@settings(**SETTINGS)
+def test_reduce_ring_order_is_permutation(world):
+    for schedule in ["comm_aware", "oblivious"]:
+        order = reduce_ring_chunk_order(world, schedule)
+        assert sorted(o % world for o in order) == list(range(world))
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=256))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(values):
+    g = jnp.asarray(np.array(values, np.float32))
+    q, scale = _quantize_int8(g)
+    deq = _dequantize_int8(q, scale)
+    # error bounded by half a quantization step
+    assert float(jnp.abs(deq - g).max()) <= float(scale) * 0.5 + 1e-6
+
+
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_moe_routing_conserves_tokens(e_pow, k, seed):
+    """Every non-dropped (token, expert) slot holds exactly one token."""
+    E = 2 ** e_pow
+    K = min(k, E)
+    T = 32
+    rng = np.random.default_rng(seed)
+    gate_i = np.stack([rng.choice(E, size=K, replace=False) for _ in range(T)])
+    flat_e = gate_i.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    C = int(np.ceil(T * K / E))
+    valid = np.asarray(pos) < C
+    # no two assignments share an (expert, slot)
+    slots = list(zip(flat_e[valid].tolist(), np.asarray(pos)[valid].tolist()))
+    assert len(slots) == len(set(slots))
+    # per-expert counts within capacity
+    counts = np.bincount(flat_e[valid], minlength=E)
+    assert (counts <= C).all()
+
+
+@given(st.integers(0, 10_000), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(seed, pos):
+    from repro.models.rope import apply_rope
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((1, 1, 2, 16)).astype(np.float32)
+    y = apply_rope(jnp.asarray(x), jnp.array([[pos]]))
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y)),
+                               np.linalg.norm(x), rtol=1e-4)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip_random_trees(tmp_path_factory, seed):
+    from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(seed)
+    tree = {"a": rng.standard_normal((rng.integers(1, 8),)).astype(np.float32),
+            "b": [rng.integers(0, 100, (2, 3)).astype(np.int32)],
+            "c": {"d": np.float32(rng.random())}}
+    d = tmp_path_factory.mktemp("ckpt")
+    path = save_checkpoint(str(d), seed, tree)
+    restored, step = restore_checkpoint(path, tree)
+    assert step == seed
+    for x, y in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,52 @@
+"""Chunked recurrences (WKV6 / SSD) == per-step scan references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.mamba2 import ssd_chunked, ssd_step
+from repro.models.rwkv6 import wkv6_chunked, wkv6_step
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_wkv6_chunked_vs_step(rng, chunk):
+    B, T, H, N = 2, 32, 3, 8
+    r = rng.standard_normal((B, T, H, N)).astype(np.float32)
+    k = rng.standard_normal((B, T, H, N)).astype(np.float32) * 0.3
+    v = rng.standard_normal((B, T, H, N)).astype(np.float32)
+    w = np.exp(-np.exp(rng.standard_normal((B, T, H, N)).astype(np.float32)))
+    u = rng.standard_normal((H, N)).astype(np.float32) * 0.1
+    o_c, S_c = jax.jit(lambda *a: wkv6_chunked(*a, chunk))(
+        r, k, v, w, u, jnp.zeros((B, H, N, N)))
+    S = jnp.zeros((B, H, N, N))
+    outs = []
+    for t in range(T):
+        o, S = wkv6_step(r[:, t:t + 1], k[:, t:t + 1], v[:, t:t + 1],
+                         w[:, t:t + 1], u, S)
+        outs.append(np.asarray(o)[:, 0])
+    np.testing.assert_allclose(np.asarray(o_c), np.stack(outs, 1),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 32])
+def test_ssd_chunked_vs_step(rng, chunk):
+    b, T, H, P, N = 2, 32, 3, 8, 4
+    x = rng.standard_normal((b, T, H, P)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((b, T, H))).astype(np.float32) * 0.5
+    A_log = rng.standard_normal(H).astype(np.float32) * 0.3
+    B_ = rng.standard_normal((b, T, N)).astype(np.float32)
+    C_ = rng.standard_normal((b, T, N)).astype(np.float32)
+    y_c, S_c = jax.jit(lambda *a: ssd_chunked(*a, chunk))(
+        x, dt, A_log, B_, C_, jnp.zeros((b, H, N, P)))
+    S = jnp.zeros((b, H, N, P))
+    ys = []
+    for t in range(T):
+        y, S = ssd_step(x[:, t:t + 1], dt[:, t:t + 1], A_log,
+                        B_[:, t:t + 1], C_[:, t:t + 1], S)
+        ys.append(np.asarray(y)[:, 0])
+    np.testing.assert_allclose(np.asarray(y_c), np.stack(ys, 1),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,72 @@
+"""HLO analysis parser: loop multipliers, dot flops, collective bytes."""
+import numpy as np
+
+from repro.launch.roofline import (hlo_analysis, model_flops,
+                                   parse_collective_bytes, roofline_terms)
+
+SYNTH = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cp = f32[8,16]{1,0} collective-permute(%dot.1), source_target_pairs={{0,1},{1,0}}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %cp)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %a)
+  %wh = (s32[], f32[8,16]) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ar = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+  ROOT %red = f32[8,16]{1,0} all-reduce(%ar), replica_groups={{0,1}}, to_apply=%cond.1
+}
+"""
+
+
+def test_hlo_analysis_loop_multiplier():
+    res = hlo_analysis(SYNTH)
+    # dot: 2*8*16*16 flops, x10 loop trips
+    assert res["flops"] == 2 * 8 * 16 * 16 * 10
+    # collective-permute inside the loop: 8*16*4 bytes x10; all-reduce once
+    assert res["colls"]["collective-permute"] == 8 * 16 * 4 * 10
+    assert res["colls"]["all-reduce"] == 8 * 16 * 4
+    assert res["counts"]["collective-permute"] == 10
+
+
+def test_parse_collective_bytes_kinds():
+    res = parse_collective_bytes(SYNTH)
+    assert res["all-reduce"] == 8 * 16 * 4
+
+
+def test_roofline_terms_dominance():
+    r = roofline_terms(flops=197e12, bytes_accessed=0.0, collective_bytes=0.0)
+    assert r["dominant"] == "compute" and abs(r["compute_s"] - 1.0) < 1e-9
+    r = roofline_terms(flops=0.0, bytes_accessed=819e9, collective_bytes=0.0)
+    assert r["dominant"] == "memory" and abs(r["memory_s"] - 1.0) < 1e-9
+    r = roofline_terms(flops=0.0, bytes_accessed=0.0, collective_bytes=50e9)
+    assert r["dominant"] == "collective" and abs(r["collective_s"] - 1.0) < 1e-9
+
+
+def test_model_flops_moe_active():
+    from repro.configs.registry import get_arch
+
+    bundle = get_arch("deepseek-v3-671b")
+    n = 671_000_000_000
+    mf_train = model_flops(bundle, "train_4k", n)
+    # active params ~37B -> 6*N_active*D must be far below 6*N*D
+    assert mf_train < 6 * n * 4096 * 256 * 0.12
+    assert mf_train > 6 * 20e9 * 4096 * 256
