@@ -5,6 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import pct_reduction, timeit
+from repro.compat import make_mesh
 
 
 def run(report):
@@ -15,8 +16,7 @@ def run(report):
     from repro.launch.mesh import make_host_mesh
     from repro.parallel.sharding import ParallelContext
 
-    m = jax.make_mesh((8,), ("model",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+    m = make_mesh((8,), ("model",))
     ctx1d = ParallelContext.from_mesh(m)
     rng = np.random.default_rng(0)
     x = rng.standard_normal((4, 64)).astype(np.float32)

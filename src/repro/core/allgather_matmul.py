@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import ring_permute, ring_reduce_scatter_compute
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 
 def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None):
@@ -51,7 +52,7 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None):
             out = lax.dynamic_update_slice_in_dim(out, buf @ wl, src * s_loc, axis=1)
         return out
 
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=ctx.mesh,
         in_specs=(P(dp, ctx.tp_axis, None), P(None, ctx.tp_axis)),
@@ -83,7 +84,7 @@ def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
 
         return ring_reduce_scatter_compute(partial, axis, schedule=schedule)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=ctx.mesh,
         in_specs=(P(dp, None, ctx.tp_axis), P(ctx.tp_axis, None)),
@@ -103,7 +104,7 @@ def allgather_seq(ctx: ParallelContext, x, *, axis_pos: int = 1):
     def local_fn(xl):
         return lax.all_gather(xl, ctx.tp_axis, axis=axis_pos, tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(*in_spec),), out_specs=P(*out_spec), check_vma=False,
     )(x)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.scheduling import ring_offsets
+from repro.compat import axis_size, optimization_barrier
 
 
 def _ring_perm(n: int, shift: int = 1):
@@ -33,7 +34,7 @@ def ring_permute(x, axis_name: str, n: int, shift: int = 1):
     through the permute ("convert of permute == permute of convert"),
     silently doubling wire bytes; the barrier keeps the narrow dtype on
     the wire."""
-    return lax.ppermute(lax.optimization_barrier(x), axis_name,
+    return lax.ppermute(optimization_barrier(x), axis_name,
                         _ring_perm(n, shift))
 
 
@@ -59,7 +60,7 @@ def ring_reduce_scatter_compute(
     and only then runs the pure ring reduce — communication is exposed at
     the tail exactly like the paper's communication-oblivious baseline.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     if n == 1:
         return partial_fn(jnp.int32(0))
@@ -106,7 +107,7 @@ def ring_all_gather_compute(
     placer handled by caller through acc).  The local shard is consumed
     first — it is available at t=0, so its compute hides the first hop.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     acc = consume_fn(d, x_local, out_init)
     buf = x_local
@@ -140,7 +141,7 @@ def direct_all_to_all_compute(
     remote-ahead-of-local rule).  oblivious: natural order (Fig. 14
     baseline).
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     out = jnp.zeros((n,) + tuple(out_shape_dtype.shape), out_shape_dtype.dtype)
 

@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 
 def _pool(table, idx, kernel: bool):
@@ -98,7 +99,7 @@ def embedding_all_to_all(
 
     # Flatten the whole mesh into one logical world axis for the exchange.
     _FLAT_AXIS = world_axes
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(None, world_axes, None), P(world_axes, None, None)),
         out_specs=P(world_axes, None, None),

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import ring_permute
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 NEG = -1e30
 
@@ -207,7 +208,7 @@ def sharded_cross_entropy(
                               ctx.mesh.size)
 
     x_spec = P(dp, axis, None) if seq_sharded else P(dp, None, None)
-    loss = jax.shard_map(
+    loss = shard_map(
         local_ce, mesh=ctx.mesh,
         in_specs=(x_spec, P(axis, None), P(dp, None)),
         out_specs=P(None),

@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import ring_reduce_scatter_compute
 from repro.parallel.sharding import ParallelContext
+from repro.compat import axis_size, shard_map
 
 
 def _bulk(xl, wl, axis):
@@ -35,7 +36,7 @@ def _bulk(xl, wl, axis):
 
 
 def _fused_rows(xl, wl, axis, schedule):
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     (rows, k), nout = xl.shape, wl.shape[1]
     chunk = rows // n
 
@@ -48,7 +49,7 @@ def _fused_rows(xl, wl, axis, schedule):
 
 
 def _fused_cols(xl, wl, axis, schedule):
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     nout = wl.shape[1]
     chunk = nout // n
 
@@ -106,7 +107,7 @@ def matmul_allreduce(
             return _fused_rows(xl, wl, axis, schedule)
         return _fused_cols(xl, wl, axis, schedule)
 
-    yf = jax.shard_map(
+    yf = shard_map(
         local_fn,
         mesh=ctx.mesh,
         in_specs=(P(dp, ctx.tp_axis), P(ctx.tp_axis, None)),

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
 from repro.core.scheduling import ring_offsets
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 
 def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
@@ -65,7 +66,7 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
             )
         return jnp.moveaxis(out, 0, 1)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None, ctx.tp_axis, None, None),),
         out_specs=P(dp, None, ctx.tp_axis, None, None),
@@ -132,7 +133,7 @@ def fused_expert_ffn_combine(
             )
         return jnp.moveaxis(out, 0, 1)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(
             P(dp, None, ctx.tp_axis, None, None),

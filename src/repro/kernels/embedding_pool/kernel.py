@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import tpu_compiler_params
 
 
 def _pool_kernel(idx_ref, row_ref, o_ref, acc_ref):
@@ -49,7 +50,7 @@ def embedding_pool_pallas(table, idx, *, interpret=True):
         _pool_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(idx, table)

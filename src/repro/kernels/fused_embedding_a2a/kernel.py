@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import tpu_compiler_params
 
 
 def _kernel(ids_ref, idx_ref, row_ref, out_ref, frag_ref, send_sem,
@@ -138,7 +139,7 @@ def fused_embedding_a2a_pallas(tables, idx, my, *, n_dev, L, axis_name,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b_loc, n_dev * t_loc, d),
                                        tables.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",) * 4,
             collective_id=collective_id),
         interpret=interpret,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import tpu_compiler_params
 
 
 def _fused_kernel(ids_ref, x_ref, w_ref, o_ref, tx_ref, rx_ref, acc_ref,
@@ -163,6 +164,6 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        compiler_params=tpu_compiler_params(collective_id=collective_id),
         interpret=interpret,
     )(ids, x, w)

@@ -9,6 +9,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import interpret_mode
 from repro.kernels.fused_gemv_allreduce.kernel import fused_matmul_allreduce_pallas
 from repro.parallel.sharding import ParallelContext
+from repro.compat import axis_size, shard_map
 
 
 def fused_matmul_allreduce_kernel_available(mesh=None) -> bool:
@@ -24,7 +25,7 @@ def fused_matmul_allreduce_kernel_available(mesh=None) -> bool:
 def fused_matmul_allreduce_shard(xl, wl, axis, *, comm_aware=True):
     """Call inside shard_map.  xl: [rows_loc, K_loc]; wl: [K_loc, N].
     The PUT ring runs over mesh axis ``axis``."""
-    n_dev = lax.axis_size(axis)
+    n_dev = axis_size(axis)
     my = lax.axis_index(axis)
     return fused_matmul_allreduce_pallas(
         xl, wl, my, n_dev=n_dev, axis_name=axis, comm_aware=comm_aware,
@@ -44,7 +45,7 @@ def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True):
         return fused_matmul_allreduce_shard(
             xl, wl, ctx.tp_axis, comm_aware=comm_aware)
 
-    yf = jax.shard_map(
+    yf = shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, ctx.tp_axis), P(ctx.tp_axis, None)),
         out_specs=P(dp, None),

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import tpu_compiler_params
 
 
 def _gemv_kernel(x_ref, w_ref, o_ref, acc_ref):
@@ -42,7 +43,7 @@ def gemv_pallas(x, w, *, bn=256, bk=512, interpret=True):
         out_specs=pl.BlockSpec((b, bn), lambda j, l: (0, j)),
         out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((b, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import tpu_compiler_params
 
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_ref, *, chunk):
@@ -71,7 +72,7 @@ def wkv6_pallas(r, k, v, lw, u, *, chunk=32, interpret=True):
         out_specs=pl.BlockSpec((1, chunk, n), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, lw, u)

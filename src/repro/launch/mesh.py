@@ -12,13 +12,13 @@ from __future__ import annotations
 import jax
 
 from repro.parallel.sharding import FusionConfig, ParallelContext
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_context(*, multi_pod: bool = False,
@@ -34,6 +34,5 @@ def make_host_mesh(shape=None, axes=("data", "model"),
     if shape is None:
         model = min(4, n)
         shape = (n // model, model)
-    mesh = jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = make_mesh(shape, axes)
     return ParallelContext.from_mesh(mesh, fusion=fusion)

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import attention_partial_merge, ring_permute
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 NEG_INF = -1e30
 
@@ -187,6 +188,13 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
     instead save every hop's probability tensors.
     """
     g = Hq // Hkv
+    # Without causal/window masking the position arrays are dead code; an
+    # unconsumed axis_index leaves a dangling partition-id instruction that
+    # the SPMD partitioner refuses, so only trace it when a mask needs it.
+    need_pos = causal or window is not None
+
+    def _rank():
+        return lax.axis_index(axis) if need_pos else jnp.int32(0)
 
     @jax.custom_vjp
     def ring_attn(ql, kl, vl):
@@ -194,7 +202,7 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
         return o
 
     def _fwd(ql, kl, vl):
-        d = lax.axis_index(axis)
+        d = _rank()
         b = ql.shape[0]
         qpos = d * s_loc + jnp.arange(s_loc)
         q5 = ql.reshape(b, s_loc, Hkv, g, hd)
@@ -221,7 +229,7 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
 
     def bwd_rule(res, do):
         ql, kl, vl, o, m, l = res
-        d = lax.axis_index(axis)
+        d = _rank()
         b = ql.shape[0]
         qpos = d * s_loc + jnp.arange(s_loc)
         q5 = ql.reshape(b, s_loc, Hkv, g, hd)
@@ -322,7 +330,7 @@ def context_attention(
         # analytic backward (see _make_ring_attention).
         return ring_attn(ql, kl, vl)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, axis, None, None),) * 3,
         out_specs=P(dp, axis, None, None),
@@ -370,7 +378,7 @@ def decode_attention(
         o = attention_partial_merge(o, m, l, axis)
         return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, Hq, hd)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None, None, None), P(dp, axis, None, None),
                   P(dp, axis, None, None), P()),
@@ -397,7 +405,7 @@ def cache_update(ctx: ParallelContext, cache, new, pos):
         sel = jnp.where(owner == d, nl.astype(cl.dtype), old)
         return lax.dynamic_update_slice_in_dim(cl, sel, local_pos, axis=1)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, axis, *rest), P(dp, None, *rest), P()),
         out_specs=P(dp, axis, *rest),

@@ -11,6 +11,7 @@ from repro.core.collectives import ring_reduce_scatter_compute
 from repro.core.matmul_allreduce import matmul_allreduce
 from repro.models.common import Param, dense_init, embed_init, ones_init, key_iter
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +84,7 @@ def _colshard_matmul(ctx: ParallelContext, x, w):
     def f(xl, wl):
         return xl @ wl
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=ctx.mesh,
         in_specs=(P(dp, None, None), P(None, ctx.tp_axis)),
         out_specs=P(dp, None, ctx.tp_axis),
@@ -141,7 +142,7 @@ def embedding_lookup(ctx: ParallelContext, params, tokens, *, seq_shard: bool,
         return x
 
     out_spec = P(dp, axis, None) if do_seq else P(dp, None, None)
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None), P(axis, None)),
         out_specs=out_spec, check_vma=False,

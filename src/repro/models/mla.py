@@ -24,6 +24,7 @@ from repro.models.common import dense_init, key_iter
 from repro.models.layers import rms_norm
 from repro.models.rope import apply_rope
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,7 +134,7 @@ def mla_context_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
         return out, c, k_rope
 
     param_specs = jax.tree.map(lambda _: P(), params)
-    out, c, k_rope = jax.shard_map(
+    out, c, k_rope = shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, axis, None), param_specs),
         out_specs=(P(dp, axis, None), P(dp, axis, None), P(dp, axis, None)),
@@ -180,7 +181,7 @@ def mla_decode_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
         return o.reshape(b, 1, H * cfg.v_head_dim)
 
     param_specs = jax.tree.map(lambda _: P(), params)
-    o = jax.shard_map(
+    o = shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None, None), P(dp, axis, None), P(dp, axis, None),
                   P(), param_specs),

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
 from repro.models.common import dense_init, key_iter
 from repro.parallel.sharding import ParallelContext
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,7 +110,7 @@ def moe_apply(ctx: ParallelContext, params, x, cfg: MoEConfig, *,
         args = (x, params["router"], params["w_gate"], params["w_up"],
                 params["w_down"])
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=ctx.mesh, in_specs=in_specs, out_specs=x_spec,
         check_vma=False,
     )(*args)
@@ -176,7 +177,7 @@ def _moe_decode_ep(ctx: ParallelContext, params, x, cfg: MoEConfig, act,
             y = lax.dynamic_slice_in_dim(y, d * t_loc, t_loc, axis=0)
         return y.reshape(xl.shape).astype(xl.dtype)
 
-    out = jax.shard_map(
+    out = shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None, None), P(None, None),
                   P(ep_ax, None, None), P(ep_ax, None, None),

@@ -9,12 +9,12 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 from repro.parallel.sharding import FusionConfig, ParallelContext  # noqa: E402
+from repro.compat import make_mesh  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((2, 4), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
@@ -24,8 +24,7 @@ def ctx(mesh):
 
 @pytest.fixture(scope="session")
 def ctx1d():
-    m = jax.make_mesh((8,), ("model",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+    m = make_mesh((8,), ("model",))
     return ParallelContext.from_mesh(m)
 
 

@@ -9,6 +9,7 @@ import pytest
 from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime.elastic import rescale_batch, reshard_tree
+from repro.compat import make_mesh
 
 
 def _tree(rng):
@@ -64,8 +65,7 @@ def test_elastic_cross_mesh_restore(tmp_path, rng):
     """Checkpoint on an 8-device mesh, restore re-sharded onto 4 devices."""
     from repro.parallel.sharding import ParallelContext
 
-    mesh8 = jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh8 = make_mesh((2, 4), ("data", "model"))
     ctx8 = ParallelContext.from_mesh(mesh8)
     devs = np.array(jax.devices()[:4]).reshape(2, 2)
     mesh4 = jax.sharding.Mesh(devs, ("data", "model"))
