@@ -2,40 +2,88 @@
 
 The paper sweeps GPU occupancy (slice size) and finds a sweet spot below
 the maximum: finer slices overlap better until per-slice overhead and
-contention win.  Our knob is ring-chunk count; we sweep it in the
-alpha-beta model and measure two points on the host mesh.
+contention win.  Our knob is ``chunks_per_rank``; we sweep it in the
+alpha-beta model *and* measure the real XLA-fused op at every feasible
+granularity on the 8-device host mesh, then record everything in
+machine-readable ``BENCH_granularity.json`` (the autotuner's modeled
+choice included, so regressions in the model/measurement agreement are
+diffable across commits).
 """
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
 from benchmarks.common import model_fused, model_bulk, timeit
 
+JSON_PATH = "BENCH_granularity.json"
+
+# model workload: v5e, row-parallel GEMM 4096 tokens x (14336/16 -> 4096)
+MODEL_FLOPS = 2 * 4096 * 14336 / 16 * 4096
+MODEL_HBM = 14336 / 16 * 4096 * 2
+MODEL_WIRE = 4096 * 4096 * 2 * 2 / 16
+
 
 def run(report):
     import jax
 
+    from repro.core.autotune import clear_cache, tune_matmul_allreduce
     from repro.launch.mesh import make_host_mesh
     from repro.core.matmul_allreduce import matmul_allreduce
 
-    # model: v5e, row-parallel GEMM 4096 tokens x (14336/16 -> 4096)
-    flops = 2 * 4096 * 14336 / 16 * 4096
-    hbm = 14336 / 16 * 4096 * 2
-    wire = 4096 * 4096 * 2 * 2 / 16
+    out = {"model": {}, "measured": {}}
+
     best = None
     for chunks in [1, 2, 4, 8, 16, 32, 64, 128]:
-        t = model_fused(flops, hbm, wire, chunks)
+        t = model_fused(MODEL_FLOPS, MODEL_HBM, MODEL_WIRE, chunks)
+        out["model"][str(chunks)] = t
         report(f"granularity_model_chunks{chunks}", t * 1e6,
-               f"bulk_us={model_bulk(flops, hbm, wire)*1e6:.1f}")
+               f"bulk_us={model_bulk(MODEL_FLOPS, MODEL_HBM, MODEL_WIRE)*1e6:.1f}")
         if best is None or t < best[1]:
             best = (chunks, t)
     report("granularity_model_best", best[1] * 1e6, f"chunks={best[0]}")
+    out["model_best_chunks"] = best[0]
+    out["model_bulk"] = model_bulk(MODEL_FLOPS, MODEL_HBM, MODEL_WIRE)
+    # acceptance: fused time monotonically improves from 1 chunk up to the
+    # modeled optimum (then per-chunk overhead wins)
+    ladder = [out["model"][str(c)] for c in [1, 2, 4, 8, 16, 32, 64, 128]
+              if c <= best[0]]
+    out["model_monotone_to_optimum"] = all(
+        a >= b for a, b in zip(ladder, ladder[1:]))
 
+    # ---- measured sweep on the host mesh -------------------------------
     ctx = make_host_mesh()
+    n = ctx.tp
     rng = np.random.default_rng(0)
-    x = rng.standard_normal((4, 64, 256)).astype(np.float32)
-    w = rng.standard_normal((256, 256)).astype(np.float32)
-    for mode in ["bulk", "fused"]:
-        fn = jax.jit(lambda x, w, m=mode: matmul_allreduce(ctx, x, w, mode=m))
-        report(f"granularity_measured_{mode}", timeit(fn, x, w) * 1e6, "")
+    B, S, K, N = 4, 64, 256, 256
+    x = rng.standard_normal((B, S, K)).astype(np.float32)
+    w = rng.standard_normal((K, N)).astype(np.float32)
+
+    fn_bulk = jax.jit(lambda x, w: matmul_allreduce(ctx, x, w, mode="bulk"))
+    t_bulk = timeit(fn_bulk, x, w)
+    out["measured"]["bulk"] = t_bulk
+    report("granularity_measured_bulk", t_bulk * 1e6, "")
+
+    rows_local = B * S // ctx.dp
+    for q in [1, 2, 4, 8]:
+        if rows_local % (n * q):
+            continue
+        fn = jax.jit(lambda x, w, q=q: matmul_allreduce(
+            ctx, x, w, mode="fused", chunks_per_rank=q))
+        t = timeit(fn, x, w)
+        out["measured"][f"fused_q{q}"] = t
+        report(f"granularity_measured_fused_q{q}", t * 1e6,
+               f"bulk_us={t_bulk*1e6:.1f}")
+
+    clear_cache()
+    out["autotuner_choice_q"] = tune_matmul_allreduce(
+        4096, 14336 // 16, 4096, dtype_bytes=2, n_dev=16, chunk_dim=4096)
+    out["workload"] = {"model": {"flops": MODEL_FLOPS, "hbm": MODEL_HBM,
+                                 "wire": MODEL_WIRE},
+                       "measured": {"B": B, "S": S, "K": K, "N": N,
+                                    "mesh": list(ctx.mesh.shape.values())}}
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    report("granularity_json", 0.0, JSON_PATH)
     return best

@@ -7,6 +7,10 @@ Two complementary measurements per paper figure:
   projected - alpha-beta roofline model with TPU v5e constants, fed by the
               exact per-chunk byte/flop counts of the op (the ASTRA-Sim
               analogue used for the scale-out figure).
+
+The model itself lives in :mod:`repro.core.perfmodel` (promoted there so
+the serve/train overlap autotuner shares the constants); this module
+re-exports it for the benchmark scripts plus wall-clock helpers.
 """
 from __future__ import annotations
 
@@ -16,15 +20,21 @@ import time
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
-import numpy as np
 
-PEAK_FLOPS = 197e12     # v5e bf16
-HBM_BW = 819e9
-ICI_BW = 50e9
-ICI_LAT = 1e-6          # collective setup/launch latency (bulk boundary)
-BOUNDARY = 2e-6         # kernel-boundary sync the fused form removes
-CHUNK_OVERHEAD = 2e-7   # per-chunk issue cost (device-initiated comm is cheap
-                        # -- the paper's point; ROC_SHMEM API ~ns-scale)
+from repro.core.perfmodel import (  # noqa: F401  (re-exported)
+    V5E,
+    HardwareModel,
+    model_bulk,
+    model_fused,
+    pct_reduction,
+)
+
+PEAK_FLOPS = V5E.peak_flops
+HBM_BW = V5E.hbm_bw
+ICI_BW = V5E.ici_bw
+ICI_LAT = V5E.ici_lat
+BOUNDARY = V5E.boundary
+CHUNK_OVERHEAD = V5E.chunk_overhead
 
 
 def timeit(fn, *args, iters=20, warmup=3):
@@ -39,29 +49,7 @@ def timeit(fn, *args, iters=20, warmup=3):
 
 def _compute_time(flops, hbm_bytes):
     """Roofline compute time: MXU- or HBM-bound, whichever binds."""
-    return max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW)
-
-
-def model_bulk(flops, hbm_bytes, wire_bytes, *, bw=ICI_BW):
-    """Bulk-synchronous: full compute kernel, boundary sync, collective."""
-    return _compute_time(flops, hbm_bytes) + BOUNDARY + ICI_LAT + wire_bytes / bw
-
-
-def model_fused(flops, hbm_bytes, wire_bytes, chunks, *, bw=ICI_BW,
-                zero_copy_saving=0.0):
-    """Fused: chunk i's wire time hides behind chunks i+1..n's compute.
-
-    total = first chunk compute + max(rest compute, rest wire) +
-            last chunk wire + per-chunk issue overhead - zero-copy saving."""
-    c = _compute_time(flops, hbm_bytes)
-    w = wire_bytes / bw + ICI_LAT
-    per_c, per_w = c / chunks, w / chunks
-    overlapped = per_c + max(c - per_c, w - per_w) + per_w
-    return max(overlapped + chunks * CHUNK_OVERHEAD - zero_copy_saving, 0.0)
-
-
-def pct_reduction(bulk, fused):
-    return 100.0 * (bulk - fused) / bulk
+    return V5E.compute_time(flops, hbm_bytes)
 
 
 def csv_row(name, us, derived=""):

@@ -19,23 +19,36 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.autotune import (resolve_chunks_per_rank,
+                                 tune_allgather_matmul,
+                                 tune_matmul_allreduce)
 from repro.core.collectives import ring_permute, ring_reduce_scatter_compute
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
 
-def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None):
+def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
+                     chunks_per_rank: int | str | None = None):
     """y[b, s, :] = (AG_tp(x) @ w_colshard)[b, s, :].
 
     Fused: the locally-held sequence chunk is multiplied first (it is
     available at t=0, hiding the first hop), then each arriving chunk is
-    multiplied while the next is on the wire.
+    multiplied while the next is on the wire.  ``chunks_per_rank`` splits
+    the ring payload into sub-chunks so each arriving sub-slice is
+    consumed (and the next forwarded) independently — finer overlap for
+    long sequence chunks (paper Fig. 13).
     """
     mode = mode or ctx.fusion.resolve("ag_matmul")
     axis, n = ctx.tp_axis, ctx.tp
     b, s, k = x.shape
     nout = w.shape[1]
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
+    # the ring payload is the local sequence chunk: only q | s_loc matters
+    q = (1 if mode == "bulk" else resolve_chunks_per_rank(
+        chunks_per_rank, ctx.fusion.granularity,
+        lambda: tune_allgather_matmul(b, s // n, k, nout // n,
+                                      dtype_bytes=x.dtype.itemsize, n_dev=n),
+        dim=s // n, ring=1))
 
     def local_fn(xl, wl):
         if mode == "bulk":
@@ -43,13 +56,19 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None):
             return xg @ wl
         d = lax.axis_index(axis)
         s_loc = xl.shape[1]
+        sub = s_loc // q
         out = jnp.zeros((xl.shape[0], s_loc * n, wl.shape[1]), xl.dtype)
-        buf = xl
-        out = lax.dynamic_update_slice_in_dim(out, xl @ wl, d * s_loc, axis=1)
+        bufs = [lax.dynamic_slice_in_dim(xl, j * sub, sub, axis=1)
+                for j in range(q)]
+        for j in range(q):
+            out = lax.dynamic_update_slice_in_dim(
+                out, bufs[j] @ wl, d * s_loc + j * sub, axis=1)
         for i in range(1, n):
-            buf = ring_permute(buf, axis, n)
             src = (d - i) % n
-            out = lax.dynamic_update_slice_in_dim(out, buf @ wl, src * s_loc, axis=1)
+            for j in range(q):
+                bufs[j] = ring_permute(bufs[j], axis, n)
+                out = lax.dynamic_update_slice_in_dim(
+                    out, bufs[j] @ wl, src * s_loc + j * sub, axis=1)
         return out
 
     return shard_map(
@@ -62,27 +81,38 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None):
 
 
 def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
-                         schedule: str | None = None):
-    """y = ReduceScatter_tp(x @ w_rowshard) scattered over the sequence dim."""
+                         schedule: str | None = None,
+                         chunks_per_rank: int | str | None = None):
+    """y = ReduceScatter_tp(x @ w_rowshard) scattered over the sequence dim.
+
+    ``chunks_per_rank`` sub-chunks each ring step's payload (Fig. 13)."""
     mode = mode or ctx.fusion.resolve("matmul_rs")
     schedule = schedule or ctx.fusion.schedule
     axis, n = ctx.tp_axis, ctx.tp
     b, s, k = x.shape
     nout = w.shape[1]
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
+    q = (1 if mode == "bulk" else resolve_chunks_per_rank(
+        chunks_per_rank, ctx.fusion.granularity,
+        lambda: tune_matmul_allreduce(b * s, k // n, nout,
+                                      dtype_bytes=x.dtype.itemsize,
+                                      n_dev=n, chunk_dim=s,
+                                      allgather_phase=False),
+        dim=s, ring=n))
 
     def local_fn(xl, wl):
         if mode == "bulk":
             y = xl @ wl
             return lax.psum_scatter(y, axis, scatter_dimension=1, tiled=True)
         s_full = xl.shape[1]
-        chunk = s_full // n
+        chunk = s_full // (n * q)
 
-        def partial(c):
-            xi = lax.dynamic_slice_in_dim(xl, c * chunk, chunk, axis=1)
+        def partial(f):
+            xi = lax.dynamic_slice_in_dim(xl, f * chunk, chunk, axis=1)
             return xi @ wl
 
-        return ring_reduce_scatter_compute(partial, axis, schedule=schedule)
+        return ring_reduce_scatter_compute(partial, axis, schedule=schedule,
+                                           chunks_per_rank=q, sub_axis=1)
 
     return shard_map(
         local_fn,

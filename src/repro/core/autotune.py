@@ -1,0 +1,287 @@
+"""Shape-keyed overlap-granularity autotuner (paper Fig. 13).
+
+The paper's central observation is that overlap quality is governed by
+slice granularity: finer slices hide more wire time until per-slice
+overhead wins, and the sweet spot is workload-dependent.  This module
+picks the ``chunks_per_rank`` sub-chunk factor for the XLA-level fused
+combinators and the output-tile size for the Pallas pipelined kernels,
+using the promoted alpha-beta model (:mod:`repro.core.perfmodel`), with
+an optional measured-sweep refinement.
+
+Choices are memoized under a shape key so steady-state serve/train loops
+pay the (cheap) model sweep once per distinct workload shape.  Setting
+``FusionConfig.granularity = "auto"`` routes every fused op through
+:func:`choose_chunks_per_rank`; an integer pins the knob globally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping, Sequence
+
+from repro.core.collectives import feasible_chunks_per_rank
+from repro.core.perfmodel import V5E, HardwareModel, model_fused
+
+MAX_CHUNKS_PER_RANK = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneKey:
+    """Cache key: op family + every fact that moves the decision — shape,
+    dtype, world size, the divisibility constraint, and the hardware
+    model (two call sites that differ in any of these must not share a
+    cached q)."""
+
+    op: str
+    shape: tuple
+    dtype_bytes: int
+    n_dev: int
+    divisor_of: int | None
+    divisor_ring: int
+    hw: "HardwareModel"
+
+
+_GRANULARITY_CACHE: dict[TuneKey, int] = {}
+
+
+def cache_info() -> Mapping[TuneKey, int]:
+    """Read-only view of the memoized decisions (tests/diagnostics)."""
+    return dict(_GRANULARITY_CACHE)
+
+
+def clear_cache() -> None:
+    _GRANULARITY_CACHE.clear()
+
+
+def _divisor_candidates(divisor_of: int | None, ring: int,
+                        max_q: int) -> list[int]:
+    """Power-of-two sub-chunk factors q whose fine split divides the
+    chunked dimension.  ``ring`` is the factor the dimension must absorb
+    *besides* q: the ring world size for reduce-scatter-style chunking
+    (fine chunks = ring * q of one dim), 1 for the A2A family (the
+    payload is per-destination already; only q | divisor_of matters)."""
+    qs = []
+    q = 1
+    while q <= max_q:
+        if divisor_of is None or divisor_of % (ring * q) == 0:
+            qs.append(q)
+        q *= 2
+    return qs or [1]
+
+
+def choose_chunks_per_rank(
+    op: str,
+    *,
+    shape: Sequence[int],
+    dtype_bytes: int,
+    n_dev: int,
+    flops: float,
+    hbm_bytes: float,
+    wire_bytes: float,
+    divisor_of: int | None = None,
+    divisor_ring: int | None = None,
+    max_q: int = MAX_CHUNKS_PER_RANK,
+    hw: HardwareModel = V5E,
+) -> int:
+    """Pick ``chunks_per_rank`` minimizing the modeled fused time.
+
+    ``divisor_of`` constrains candidates to factors that evenly split the
+    chunked dimension (``None`` = unconstrained); ``divisor_ring`` is the
+    ring factor that dimension must additionally absorb (defaults to
+    ``n_dev`` — the reduce-scatter convention; pass 1 for per-destination
+    payloads).  The decision is memoized under the full constraint key.
+    """
+    ring = n_dev if divisor_ring is None else divisor_ring
+    key = TuneKey(op, tuple(int(s) for s in shape), int(dtype_bytes),
+                  int(n_dev), None if divisor_of is None else int(divisor_of),
+                  int(ring), hw)
+    hit = _GRANULARITY_CACHE.get(key)
+    if hit is not None:
+        return hit
+    best_q, best_t = 1, float("inf")
+    for q in _divisor_candidates(divisor_of, ring, max_q):
+        t = model_fused(flops, hbm_bytes, wire_bytes, n_dev * q, hw=hw)
+        if t < best_t:
+            best_q, best_t = q, t
+    _GRANULARITY_CACHE[key] = best_q
+    return best_q
+
+
+def tune_matmul_allreduce(rows: int, k_local: int, n_out: int, *,
+                          dtype_bytes: int, n_dev: int, chunk_dim: int,
+                          divisor_ring: int | None = None,
+                          allgather_phase: bool = True,
+                          hw: HardwareModel = V5E) -> int:
+    """Granularity for the row-parallel GEMM/GEMV + AllReduce family.
+
+    ``chunk_dim`` is the dimension being ring-chunked (rows or output
+    columns); the ring carries ``rows * n_out / n_dev`` elements per hop.
+    ``divisor_ring`` defaults to ``n_dev`` (chunk_dim splits into
+    ``n_dev * q`` fine chunks).  ``allgather_phase=False`` models a bare
+    reduce-scatter (``matmul_reducescatter`` — no phase-2 all-gather, so
+    half the wire traffic).
+    """
+    flops = 2.0 * rows * k_local * n_out
+    hbm = float(k_local * n_out * dtype_bytes)
+    # RS carry, plus the final AG for the full AllReduce form
+    wire = float(rows * n_out * dtype_bytes) * (2.0 if allgather_phase
+                                                else 1.0)
+    return choose_chunks_per_rank(
+        "matmul_allreduce" if allgather_phase else "matmul_reducescatter",
+        shape=(rows, k_local, n_out),
+        dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops, hbm_bytes=hbm,
+        wire_bytes=wire, divisor_of=chunk_dim, divisor_ring=divisor_ring,
+        hw=hw)
+
+
+def tune_allgather_matmul(b: int, s_loc: int, k: int, n_out_local: int, *,
+                          dtype_bytes: int, n_dev: int,
+                          hw: HardwareModel = V5E) -> int:
+    """Granularity for the AllGather x matmul family.
+
+    Unlike the reduce-scatter ring (which carries *output* chunks), the
+    all-gather ring forwards the *input* sequence chunk ``[b, s_loc, k]``
+    — each arriving (sub-)chunk is consumed by a GEMM against the
+    column-sharded weights.  Only ``q | s_loc`` constrains the split.
+    """
+    flops = 2.0 * b * s_loc * n_dev * k * n_out_local
+    hbm = float(k * n_out_local * dtype_bytes)
+    wire = float(b * s_loc * k * dtype_bytes) * (n_dev - 1)
+    return choose_chunks_per_rank(
+        "allgather_matmul", shape=(b, s_loc, k, n_out_local),
+        dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops, hbm_bytes=hbm,
+        wire_bytes=wire, divisor_of=s_loc, divisor_ring=1, hw=hw)
+
+
+def tune_all_to_all(chunk_elems: int, flops_per_dest: float, *,
+                    dtype_bytes: int, n_dev: int, sub_dim: int,
+                    hw: HardwareModel = V5E) -> int:
+    """Granularity for the direct-send compute + All-to-All family.
+
+    The payload is per-destination already, so only ``q | sub_dim``
+    constrains the sub split (``divisor_ring=1``)."""
+    wire = float(chunk_elems * dtype_bytes) * (n_dev - 1)
+    return choose_chunks_per_rank(
+        "all_to_all", shape=(chunk_elems, int(flops_per_dest)),
+        dtype_bytes=dtype_bytes, n_dev=n_dev,
+        flops=flops_per_dest * n_dev,
+        hbm_bytes=float(chunk_elems * dtype_bytes * n_dev),
+        wire_bytes=wire, divisor_of=sub_dim, divisor_ring=1, hw=hw)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel tile selection
+# ---------------------------------------------------------------------------
+def choose_tile_n(b: int, k_local: int, n_total: int, *, n_dev: int,
+                  dtype_bytes: int, vmem_budget_bytes: int = 8 << 20,
+                  lane: int = 128) -> int:
+    """Output-tile width for the pipelined fused GEMV/GEMM kernels.
+
+    Mirrors the kernel's actual scratch allocation: two ``[K, tile]``
+    weight panels (double buffer), the remote-tile tx staging
+    (``(n_dev-1) * b * bn`` — independent of the tile width), the
+    per-source rx slots (``n_dev * b * bn``), and the f32 accumulator.
+    The tile must divide the per-rank output chunk ``n_total // n_dev``.
+    Prefer the largest lane-aligned divisor that fits the VMEM budget,
+    then the largest fitting divisor; if the tile-independent buffers
+    alone bust the budget, the smallest divisor (cheapest weight panels)
+    is the best that can be done.
+    """
+    bn = n_total // n_dev
+
+    def working_set(tile: int) -> int:
+        weights = 2 * k_local * tile * dtype_bytes
+        x_block = b * k_local * dtype_bytes       # whole-x VMEM input block
+        out_block = b * n_total * dtype_bytes     # whole-N VMEM output block
+        tx = (n_dev - 1) * b * bn * dtype_bytes
+        rx = n_dev * b * bn * dtype_bytes
+        acc = b * bn * 4                          # f32 accumulator
+        return weights + x_block + out_block + tx + rx + acc
+
+    divisors = [t for t in range(1, bn + 1) if bn % t == 0]
+    aligned = [t for t in divisors if t % lane == 0]
+    for pool in (aligned, divisors):
+        fitting = [t for t in pool if working_set(t) <= vmem_budget_bytes]
+        if fitting:
+            return max(fitting)
+    return 1
+
+
+def feasible_tile(dim: int, requested: int) -> int:
+    """Largest tile <= ``requested`` that divides ``dim`` (uniform tiles
+    keep the DMA-semaphore byte accounting exact)."""
+    t = max(1, min(int(requested), dim))
+    while dim % t:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Optional measured refinement
+# ---------------------------------------------------------------------------
+def measured_best(build_fn: Callable[[int], Callable[[], object]],
+                  candidates: Sequence[int], *, iters: int = 5,
+                  warmup: int = 2) -> tuple[int, dict[int, float]]:
+    """Time ``build_fn(q)()`` for each candidate q; return (best, times).
+
+    ``build_fn`` returns a zero-arg jitted closure for one granularity;
+    blocking is the caller's responsibility inside the closure (return a
+    jax array — it is block_until_ready'd here).
+    """
+    import jax
+
+    times: dict[int, float] = {}
+    for q in candidates:
+        fn = build_fn(q)
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        times[q] = (time.perf_counter() - t0) / iters
+    best = min(times, key=times.get)
+    return best, times
+
+
+def parse_granularity(value: str):
+    """CLI-facing parser: ``"auto"`` or a positive int (argparse ``type=``;
+    raises ValueError with the knob's contract in the message)."""
+    if value == "auto":
+        return value
+    try:
+        q = int(value)
+    except ValueError:
+        raise ValueError(f"granularity must be an int >= 1 or 'auto', "
+                         f"got {value!r}") from None
+    if q < 1:
+        raise ValueError(f"granularity must be >= 1 or 'auto', got {q}")
+    return q
+
+
+def resolve_granularity(granularity, pick: Callable[[], int]) -> int:
+    """Map a ``FusionConfig.granularity`` setting to a concrete
+    ``chunks_per_rank``: integers pass through, ``"auto"`` defers to the
+    supplied shape-aware chooser."""
+    if granularity == "auto":
+        return pick()
+    q = int(granularity)
+    if q < 1:
+        raise ValueError(f"granularity must be >= 1 or 'auto', got {granularity!r}")
+    return q
+
+
+def resolve_chunks_per_rank(override, config_granularity,
+                            pick: Callable[[], int], *, dim: int,
+                            ring: int) -> int:
+    """One-stop resolution shared by every fused-op call site.
+
+    An explicit per-call ``override`` beats ``config_granularity``
+    (``FusionConfig.granularity``); ``"auto"`` defers to the shape-aware
+    ``pick``; the result is clamped so ``dim`` splits evenly into
+    ``ring * q`` fine chunks (``ring`` = the ring world for
+    reduce-scatter-style chunking, 1 for per-destination payloads).
+    """
+    gran = config_granularity if override is None else override
+    return feasible_chunks_per_rank(dim, ring,
+                                    resolve_granularity(gran, pick))

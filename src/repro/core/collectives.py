@@ -38,6 +38,15 @@ def ring_permute(x, axis_name: str, n: int, shift: int = 1):
                         _ring_perm(n, shift))
 
 
+def feasible_chunks_per_rank(dim: int, n: int, q: int) -> int:
+    """Largest q' <= q such that ``dim`` splits evenly into ``n * q'``
+    fine chunks (sub-chunk granularity must divide the chunked dim)."""
+    q = max(1, int(q))
+    while q > 1 and dim % (n * q) != 0:
+        q -= 1
+    return q
+
+
 # ---------------------------------------------------------------------------
 # reduce-scatter fused with per-chunk compute (GEMV/GEMM + AllReduce core)
 # ---------------------------------------------------------------------------
@@ -46,15 +55,27 @@ def ring_reduce_scatter_compute(
     axis_name: str,
     *,
     schedule: str = "comm_aware",
+    chunks_per_rank: int = 1,
+    sub_axis: int = 0,
 ):
     """sum_over_ranks(partial_fn(chunk)) -> own rank's reduced chunk.
 
-    ``partial_fn(c)`` returns this rank's *partial* contribution to output
-    chunk ``c`` (``c`` is a traced index).  The comm-aware schedule is the
-    overlapped ring: the carry destined for rank ``d`` starts at ``d+1``,
-    each hop adds the local partial for the in-flight chunk, and a rank's
-    own chunk is accumulated last — remote data is on the wire while local
-    partials are still being computed (paper Fig. 7b).
+    ``partial_fn(f)`` returns this rank's *partial* contribution to fine
+    output chunk ``f`` (``f`` is a traced index).  With the default
+    ``chunks_per_rank=1`` there are exactly ``n`` fine chunks — one per
+    rank — and the semantics match the historical single-chunk ring.  With
+    ``chunks_per_rank=q > 1`` the output is split into ``n*q`` fine chunks
+    (rank ``r`` owns fine chunks ``r*q .. r*q+q-1``, concatenated along
+    ``sub_axis``): each ring step's payload is ``q`` sub-chunks, and every
+    sub-chunk is put on the wire the moment it is produced, so XLA can
+    hide sub-chunk ``s``'s hop behind sub-chunk ``s+1``'s compute — the
+    paper's Fig. 13 granularity knob.
+
+    The comm-aware schedule is the overlapped ring: the carry destined for
+    rank ``d`` starts at ``d+1``, each hop adds the local partial for the
+    in-flight chunk, and a rank's own chunk is accumulated last — remote
+    data is on the wire while local partials are still being computed
+    (paper Fig. 7b).
 
     The oblivious schedule computes *all* partials first (natural order)
     and only then runs the pure ring reduce — communication is exposed at
@@ -62,27 +83,35 @@ def ring_reduce_scatter_compute(
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
+    q = chunks_per_rank
+
+    def merge(accs):
+        return accs[0] if q == 1 else jnp.concatenate(accs, axis=sub_axis)
+
     if n == 1:
-        return partial_fn(jnp.int32(0))
+        return merge([partial_fn(jnp.int32(s)) for s in range(q)])
 
     if schedule == "comm_aware":
-        acc = partial_fn((d - 1) % n)
+        accs = [partial_fn(((d - 1) % n) * q + s) for s in range(q)]
         for i in range(1, n):
-            acc = ring_permute(acc, axis_name, n)
-            acc = acc + partial_fn((d - i - 1) % n)
-        return acc
+            c = (d - i - 1) % n
+            for s in range(q):
+                accs[s] = ring_permute(accs[s], axis_name, n)
+                accs[s] = accs[s] + partial_fn(c * q + s)
+        return merge(accs)
 
     if schedule == "oblivious":
         # All compute up front, then a bare ring reduce-scatter.
-        parts = [partial_fn((d - 1 - i) % n) for i in reversed(range(n))]
+        parts = [[partial_fn(((d - 1 - i) % n) * q + s) for s in range(q)]
+                 for i in reversed(range(n))]
         # parts[j] is the partial for chunk (d - n + j) mod n; the carry
         # schedule consumes them in reverse creation order so the own
         # chunk was produced first (local-first, the paper's baseline).
-        acc = parts[-1]  # chunk (d-1)
+        accs = parts[-1]  # chunk (d-1)
         for i in range(1, n):
-            acc = ring_permute(acc, axis_name, n)
-            acc = acc + parts[-(i + 1)]
-        return acc
+            accs = [ring_permute(a, axis_name, n) for a in accs]
+            accs = [a + p for a, p in zip(accs, parts[-(i + 1)])]
+        return merge(accs)
 
     raise ValueError(f"unknown schedule {schedule!r}")
 
@@ -126,14 +155,23 @@ def direct_all_to_all_compute(
     axis_name: str,
     *,
     schedule: str = "comm_aware",
+    chunks_per_rank: int = 1,
+    sub_axis: int = 0,
 ):
     """Fused compute + All-to-All via per-destination direct sends.
 
-    ``produce_fn(dest)`` computes the chunk this rank owes rank ``dest``
-    (traced index).  Each chunk is sent with a single offset
-    collective-permute the moment it is ready — the TPU analogue of the
-    paper's per-slice RDMA PUT (one logical point-to-point transaction per
-    destination, data moved in final layout, no post-shuffle).
+    With the default ``chunks_per_rank=1``, ``produce_fn(dest)`` computes
+    the full chunk this rank owes rank ``dest`` (traced index).  With
+    ``chunks_per_rank=q > 1`` the payload for each destination is split
+    into ``q`` sub-chunks along ``sub_axis`` and ``produce_fn(f)`` is
+    called with the *fine* index ``f = dest * q + s``; each sub-chunk is
+    sent the moment it is produced, so sub-chunk ``s``'s wire time hides
+    behind sub-chunk ``s+1``'s compute (paper Fig. 13 granularity knob).
+    ``out_shape_dtype`` always describes the full per-destination chunk.
+
+    Each send is a single offset collective-permute — the TPU analogue of
+    the paper's per-slice RDMA PUT (one logical point-to-point transaction
+    per destination, data moved in final layout, no post-shuffle).
 
     Returns ``[n, *chunk_shape]`` stacked by *source* rank.
 
@@ -143,17 +181,27 @@ def direct_all_to_all_compute(
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
-    out = jnp.zeros((n,) + tuple(out_shape_dtype.shape), out_shape_dtype.dtype)
+    q = chunks_per_rank
+    chunk_shape = tuple(out_shape_dtype.shape)
+    out = jnp.zeros((n,) + chunk_shape, out_shape_dtype.dtype)
+    sub = chunk_shape[sub_axis] // q
+
+    def place(out, ysub, src, s):
+        starts = [jnp.int32(0)] * out.ndim
+        starts[0] = src
+        starts[sub_axis + 1] = jnp.int32(s * sub)
+        return lax.dynamic_update_slice(out, ysub[None], tuple(starts))
 
     for off in ring_offsets(n, schedule):
         dest = (d + off) % n
-        y = produce_fn(dest)
-        if off == 0:
-            recv, src = y, d
-        else:
-            recv = ring_permute(y, axis_name, n, shift=off)
-            src = (d - off) % n
-        out = lax.dynamic_update_slice_in_dim(out, recv[None], src, axis=0)
+        for s in range(q):
+            y = produce_fn(dest * q + s) if q > 1 else produce_fn(dest)
+            if off == 0:
+                recv, src = y, d
+            else:
+                recv = ring_permute(y, axis_name, n, shift=off)
+                src = (d - off) % n
+            out = place(out, recv, src, s)
     return out
 
 

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
+from repro.core.autotune import resolve_chunks_per_rank, tune_all_to_all
+from repro.core.collectives import bulk_all_to_all, direct_all_to_all_compute
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
@@ -50,6 +51,7 @@ def embedding_all_to_all(
     *,
     mode: str | None = None,
     schedule: str | None = None,
+    chunks_per_rank: int | str | None = None,
 ):
     """Pooled embeddings exchanged table-parallel -> data-parallel.
 
@@ -57,6 +59,11 @@ def embedding_all_to_all(
     the *global* batch on its tables; it pools all of them and owes each
     peer the fragment of pooled vectors for that peer's batch shard.
     Returns [B, T_global, D] with B sharded over the world.
+
+    ``chunks_per_rank`` splits each destination's batch fragment into
+    sub-fragments along the batch rows, shipping every sub-fragment the
+    moment its pooling finishes (paper Fig. 13 — the paper's slice is
+    exactly such a batch-fragment of one table's output).
     """
     mode = mode or ctx.fusion.resolve("embed_a2a")
     schedule = schedule or ctx.fusion.schedule
@@ -66,19 +73,34 @@ def embedding_all_to_all(
     _, V, D = tables.shape
     use_kernel = mode == "kernel"
 
+    t_local_g = T // n
+    if mode == "bulk":
+        q = 1  # the single A2A does not sub-chunk
+    else:
+        q = resolve_chunks_per_rank(
+            chunks_per_rank, ctx.fusion.granularity,
+            lambda: tune_all_to_all((B // n) * t_local_g * D,
+                                    float((B // n) * t_local_g * L * D),
+                                    dtype_bytes=tables.dtype.itemsize,
+                                    n_dev=n, sub_dim=B // n),
+            dim=B // n, ring=1)
+
     def local_fn(idx_l, tab_l):
         # idx_l: [B, T_local, L] (full batch), tab_l: [T_local, V, D]
         t_local = tab_l.shape[0]
         b_chunk = B // n
+        sub = b_chunk // q
 
         pool_tables = jax.vmap(
             lambda tab, ix: _pool(tab, ix, use_kernel), in_axes=(0, 1), out_axes=1
         )  # ([T_local,V,D], [b,T_local,L]) -> [b, T_local, D]
 
-        def pool_fragment(dest):
-            # pooled embeddings of this rank's tables for dest's batch rows
-            frag = lax.dynamic_slice_in_dim(idx_l, dest * b_chunk, b_chunk, axis=0)
-            return pool_tables(tab_l, frag)  # [b_chunk, T_local, D]
+        def pool_fragment(f):
+            # pooled embeddings of this rank's tables for a sub-fragment of
+            # dest's batch rows (f is the fine index dest * q + s)
+            rows = b_chunk if q == 1 else sub
+            frag = lax.dynamic_slice_in_dim(idx_l, f * rows, rows, axis=0)
+            return pool_tables(tab_l, frag)  # [rows, T_local, D]
 
         if mode == "bulk":
             # pool everything, then one All-to-All (RCCL-style baseline)
@@ -93,6 +115,8 @@ def embedding_all_to_all(
                 jax.ShapeDtypeStruct((b_chunk, t_local, D), tables.dtype),
                 _FLAT_AXIS,
                 schedule=schedule,
+                chunks_per_rank=q,
+                sub_axis=0,
             )
         # recv: [n_src, b_chunk, T_local, D] -> [b_chunk, T_global, D]
         return jnp.moveaxis(recv, 0, 1).reshape((b_chunk, n * t_local, D))

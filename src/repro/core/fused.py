@@ -15,6 +15,12 @@ from repro.core.collectives import (
     ring_all_gather_compute,
     direct_all_to_all_compute,
     attention_partial_merge,
+    feasible_chunks_per_rank,
+)
+from repro.core.autotune import (
+    choose_chunks_per_rank,
+    choose_tile_n,
+    measured_best,
 )
 from repro.parallel.sharding import FusionConfig, ParallelContext
 
@@ -33,4 +39,8 @@ __all__ = [
     "ring_all_gather_compute",
     "direct_all_to_all_compute",
     "attention_partial_merge",
+    "feasible_chunks_per_rank",
+    "choose_chunks_per_rank",
+    "choose_tile_n",
+    "measured_best",
 ]

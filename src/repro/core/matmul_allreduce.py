@@ -18,6 +18,12 @@ Chunking dimension is chosen automatically: rows (flattened leading dims)
 when they divide the ring, else output columns — decode-shape GEMV
 (B·1 rows) always chunks over columns, matching the paper's output-tile
 granularity for matrix-vector work.
+
+Granularity (paper Fig. 13): ``chunks_per_rank`` splits each ring step's
+payload into sub-chunks, every sub-chunk shipped the moment its partial
+matmul finishes.  ``None`` defers to ``FusionConfig.granularity`` (an
+int, or ``"auto"`` for the shape-keyed alpha-beta autotuner); infeasible
+values are clamped to the largest factor dividing the chunked dim.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.autotune import (resolve_chunks_per_rank,
+                                 tune_matmul_allreduce)
 from repro.core.collectives import ring_reduce_scatter_compute
 from repro.parallel.sharding import ParallelContext
 from repro.compat import axis_size, shard_map
@@ -35,29 +43,29 @@ def _bulk(xl, wl, axis):
     return lax.psum(xl @ wl, axis)
 
 
-def _fused_rows(xl, wl, axis, schedule):
+def _fused_rows(xl, wl, axis, schedule, q):
     n = axis_size(axis)
-    (rows, k), nout = xl.shape, wl.shape[1]
-    chunk = rows // n
+    chunk = xl.shape[0] // (n * q)
 
-    def partial(c):
-        xi = lax.dynamic_slice_in_dim(xl, c * chunk, chunk, axis=0)
+    def partial(f):
+        xi = lax.dynamic_slice_in_dim(xl, f * chunk, chunk, axis=0)
         return xi @ wl
 
-    mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule)
+    mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule,
+                                       chunks_per_rank=q, sub_axis=0)
     return lax.all_gather(mine, axis, axis=0, tiled=True)
 
 
-def _fused_cols(xl, wl, axis, schedule):
+def _fused_cols(xl, wl, axis, schedule, q):
     n = axis_size(axis)
-    nout = wl.shape[1]
-    chunk = nout // n
+    chunk = wl.shape[1] // (n * q)
 
-    def partial(c):
-        wi = lax.dynamic_slice_in_dim(wl, c * chunk, chunk, axis=1)
+    def partial(f):
+        wi = lax.dynamic_slice_in_dim(wl, f * chunk, chunk, axis=1)
         return xl @ wi
 
-    mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule)
+    mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule,
+                                       chunks_per_rank=q, sub_axis=1)
     return lax.all_gather(mine, axis, axis=1, tiled=True)
 
 
@@ -68,11 +76,15 @@ def matmul_allreduce(
     *,
     mode: str | None = None,
     schedule: str | None = None,
+    chunks_per_rank: int | str | None = None,
 ):
     """y = AllReduce_tp(x @ w) for row-parallel ``w``.
 
     x: [..., K] global, K sharded over tp.   w: [K, N] global, row-sharded.
     Returns [..., N] replicated over tp (sharded over dp on leading dims).
+
+    ``chunks_per_rank``: sub-chunk granularity of the fused ring (int or
+    "auto"); ``None`` uses ``ctx.fusion.granularity``.
     """
     mode = mode or ctx.fusion.resolve("matmul_rs")
     schedule = schedule or ctx.fusion.schedule
@@ -96,6 +108,17 @@ def matmul_allreduce(
         if not fused_matmul_allreduce_kernel_available(ctx.mesh):
             mode = "fused"
 
+    chunk_dim = rows_local if use_rows else nout
+    if mode == "fused":
+        q = resolve_chunks_per_rank(
+            chunks_per_rank, ctx.fusion.granularity,
+            lambda: tune_matmul_allreduce(
+                rows_local, k // n, nout, dtype_bytes=x.dtype.itemsize,
+                n_dev=n, chunk_dim=chunk_dim),
+            dim=chunk_dim, ring=n)
+    else:
+        q = 1  # bulk/kernel paths do not ring-chunk at this level
+
     def local_fn(xl, wl):
         if mode == "bulk":
             return _bulk(xl, wl, axis)
@@ -104,8 +127,8 @@ def matmul_allreduce(
 
             return fused_matmul_allreduce_shard(xl, wl, axis)
         if use_rows:
-            return _fused_rows(xl, wl, axis, schedule)
-        return _fused_cols(xl, wl, axis, schedule)
+            return _fused_rows(xl, wl, axis, schedule, q)
+        return _fused_cols(xl, wl, axis, schedule, q)
 
     yf = shard_map(
         local_fn,

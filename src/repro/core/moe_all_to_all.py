@@ -27,14 +27,28 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
+from repro.core.autotune import resolve_chunks_per_rank, tune_all_to_all
+from repro.core.collectives import bulk_all_to_all, direct_all_to_all_compute
 from repro.core.scheduling import ring_offsets
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
 
+def _resolve_q(ctx, chunks_per_rank, *, sub_dim, chunk_elems,
+               flops_per_dest, dtype_bytes):
+    """FusionConfig/override -> feasible chunks_per_rank.  Sub-chunks are
+    cut along the capacity axis, so q must divide ``sub_dim`` (= C)."""
+    return resolve_chunks_per_rank(
+        chunks_per_rank, ctx.fusion.granularity,
+        lambda: tune_all_to_all(chunk_elems, flops_per_dest,
+                                dtype_bytes=dtype_bytes, n_dev=ctx.tp,
+                                sub_dim=sub_dim),
+        dim=sub_dim, ring=1)
+
+
 def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
-                            schedule: str | None = None):
+                            schedule: str | None = None,
+                            chunks_per_rank: int | str | None = None):
     """All-to-All of dispatch buffers over the EP axis.
 
     x: [B, n_ep, E_local, C, D] global — dim 1 indexes the destination EP
@@ -42,12 +56,22 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     the EP exchange happens within each dp row over the tp axis.  Input is
     produced seq-sharded, so dim 0 of the *local* view is the EP source.
     Returns same global shape with source/destination swapped.
+
+    ``chunks_per_rank`` splits each destination's token block along the
+    capacity axis; every sub-block is shipped as soon as it is sliced out
+    (paper Fig. 13 granularity knob).
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
     schedule = schedule or ctx.fusion.schedule
     axis = ctx.tp_axis
     b = x.shape[0]
+    _, n_ep, e_loc, cap, dmodel = x.shape
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
+    b_loc = b // (ctx.dp if dp is not None else 1)
+    q = (1 if mode == "bulk" else
+         _resolve_q(ctx, chunks_per_rank, sub_dim=cap,
+                    chunk_elems=b_loc * e_loc * cap * dmodel,
+                    flops_per_dest=0.0, dtype_bytes=x.dtype.itemsize))
 
     def local_fn(xl):
         # xl: [B_loc, n_ep, E_local, C, D]; exchange dim 1 across ranks.
@@ -55,14 +79,22 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
         if mode == "bulk":
             out = bulk_all_to_all(xt, axis)
         else:
-            def produce(dest):
-                return lax.dynamic_index_in_dim(xt, dest, axis=0, keepdims=False)
+            sub = cap // q
+
+            def produce(f):
+                dest, s = f // q, f % q
+                xb = lax.dynamic_index_in_dim(xt, dest, axis=0, keepdims=False)
+                if q == 1:
+                    return xb
+                return lax.dynamic_slice_in_dim(xb, s * sub, sub, axis=2)
 
             out = direct_all_to_all_compute(
                 produce,
                 jax.ShapeDtypeStruct(xt.shape[1:], xt.dtype),
                 axis,
                 schedule=schedule,
+                chunks_per_rank=q,
+                sub_axis=2,
             )
         return jnp.moveaxis(out, 0, 1)
 
@@ -84,6 +116,7 @@ def fused_expert_ffn_combine(
     act: Callable,
     mode: str | None = None,
     schedule: str | None = None,
+    chunks_per_rank: int | str | None = None,
 ):
     """Expert FFN fused with the combine All-to-All (the paper's GEMM+A2A).
 
@@ -99,13 +132,34 @@ def fused_expert_ffn_combine(
     fused: for each combine destination (source shard) s — farthest first,
     local last — run the expert FFN over that shard's token block and ship
     it immediately; the wire time of block s hides behind the GEMMs of
-    block s+1 (paper Fig. 10).
+    block s+1 (paper Fig. 10).  ``chunks_per_rank`` additionally splits
+    each destination's block along the capacity axis, shipping every
+    sub-block's FFN output the moment its GEMMs finish (Fig. 13).
+
+    kernel: device-initiated Pallas GEMM+A2A (remote DMA into the peers'
+    output buffers) where the backend supports it; falls back to fused.
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
     schedule = schedule or ctx.fusion.schedule
     axis = ctx.tp_axis
     b = x_dispatched.shape[0]
+    _, n_ep, e_loc, cap, dmodel = x_dispatched.shape
+    d_ff = w_up.shape[-1]
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
+    b_loc = b // (ctx.dp if dp is not None else 1)
+    if mode == "kernel":
+        from repro.kernels.fused_gemm_a2a.ops import (
+            fused_gemm_a2a_kernel_available)
+
+        if not fused_gemm_a2a_kernel_available(ctx.mesh):
+            mode = "fused"
+
+    q = (1 if mode != "fused" else
+         _resolve_q(ctx, chunks_per_rank, sub_dim=cap,
+                    chunk_elems=b_loc * e_loc * cap * dmodel,
+                    flops_per_dest=2.0 * 3 * b_loc * e_loc * cap * dmodel
+                    * d_ff,
+                    dtype_bytes=x_dispatched.dtype.itemsize))
 
     def ffn_block(xb, wu, wg, wd):
         # xb: [B_loc, E_local, C, D] -> same shape
@@ -120,9 +174,19 @@ def fused_expert_ffn_combine(
             flat = xt.reshape((xt.shape[0] * xt.shape[1],) + xt.shape[2:])
             y = ffn_block(flat, wu, wg, wd).reshape(xt.shape)
             out = bulk_all_to_all(y, axis)
+        elif mode == "kernel":
+            from repro.kernels.fused_gemm_a2a.ops import fused_gemm_a2a_shard
+
+            out = fused_gemm_a2a_shard(xt, wu, wg, wd, axis, act=act,
+                                       comm_aware=schedule == "comm_aware")
         else:
-            def produce(dest):
+            sub = cap // q
+
+            def produce(f):
+                dest, s = f // q, f % q
                 xb = lax.dynamic_index_in_dim(xt, dest, axis=0, keepdims=False)
+                if q > 1:
+                    xb = lax.dynamic_slice_in_dim(xb, s * sub, sub, axis=2)
                 return ffn_block(xb, wu, wg, wd)
 
             out = direct_all_to_all_compute(
@@ -130,6 +194,8 @@ def fused_expert_ffn_combine(
                 jax.ShapeDtypeStruct(xt.shape[1:], xt.dtype),
                 axis,
                 schedule=schedule,
+                chunks_per_rank=q,
+                sub_axis=2,
             )
         return jnp.moveaxis(out, 0, 1)
 

@@ -1,0 +1,65 @@
+"""Alpha-beta overlap model shared by serve/train consumers and benchmarks.
+
+Promoted out of ``benchmarks/common.py`` so production code (the overlap
+autotuner in :mod:`repro.core.autotune`, launch-time planning) can use the
+same roofline constants and fused/bulk time models the paper figures are
+projected with.
+
+Terms:
+  compute    = max(flops / peak_flops, hbm_bytes / hbm_bw)
+  bulk       = compute + kernel-boundary sync + collective launch + wire
+  fused      = first chunk's compute exposed, the remaining chunks' wire
+               time hidden behind compute, the last chunk's wire exposed,
+               plus a per-chunk issue overhead — the paper's Fig. 13 curve:
+               finer slices hide more wire time until per-slice overhead
+               wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Alpha-beta constants for one accelerator generation."""
+
+    peak_flops: float = 197e12   # bf16 MXU peak
+    hbm_bw: float = 819e9        # HBM bytes/s
+    ici_bw: float = 50e9         # per-link interconnect bytes/s
+    ici_lat: float = 1e-6        # collective setup/launch latency (alpha)
+    boundary: float = 2e-6       # kernel-boundary sync the fused form removes
+    chunk_overhead: float = 2e-7  # per-chunk issue cost (device-initiated
+    # comm is cheap — the paper's point; ROC_SHMEM API is ns-scale)
+
+    def compute_time(self, flops: float, hbm_bytes: float) -> float:
+        """Roofline compute time: MXU- or HBM-bound, whichever binds."""
+        return max(flops / self.peak_flops, hbm_bytes / self.hbm_bw)
+
+
+V5E = HardwareModel()
+
+
+def model_bulk(flops, hbm_bytes, wire_bytes, *, bw=None,
+               hw: HardwareModel = V5E):
+    """Bulk-synchronous: full compute kernel, boundary sync, collective."""
+    bw = hw.ici_bw if bw is None else bw
+    return (hw.compute_time(flops, hbm_bytes) + hw.boundary + hw.ici_lat
+            + wire_bytes / bw)
+
+
+def model_fused(flops, hbm_bytes, wire_bytes, chunks, *, bw=None,
+                zero_copy_saving=0.0, hw: HardwareModel = V5E):
+    """Fused: chunk i's wire time hides behind chunks i+1..n's compute.
+
+    total = first chunk compute + max(rest compute, rest wire) +
+            last chunk wire + per-chunk issue overhead - zero-copy saving."""
+    bw = hw.ici_bw if bw is None else bw
+    c = hw.compute_time(flops, hbm_bytes)
+    w = wire_bytes / bw + hw.ici_lat
+    per_c, per_w = c / chunks, w / chunks
+    overlapped = per_c + max(c - per_c, w - per_w) + per_w
+    return max(overlapped + chunks * hw.chunk_overhead - zero_copy_saving, 0.0)
+
+
+def pct_reduction(bulk: float, fused: float) -> float:
+    return 100.0 * (bulk - fused) / bulk

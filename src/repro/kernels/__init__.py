@@ -9,6 +9,14 @@ Each kernel package ships three modules:
 lower to Mosaic.  The fused_* kernels use device-initiated remote DMA
 (pltpu.make_async_remote_copy) — the TPU analogue of the paper's
 GPU-initiated RDMA PUTs.
+
+The fused kernels are *tile-granular pipelines* built on
+``repro.kernels.tile_pipeline``: a multi-step grid streams operand
+panels HBM→VMEM through a double buffer and PUTs each output tile to its
+peer the moment the tile's accumulation completes, so DMA-in, MXU
+compute, and remote DMA-out overlap.  Tile width (and the XLA-level
+``chunks_per_rank`` sibling knob, see ``FusionConfig.granularity``) is
+picked by the shape-keyed autotuner in ``repro.core.autotune``.
 """
 
 

@@ -1,0 +1,150 @@
+"""Device-initiated fused expert GEMM + All-to-All (paper §III, Fig. 10).
+
+The paper's third operator (MoE combine): as soon as an expert shard
+finishes the output block destined for one peer, that block is PUT to the
+peer while the remaining blocks are still being computed.  This kernel is
+the device-initiated sibling of the XLA-level ``fused_expert_ffn_combine``
+and shares the tile-pipeline helpers with the rewritten fused
+GEMV/GEMM+AllReduce kernel:
+
+* Multi-step grid over combine destinations (comm-aware: farthest peer
+  first, locally-consumed block last — paper Fig. 7b's rule applied to
+  the A2A).
+* The dispatched token blocks stay in HBM; each destination's
+  ``[B, E, C, D]`` block is streamed into a VMEM double buffer one step
+  ahead, so VMEM holds two blocks — not the whole dispatch buffer.
+* The gated expert FFN (up/gate GEMMs, activation, down GEMM) runs per
+  destination block; the finished block is PUT straight into the peer's
+  *output ref* slot for this source rank (zero-copy: the combine A2A
+  needs no receive-side shuffle), wire time hidden behind the next
+  block's GEMMs.
+* DMA completion semaphores replace the paper's sliceRdy polling.
+
+Runs inside shard_map over the expert-parallel axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.kernels.tile_pipeline import (ANY, drain, remote_tile_put,
+                                         step_schedule, stream_block_copy)
+
+
+def _ffn_block(xs, wu_ref, wg_ref, wd_ref, act, out_dtype):
+    """Gated FFN over one destination block.  xs: [B, E, C, D] value."""
+    b, e, c, d = xs.shape
+    outs = []
+    for ei in range(e):
+        xe = xs[:, ei].reshape(b * c, d)
+        h = jnp.dot(xe, wu_ref[ei], preferred_element_type=jnp.float32)
+        g = jnp.dot(xe, wg_ref[ei], preferred_element_type=jnp.float32)
+        y = jnp.dot((act(g) * h).astype(xs.dtype), wd_ref[ei],
+                    preferred_element_type=jnp.float32)
+        outs.append(y.reshape(b, 1, c, d))
+    return jnp.concatenate(outs, axis=1).astype(out_dtype)
+
+
+def _gemm_a2a_kernel(ids_ref, x_hbm, wu_ref, wg_ref, wd_ref, o_ref,
+                     x_slots, x_sems, tx_ref, send_sem, recv_sem, *,
+                     n_dev, act, axis_name, id_style):
+    my = ids_ref[0]
+    i = pl.program_id(0)
+    step_off = lambda s: ids_ref[1 + s]
+
+    def xdma(step, slot):
+        dest = lax.rem(my + step_off(step), n_dev)
+        return stream_block_copy(x_hbm, x_slots, x_sems, slot, dest)
+
+    @pl.when(i == 0)
+    def _():
+        xdma(0, 0).start()
+
+    @pl.when(i + 1 < n_dev)
+    def _():
+        xdma(i + 1, (i + 1) % 2).start()
+
+    xdma(i, i % 2).wait()
+    off = step_off(i)
+    dest = lax.rem(my + off, n_dev)
+    y = _ffn_block(x_slots[i % 2], wu_ref, wg_ref, wd_ref, act, o_ref.dtype)
+
+    @pl.when(off != 0)
+    def _():
+        # finished block: PUT straight into the peer's output slot for
+        # this source rank (zero-copy combine; data lands in final layout)
+        tx_ref[i] = y
+        remote_tile_put(tx_ref.at[i], o_ref.at[my], send_sem, recv_sem,
+                        dest, axis_name, id_style).start()
+
+    @pl.when(off == 0)
+    def _():
+        o_ref[my] = y
+
+    @pl.when(i == n_dev - 1)
+    def _():
+        def desc():
+            return remote_tile_put(tx_ref.at[0], o_ref.at[0], send_sem,
+                                   recv_sem, my, axis_name, id_style)
+
+        drain(desc, n_dev - 1, recv=True)   # peers' blocks landed
+        drain(desc, n_dev - 1, recv=False)  # our PUTs drained
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_dev", "act", "comm_aware",
+                                    "collective_id", "interpret",
+                                    "axis_name", "id_style"))
+def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
+                          axis_name, act, comm_aware=True, collective_id=8,
+                          interpret=True, id_style=None):
+    """Per-shard fused expert FFN + combine All-to-All.
+
+    xt: [n_dev, B, E_loc, C, D] dispatched tokens stacked by combine
+    destination; w_up/w_gate: [E_loc, D, F]; w_down: [E_loc, F, D];
+    my_ep: int32 ring position.  Returns [n_dev, B, E_loc, C, D] stacked
+    by *source* rank (the bulk All-to-All's layout).
+    """
+    if id_style is None:
+        id_style = "logical" if interpret else "mesh"
+    nd, b, e, c, d = xt.shape
+    assert nd == n_dev, (nd, n_dev)
+    kernel = functools.partial(_gemm_a2a_kernel, n_dev=n_dev, act=act,
+                               axis_name=axis_name, id_style=id_style)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_dev,),
+        in_specs=[
+            pl.BlockSpec(memory_space=ANY),           # token blocks in HBM
+            pl.BlockSpec((e,) + w_up.shape[1:], lambda i, s: (0, 0, 0)),
+            pl.BlockSpec((e,) + w_gate.shape[1:], lambda i, s: (0, 0, 0)),
+            pl.BlockSpec((e,) + w_down.shape[1:], lambda i, s: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((nd, b, e, c, d), lambda i, s: (0,) * 5),
+        scratch_shapes=[
+            pltpu.VMEM((2, b, e, c, d), xt.dtype),    # streamed x blocks
+            pltpu.SemaphoreType.DMA((2,)),            # block double buffer
+            # tx staging: remote blocks only (own block is written to the
+            # output directly and scheduled last, so remote steps are
+            # i < n_dev - 1)
+            pltpu.VMEM((max(n_dev - 1, 1), b, e, c, d), xt.dtype),
+            pltpu.SemaphoreType.DMA,                  # send
+            pltpu.SemaphoreType.DMA,                  # recv
+        ],
+    )
+    step_off, _ = step_schedule(n_dev, 1, comm_aware)
+    ids = jnp.concatenate([my_ep.astype(jnp.int32)[None],
+                           jnp.asarray(step_off, jnp.int32)])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nd, b, e, c, d), xt.dtype),
+        compiler_params=tpu_compiler_params(collective_id=collective_id),
+        interpret=interpret,
+    )(ids, xt, w_up, w_gate, w_down)

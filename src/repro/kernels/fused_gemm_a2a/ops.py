@@ -1,0 +1,63 @@
+"""Wrappers for the device-initiated fused expert GEMM + All-to-All kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import interpret_mode
+from repro.kernels.fused_gemm_a2a.kernel import fused_gemm_a2a_pallas
+from repro.parallel.sharding import ParallelContext
+from repro.compat import axis_size, shard_map
+
+
+def fused_gemm_a2a_kernel_available(mesh=None) -> bool:
+    """Mosaic on TPU supports any mesh; the CPU *interpreter* can only
+    discharge remote DMAs under a single-named-axis mesh (validation runs
+    use a 1D mesh; the production path on CPU falls back to the XLA
+    decomposed fusion)."""
+    if not interpret_mode():
+        return True
+    return mesh is not None and len(mesh.axis_names) == 1
+
+
+def fused_gemm_a2a_shard(xt, w_up, w_gate, w_down, axis, *, act,
+                         comm_aware=True):
+    """Call inside shard_map.  xt: [n, B_loc, E_loc, C, D] stacked by
+    combine destination; the PUT ring runs over mesh axis ``axis``."""
+    n_dev = axis_size(axis)
+    my = lax.axis_index(axis)
+    return fused_gemm_a2a_pallas(
+        xt, w_up, w_gate, w_down, my, n_dev=n_dev, axis_name=axis, act=act,
+        comm_aware=comm_aware, interpret=interpret_mode())
+
+
+def fused_gemm_a2a(ctx: ParallelContext, x_dispatched, w_up, w_gate, w_down,
+                   *, act, comm_aware=True):
+    """Standalone global-array entry (tests/benchmarks).
+
+    x_dispatched: [B, n_ep, E, C, D] global, E sharded over tp — same
+    layout as ``fused_expert_ffn_combine``.  Returns [B, n_ep, E, C, D]
+    with the expert outputs returned to their source shards.
+    """
+    b = x_dispatched.shape[0]
+    dp = ctx.batch_axes if b % ctx.dp == 0 else None
+
+    def local_fn(xl, wu, wg, wd):
+        xt = jnp.moveaxis(xl, 1, 0)  # [n_ep, B_loc, E_loc, C, D]
+        out = fused_gemm_a2a_shard(xt, wu, wg, wd, ctx.tp_axis, act=act,
+                                   comm_aware=comm_aware)
+        return jnp.moveaxis(out, 0, 1)
+
+    return shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(
+            P(dp, None, ctx.tp_axis, None, None),
+            P(ctx.tp_axis, None, None),
+            P(ctx.tp_axis, None, None),
+            P(ctx.tp_axis, None, None),
+        ),
+        out_specs=P(dp, None, ctx.tp_axis, None, None),
+        check_vma=False,
+    )(x_dispatched, w_up, w_gate, w_down)

@@ -1,0 +1,27 @@
+"""Oracle for the fused expert GEMM + All-to-All kernel.
+
+Per-shard semantics: every EP rank holds dispatched token blocks
+``xt [n, B, E, C, D]`` stacked by combine destination plus its local
+expert weights; the fused kernel must return the blocks *computed for
+this rank by every source*, i.e. the gated expert FFN applied per block
+followed by a bulk All-to-All over the leading dim.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def expert_ffn_ref(xb, w_up, w_gate, w_down, act):
+    """Gated FFN over one block.  xb: [..., E, C, D] with per-expert
+    weights [E, D, F]/[E, F, D]."""
+    h = jnp.einsum("...ecd,edf->...ecf", xb, w_up)
+    g = jnp.einsum("...ecd,edf->...ecf", xb, w_gate)
+    return jnp.einsum("...ecf,efd->...ecd", act(g) * h, w_down)
+
+
+def fused_gemm_a2a_ref_shard(xt, w_up, w_gate, w_down, axis_name, act):
+    """Inside shard_map: bulk-synchronous baseline (FFN, then one A2A)."""
+    y = expert_ffn_ref(xt, w_up, w_gate, w_down, act)
+    return lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)

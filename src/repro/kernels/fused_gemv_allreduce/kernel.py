@@ -1,23 +1,33 @@
 """Device-initiated fused GEMV/GEMM + AllReduce (paper §III-B, Fig. 7).
 
-This is the direct TPU analogue of the paper's flagship kernel:
+This is the direct TPU analogue of the paper's flagship kernel, rebuilt
+as a **tile-granular pipeline** (T3-style track-&-trigger at output-tile
+granularity):
 
-* One Pallas kernel per chip both computes output tiles and communicates
-  them — no kernel boundary between GEMM and collective.
-* As soon as the tile destined for a peer is computed, it is PUT into
-  that peer's reduction buffer with ``pltpu.make_async_remote_copy`` (the
-  ROC_SHMEM non-blocking PUT analogue); all PUTs are in flight while the
-  remaining tiles are still being computed.  DMA completion semaphores
-  replace the paper's WG_Done bitmask / sliceRdy polling flags.
-* Zero-copy: each remote write lands directly in the consumer's per-source
-  reduction slot (phase 1) or directly in the consumer's *output ref*
-  (phase 2) — no staging buffer or copy kernel on the receiver.
+* The kernel runs a multi-step grid over output tiles.  ``w`` stays in
+  HBM; each step's ``[K, tile_n]`` weight panel is streamed into a VMEM
+  double buffer one step ahead of its use, so VMEM holds two panels — not
+  the whole operand.  This removes the old single-shot kernel's VMEM
+  capacity cliff: ``K x N`` may exceed VMEM by an arbitrary factor.
+* As soon as a tile's accumulation completes, it is PUT into the owning
+  peer's reduction buffer with ``pltpu.make_async_remote_copy`` (the
+  ROC_SHMEM non-blocking PUT analogue); HBM DMA-in, MXU compute, and
+  remote DMA-out of different tiles are all in flight simultaneously.
+  DMA completion semaphores replace the paper's WG_Done bitmask /
+  sliceRdy polling flags.
+* Zero-copy: each remote write lands directly in the consumer's
+  per-source reduction slot (phase 1) or directly in the consumer's
+  *output ref* (phase 2) — no staging buffer or copy kernel on the
+  receiver.
 * Communication-aware schedule: remote tiles are computed farthest-peer-
-  first; the locally-reduced tile is computed *last* (paper Fig. 7b),
-  so local compute hides remote wire time.
+  first; the locally-reduced tiles are computed *last* (paper Fig. 7b),
+  so local compute hides remote wire time.  The per-rank chunk is further
+  split into ``tiles_per_rank`` sub-tiles — the kernel-level face of the
+  ``chunks_per_rank`` granularity knob (paper Fig. 13); ``tile_n`` is
+  picked by :func:`repro.core.autotune.choose_tile_n` when not pinned.
 * Two-phase direct AllReduce (the paper's choice for fully-connected
   scale-up nodes): phase 1 reduce-scatter via the PUTs above; phase 2
-  each rank broadcasts its reduced tile straight into every peer's
+  each rank broadcasts its reduced chunk straight into every peer's
   output.
 
 Runs inside shard_map; ``device_id`` is the linearized mesh id, rings run
@@ -32,125 +42,152 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
 from repro.compat import tpu_compiler_params
+from repro.core.autotune import choose_tile_n, feasible_tile
+from repro.kernels.tile_pipeline import (ANY, drain, neighbor_barrier,
+                                         remote_tile_put, step_schedule,
+                                         stream_tile_copy)
 
 
-def _fused_kernel(ids_ref, x_ref, w_ref, o_ref, tx_ref, rx_ref, acc_ref,
+def _fused_kernel(ids_ref, x_ref, w_hbm, o_ref,
+                  w_slots, w_sems, tx_ref, rx_ref, acc_ref,
                   send_sem, recv_sem, bsend_sem, brecv_sem, *,
-                  n_dev, comm_aware, barrier, axis_name, id_style):
+                  n_dev, tiles_per_rank, tile_n, barrier,
+                  axis_name, id_style):
     my = ids_ref[0]
+    i = pl.program_id(0)
+    num_tiles = n_dev * tiles_per_rank
+    bn = tiles_per_rank * tile_n
+    # schedule rides in the prefetch operand: ids = [my | offs | subs]
+    step_off = lambda s: ids_ref[1 + s]
+    step_sub = lambda s: ids_ref[1 + num_tiles + s]
 
-    def dev_id(dest):
-        if id_style == "mesh":
-            return {axis_name: dest}, pltpu.DeviceIdType.MESH
-        return dest, pltpu.DeviceIdType.LOGICAL
-    b = x_ref.shape[0]
-    n_total = w_ref.shape[1]
-    bn = n_total // n_dev
+    def wdma(step, slot):
+        dest = lax.rem(my + step_off(step), n_dev)
+        col = dest * bn + step_sub(step) * tile_n
+        return stream_tile_copy(w_hbm, w_slots, w_sems, slot, col, tile_n)
 
-    if barrier:
-        # sync ring neighbours before touching symmetric buffers
-        bsem = pltpu.get_barrier_semaphore()
-        lid, lt = dev_id(lax.rem(my + n_dev - 1, n_dev))
-        rid, rt = dev_id(lax.rem(my + 1, n_dev))
-        pltpu.semaphore_signal(bsem, device_id=lid, device_id_type=lt)
-        pltpu.semaphore_signal(bsem, device_id=rid, device_id_type=rt)
-        pltpu.semaphore_wait(bsem, 2)
+    @pl.when(i == 0)
+    def _():
+        if barrier:
+            # sync ring neighbours before touching symmetric buffers
+            neighbor_barrier(my, n_dev, axis_name, id_style)
+        wdma(0, 0).start()
 
-    def tile_partial(tile_idx):
-        wt = w_ref[:, pl.ds(tile_idx * bn, bn)]
-        return jnp.dot(x_ref[...], wt, preferred_element_type=jnp.float32)
+    @pl.when(i + 1 < num_tiles)
+    def _():
+        wdma(i + 1, (i + 1) % 2).start()
 
-    # ---- phase 1: compute + non-blocking PUT per remote tile -----------
-    # (reduce-scatter fused into the GEMV/GEMM)
-    offsets = (list(range(n_dev - 1, 0, -1)) if comm_aware
-               else list(range(1, n_dev)))
-    puts = []
-    for off in offsets:
-        dest = lax.rem(my + off, n_dev)
-        did, dt = dev_id(dest)
-        tx_ref[off - 1] = tile_partial(dest).astype(o_ref.dtype)
-        copy = pltpu.make_async_remote_copy(
-            src_ref=tx_ref.at[off - 1],
-            dst_ref=rx_ref.at[my],           # per-source slot on the peer
-            send_sem=send_sem,
-            recv_sem=recv_sem,
-            device_id=did,
-            device_id_type=dt,
-        )
-        copy.start()
-        puts.append(copy)
+    # ---- tile pipeline: wait panel in, matmul, trigger PUT out ---------
+    wdma(i, i % 2).wait()
+    partial = jnp.dot(x_ref[...], w_slots[i % 2],
+                      preferred_element_type=jnp.float32)
+    off = step_off(i)
+    sub = step_sub(i)
+    dest = lax.rem(my + off, n_dev)
 
-    # own tile last: local compute hides the PUTs' wire time (Fig. 7b)
-    acc_ref[...] = tile_partial(my)
+    @pl.when(off != 0)
+    def _():
+        # remote tile: stage in wire dtype, PUT into the peer's per-source
+        # slot the moment the MXU finishes this tile (phase-1 RS)
+        tx_ref[i] = partial.astype(tx_ref.dtype)
+        remote_tile_put(
+            tx_ref.at[i],
+            rx_ref.at[my, :, pl.ds(sub * tile_n, tile_n)],
+            send_sem, recv_sem, dest, axis_name, id_style,
+        ).start()
 
-    # sliceRdy analogue: the DMA recv semaphore counts peer contributions
-    # (each wait_recv consumes one slot-sized arrival; slots are equal
-    # sized so any descriptor of that size accounts one arrival)
-    for c in puts:
-        c.wait_recv()
-    for s in range(n_dev):
-        @pl.when(s != my)
-        def _(s=s):
-            acc_ref[...] += rx_ref[s].astype(jnp.float32)
+    @pl.when(off == 0)
+    def _():
+        # own tiles last: local compute hides the PUTs' wire time (Fig. 7b)
+        acc_ref[:, pl.ds(sub * tile_n, tile_n)] = partial
 
-    mine = acc_ref[...].astype(o_ref.dtype)
-    o_ref[:, pl.ds(my * bn, bn)] = mine
+    # ---- final step: reduce arrivals, write own chunk, broadcast -------
+    @pl.when(i == num_tiles - 1)
+    def _():
+        n_remote = (n_dev - 1) * tiles_per_rank
+        # sliceRdy analogue: the DMA recv semaphore counts tile arrivals
+        # (uniform tile size, so any descriptor of that size accounts one)
+        drain(lambda: remote_tile_put(
+            tx_ref.at[0], rx_ref.at[0, :, pl.ds(0, tile_n)],
+            send_sem, recv_sem, my, axis_name, id_style),
+            n_remote, recv=True)
+        for s in range(n_dev):
+            @pl.when(s != my)
+            def _(s=s):
+                acc_ref[...] += rx_ref[s].astype(jnp.float32)
+        o_ref[:, pl.ds(my * bn, bn)] = acc_ref[...].astype(o_ref.dtype)
 
-    # ---- phase 2: broadcast reduced tile directly into peers' output ---
-    bputs = []
-    for off in range(1, n_dev):
-        dest = lax.rem(my + off, n_dev)
-        did, dt = dev_id(dest)
-        copy = pltpu.make_async_remote_copy(
-            src_ref=o_ref.at[:, pl.ds(my * bn, bn)],
-            dst_ref=o_ref.at[:, pl.ds(my * bn, bn)],   # same slice on peer
-            send_sem=bsend_sem,
-            recv_sem=brecv_sem,
-            device_id=did,
-            device_id_type=dt,
-        )
-        copy.start()
-        bputs.append(copy)
-    for c in puts:
-        c.wait_send()                        # phase-1 sends drained
-    for c in bputs:
-        c.wait_send()
-        c.wait_recv()                        # all peers' tiles landed
+        # phase 2: broadcast reduced chunk directly into peers' output
+        def bput(dst):
+            return remote_tile_put(
+                o_ref.at[:, pl.ds(my * bn, bn)],
+                o_ref.at[:, pl.ds(my * bn, bn)],   # same slice on peer
+                bsend_sem, brecv_sem, dst, axis_name, id_style)
+
+        for off2 in range(1, n_dev):
+            bput(lax.rem(my + off2, n_dev)).start()
+        drain(lambda: remote_tile_put(
+            tx_ref.at[0], rx_ref.at[0, :, pl.ds(0, tile_n)],
+            send_sem, recv_sem, my, axis_name, id_style),
+            n_remote, recv=False)              # phase-1 sends drained
+        drain(lambda: bput(my), n_dev - 1, recv=False)
+        drain(lambda: bput(my), n_dev - 1, recv=True)  # peers' chunks in
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_dev", "comm_aware", "collective_id",
                                     "barrier", "interpret", "axis_name",
-                                    "id_style"))
+                                    "id_style", "tile_n"))
 def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
                                   comm_aware=True, collective_id=7,
                                   barrier=False, interpret=True,
-                                  id_style=None):
-    if id_style is None:
-        id_style = "logical" if interpret else "mesh"
-    """Per-shard fused GEMV/GEMM+AllReduce.
+                                  id_style=None, tile_n=None):
+    """Per-shard tile-pipelined fused GEMV/GEMM+AllReduce.
 
     x: [B, K_loc]; w: [K_loc, N]; my_tp: int32 scalar (position on the
     ring axis ``axis_name``).  Returns [B, N] fully reduced.
+
+    ``tile_n`` is the output-tile width of the pipeline (the granularity
+    knob): ``None`` lets the autotuner size it against the VMEM budget;
+    any requested value is clamped to the largest divisor of the per-rank
+    chunk ``N // n_dev`` so tiles stay uniform.
     """
+    if id_style is None:
+        id_style = "logical" if interpret else "mesh"
     b, k = x.shape
     n = w.shape[1]
     assert n % n_dev == 0, (n, n_dev)
     bn = n // n_dev
+    if tile_n is None:
+        tile_n = choose_tile_n(b, k, n, n_dev=n_dev,
+                               dtype_bytes=x.dtype.itemsize)
+    tile_n = feasible_tile(bn, tile_n)
+    tiles_per_rank = bn // tile_n
+    num_tiles = n_dev * tiles_per_rank
+
+    # the schedule itself rides in the prefetched ids (step_schedule below);
+    # the kernel body is schedule-agnostic
     kernel = functools.partial(_fused_kernel, n_dev=n_dev,
-                               comm_aware=comm_aware, barrier=barrier,
+                               tiles_per_rank=tiles_per_rank, tile_n=tile_n,
+                               barrier=barrier,
                                axis_name=axis_name, id_style=id_style)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(1,),
+        grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec((b, k), lambda i, s: (0, 0)),
-            pl.BlockSpec((k, n), lambda i, s: (0, 0)),
+            pl.BlockSpec(memory_space=ANY),           # w stays in HBM
         ],
         out_specs=pl.BlockSpec((b, n), lambda i, s: (0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((n_dev - 1, b, bn), x.dtype),  # tx staging (per PUT)
+            pltpu.VMEM((2, k, tile_n), w.dtype),      # streamed w panels
+            pltpu.SemaphoreType.DMA((2,)),            # panel double buffer
+            # tx staging: remote tiles only — the schedule puts the own
+            # (non-staged) tiles last, so remote steps are i < n_remote
+            pltpu.VMEM((max((n_dev - 1) * tiles_per_rank, 1), b, tile_n),
+                       x.dtype),
             pltpu.VMEM((n_dev, b, bn), x.dtype),      # rx slots (per source)
             pltpu.VMEM((b, bn), jnp.float32),         # reduction accumulator
             pltpu.SemaphoreType.DMA,                  # send
@@ -159,7 +196,11 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
             pltpu.SemaphoreType.DMA,                  # bcast recv
         ],
     )
-    ids = jnp.stack([my_tp.astype(jnp.int32)])
+    step_off, step_sub = step_schedule(n_dev, tiles_per_rank, comm_aware)
+    ids = jnp.concatenate([
+        my_tp.astype(jnp.int32)[None],
+        jnp.asarray(step_off + step_sub, jnp.int32),
+    ])
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -22,17 +22,20 @@ def fused_matmul_allreduce_kernel_available(mesh=None) -> bool:
     return mesh is not None and len(mesh.axis_names) == 1
 
 
-def fused_matmul_allreduce_shard(xl, wl, axis, *, comm_aware=True):
+def fused_matmul_allreduce_shard(xl, wl, axis, *, comm_aware=True,
+                                 tile_n=None):
     """Call inside shard_map.  xl: [rows_loc, K_loc]; wl: [K_loc, N].
-    The PUT ring runs over mesh axis ``axis``."""
+    The PUT ring runs over mesh axis ``axis``.  ``tile_n`` pins the
+    pipeline's output-tile width (None = autotuned from the VMEM budget)."""
     n_dev = axis_size(axis)
     my = lax.axis_index(axis)
     return fused_matmul_allreduce_pallas(
         xl, wl, my, n_dev=n_dev, axis_name=axis, comm_aware=comm_aware,
-        interpret=interpret_mode())
+        interpret=interpret_mode(), tile_n=tile_n)
 
 
-def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True):
+def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True,
+                           tile_n=None):
     """Standalone global-array entry (tests/benchmarks).
 
     x: [..., K] K sharded over tp; w: [K, N] row-sharded -> [..., N]."""
@@ -43,7 +46,7 @@ def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True):
 
     def local_fn(xl, wl):
         return fused_matmul_allreduce_shard(
-            xl, wl, ctx.tp_axis, comm_aware=comm_aware)
+            xl, wl, ctx.tp_axis, comm_aware=comm_aware, tile_n=tile_n)
 
     yf = shard_map(
         local_fn, mesh=ctx.mesh,

@@ -39,13 +39,20 @@ class FusionConfig:
                       locally-consumed chunk last (paper Fig. 6b / 7b).
       "oblivious"   - chunks computed in natural order (paper's baseline
                       scheduling; exists to reproduce Fig. 14).
-    chunks: number of chunks per ring step multiplier; 0 means one chunk
-      per peer (ring world size), the paper's slice-per-peer granularity.
+    granularity: sub-chunk factor ``chunks_per_rank`` — how many slices
+      each ring step's payload is split into (paper Fig. 13 knob).  1 is
+      the paper's slice-per-peer granularity (one chunk per ring rank);
+      larger values put each sub-slice on the wire as soon as it is
+      produced, hiding more wire time until per-slice overhead wins.
+      "auto" defers to the shape-keyed alpha-beta autotuner
+      (:mod:`repro.core.autotune`) per fused-op call site.  Values that
+      do not divide the chunked dimension are clamped per-op to the
+      largest feasible factor.
     """
 
     mode: str = "fused"
     schedule: str = "comm_aware"
-    chunks: int = 0
+    granularity: int | str = 1
     fuse_ag_matmul: bool = True
     fuse_matmul_rs: bool = True
     fuse_moe_a2a: bool = True
