@@ -24,8 +24,21 @@ MODEL_FLOPS = 2 * 4096 * 14336 / 16 * 4096
 MODEL_HBM = 14336 / 16 * 4096 * 2
 MODEL_WIRE = 4096 * 4096 * 2 * 2 / 16
 
+# the machine-readable contract: consumers (CI, cross-commit diffs) key on
+# these — validated before every write so the schema cannot rot silently
+SCHEMA_KEYS = {"model", "measured", "model_best_chunks", "model_bulk",
+               "model_monotone_to_optimum", "autotuner_choice_q", "workload"}
 
-def run(report):
+
+def _validate(out):
+    missing = SCHEMA_KEYS - set(out)
+    assert not missing, f"BENCH_granularity.json schema rot: missing {missing}"
+    assert out["model"] and out["measured"], "empty sweep sections"
+    assert "bulk" in out["measured"]
+    assert any(k.startswith("fused_q") for k in out["measured"])
+
+
+def run(report, smoke=False):
     import jax
 
     from repro.core.autotune import clear_cache, tune_matmul_allreduce
@@ -53,25 +66,28 @@ def run(report):
         a >= b for a, b in zip(ladder, ladder[1:]))
 
     # ---- measured sweep on the host mesh -------------------------------
+    # --smoke: minimal shapes/iters — exists so CI can exercise the whole
+    # path (sweep -> schema validation -> JSON write) in seconds
     ctx = make_host_mesh()
     n = ctx.tp
     rng = np.random.default_rng(0)
-    B, S, K, N = 4, 64, 256, 256
+    B, S, K, N = (4, 16, 32, 32) if smoke else (4, 64, 256, 256)
+    tkw = dict(iters=2, warmup=1) if smoke else {}
     x = rng.standard_normal((B, S, K)).astype(np.float32)
     w = rng.standard_normal((K, N)).astype(np.float32)
 
     fn_bulk = jax.jit(lambda x, w: matmul_allreduce(ctx, x, w, mode="bulk"))
-    t_bulk = timeit(fn_bulk, x, w)
+    t_bulk = timeit(fn_bulk, x, w, **tkw)
     out["measured"]["bulk"] = t_bulk
     report("granularity_measured_bulk", t_bulk * 1e6, "")
 
     rows_local = B * S // ctx.dp
-    for q in [1, 2, 4, 8]:
+    for q in [1, 2] if smoke else [1, 2, 4, 8]:
         if rows_local % (n * q):
             continue
         fn = jax.jit(lambda x, w, q=q: matmul_allreduce(
             ctx, x, w, mode="fused", chunks_per_rank=q))
-        t = timeit(fn, x, w)
+        t = timeit(fn, x, w, **tkw)
         out["measured"][f"fused_q{q}"] = t
         report(f"granularity_measured_fused_q{q}", t * 1e6,
                f"bulk_us={t_bulk*1e6:.1f}")
@@ -83,6 +99,7 @@ def run(report):
                                  "wire": MODEL_WIRE},
                        "measured": {"B": B, "S": S, "K": K, "N": N,
                                     "mesh": list(ctx.mesh.shape.values())}}
+    _validate(out)
     with open(JSON_PATH, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
     report("granularity_json", 0.0, JSON_PATH)

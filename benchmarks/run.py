@@ -2,9 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--only substr]
+  PYTHONPATH=src python -m benchmarks.run [--only substr] [--smoke]
+
+``--smoke`` asks benches that support it for a seconds-scale run (minimal
+shapes/iters) — CI uses it to keep the machine-readable output schemas
+honest without paying for a real sweep.
 """
 import argparse
+import inspect
 import os
 import sys
 import traceback
@@ -25,6 +30,7 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
@@ -34,8 +40,12 @@ def main() -> None:
         print(f"# {title}", flush=True)
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            mod.run(lambda name, us, derived="": print(
-                f"{name},{us:.1f},{derived}", flush=True))
+            report = lambda name, us, derived="": print(
+                f"{name},{us:.1f},{derived}", flush=True)
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(report, smoke=True)
+            else:
+                mod.run(report)
         except Exception:
             failures += 1
             print(f"# FAILED {mod_name}", flush=True)

@@ -16,6 +16,7 @@ pay the (cheap) model sweep once per distinct workload shape.  Setting
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Callable, Mapping, Sequence
 
@@ -51,6 +52,60 @@ def cache_info() -> Mapping[TuneKey, int]:
 
 def clear_cache() -> None:
     _GRANULARITY_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# cache persistence (serve warm-up calibration across processes)
+# ---------------------------------------------------------------------------
+def _key_to_json(key: TuneKey) -> dict:
+    d = dataclasses.asdict(key)
+    d["hw"] = dataclasses.asdict(key.hw)
+    d["shape"] = list(key.shape)
+    return d
+
+
+def _key_from_json(d: Mapping) -> TuneKey:
+    d = dict(d)
+    d["hw"] = HardwareModel(**d["hw"])
+    d["shape"] = tuple(d["shape"])
+    return TuneKey(**d)
+
+
+def save_cache(path: str) -> int:
+    """Serialize every memoized decision to ``path`` (JSON).  Returns the
+    number of entries written.  The full ``TuneKey`` — including the
+    hardware-model constants — is recorded, so a reloaded cache can never
+    serve a decision made under different assumptions.  The write is
+    atomic (temp file + rename) so a killed process never leaves a
+    truncated cache behind."""
+    import os
+
+    entries = [{"key": _key_to_json(k), "chunks_per_rank": q}
+               for k, q in _GRANULARITY_CACHE.items()]
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=2,
+                  sort_keys=True)
+    os.replace(tmp, path)
+    return len(entries)
+
+
+def load_cache(path: str, *, merge: bool = True) -> int:
+    """Load decisions serialized by :func:`save_cache` into the in-process
+    cache (``merge=False`` replaces it).  Returns the number of entries
+    loaded.  Existing in-process entries win on key collision — a live
+    measurement beats a stale file."""
+    with open(path) as f:
+        blob = json.load(f)
+    if not merge:
+        _GRANULARITY_CACHE.clear()
+    n = 0
+    for e in blob["entries"]:
+        key = _key_from_json(e["key"])
+        if key not in _GRANULARITY_CACHE:
+            _GRANULARITY_CACHE[key] = int(e["chunks_per_rank"])
+            n += 1
+    return n
 
 
 def _divisor_candidates(divisor_of: int | None, ring: int,
@@ -169,6 +224,57 @@ def tune_all_to_all(chunk_elems: int, flops_per_dest: float, *,
         wire_bytes=wire, divisor_of=sub_dim, divisor_ring=1, hw=hw)
 
 
+def tune_ring_attention(b: int, s_loc: int, n_heads: int, n_kv_heads: int,
+                        head_dim: int, *, dtype_bytes: int, n_dev: int,
+                        hops: int | None = None,
+                        hw: HardwareModel = V5E) -> int:
+    """Granularity for the ring-attention KV ring (fused AG x attention).
+
+    The ring forwards the local ``[b, s_loc, Hkv, hd]`` K and V chunks;
+    each arriving (sub-)chunk is flash-consumed against the resident
+    queries, with online-softmax stats merged per sub-chunk.  The payload
+    is the local KV chunk, so only ``q | s_loc`` constrains the split
+    (``divisor_ring=1``).  ``hops`` bounds the ring for sliding-window
+    layers (default full ring ``n_dev - 1``).
+    """
+    hops = n_dev - 1 if hops is None else hops
+    # per-rank flops: qk + pv over the visited context
+    ctx_len = s_loc * (hops + 1)
+    flops = 4.0 * b * s_loc * ctx_len * n_heads * head_dim
+    kv_chunk = float(b * s_loc * n_kv_heads * head_dim * dtype_bytes)
+    # hops moves flops AND wire (sliding-window layers bound the ring), so
+    # it must be part of the cache key — same shapes, different ratios
+    return choose_chunks_per_rank(
+        "ring_attention",
+        shape=(b, s_loc, n_heads, n_kv_heads, head_dim, hops),
+        dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops,
+        hbm_bytes=2.0 * kv_chunk * (hops + 1),
+        wire_bytes=2.0 * kv_chunk * hops,
+        divisor_of=s_loc, divisor_ring=1, hw=hw)
+
+
+def tune_ce_ring(b: int, s_loc: int, d_model: int, v_loc: int, *,
+                 dtype_bytes: int, n_dev: int,
+                 hw: HardwareModel = V5E) -> int:
+    """Granularity for the vocab-sharded cross-entropy ring.
+
+    The forward stats ring forwards the local ``[b, s_loc, D]`` activation
+    chunk (each arriving sub-chunk is reduced to per-token softmax stats
+    against the local vocab slice); the backward dx ring replays it with a
+    same-shaped dx accumulator riding along — so the payload to tune is
+    the activation chunk either way.  Only ``q | s_loc`` constrains the
+    split (``divisor_ring=1``).
+    """
+    flops = 2.0 * b * s_loc * n_dev * d_model * v_loc
+    x_chunk = float(b * s_loc * d_model * dtype_bytes)
+    return choose_chunks_per_rank(
+        "ce_ring", shape=(b, s_loc, d_model, v_loc),
+        dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops,
+        hbm_bytes=float(v_loc * d_model * dtype_bytes),
+        wire_bytes=x_chunk * (n_dev - 1),
+        divisor_of=s_loc, divisor_ring=1, hw=hw)
+
+
 # ---------------------------------------------------------------------------
 # Pallas kernel tile selection
 # ---------------------------------------------------------------------------
@@ -207,6 +313,35 @@ def choose_tile_n(b: int, k_local: int, n_total: int, *, n_dev: int,
     return 1
 
 
+def choose_tile_k(b: int, k: int, n_total: int, tile_n: int, *, n_dev: int,
+                  dtype_bytes: int, vmem_budget_bytes: int = 8 << 20,
+                  sublane: int = 8) -> int:
+    """Contraction-panel depth for the K-streamed pipelined kernels.
+
+    Given a chosen ``tile_n``, picks the largest ``tile_k`` such that two
+    ``[tile_k, tile_n]`` weight panels plus the tile-independent buffers
+    (whole-x input block, whole-N output block, tx/rx staging, f32
+    accumulators) fit the VMEM budget.  ``tile_k`` need not divide ``K``
+    — the kernel handles a ragged final panel — but is rounded down to a
+    sublane multiple when possible so DMA rows stay aligned.
+    """
+    bn = n_total // n_dev
+    fixed = (b * k * dtype_bytes            # whole-x VMEM input block
+             + b * n_total * dtype_bytes    # whole-N VMEM output block
+             + (n_dev - 1) * b * bn * dtype_bytes   # tx staging
+             + n_dev * b * bn * dtype_bytes         # rx slots
+             + b * bn * 4                   # reduction accumulator
+             + b * tile_n * 4)              # K-panel accumulator
+    per_row = 2 * tile_n * dtype_bytes      # double-buffered panel row
+    tk = (vmem_budget_bytes - fixed) // per_row if per_row else k
+    tk = max(1, min(int(tk), k))
+    if tk >= sublane and tk != k:
+        # align streamed panels, but never round a full-depth panel down
+        # into an unnecessary ragged tail
+        tk -= tk % sublane
+    return tk
+
+
 def feasible_tile(dim: int, requested: int) -> int:
     """Largest tile <= ``requested`` that divides ``dim`` (uniform tiles
     keep the DMA-semaphore byte accounting exact)."""
@@ -221,25 +356,41 @@ def feasible_tile(dim: int, requested: int) -> int:
 # ---------------------------------------------------------------------------
 def measured_best(build_fn: Callable[[int], Callable[[], object]],
                   candidates: Sequence[int], *, iters: int = 5,
-                  warmup: int = 2) -> tuple[int, dict[int, float]]:
+                  warmup: int = 2,
+                  fallback: int | None = None) -> tuple[int, dict[int, float]]:
     """Time ``build_fn(q)()`` for each candidate q; return (best, times).
 
     ``build_fn`` returns a zero-arg jitted closure for one granularity;
     blocking is the caller's responsibility inside the closure (return a
     jax array — it is block_until_ready'd here).
+
+    A candidate that raises (OOM at a too-fine granularity, a mesh the
+    shape cannot split over, ...) is excluded from the sweep rather than
+    aborting it.  If *every* candidate raises, the model decision passed
+    as ``fallback`` is returned (with an empty times dict) so the caller
+    degrades to the alpha-beta choice instead of crashing the warm-up
+    pass; with no fallback the last error propagates.
     """
     import jax
 
     times: dict[int, float] = {}
+    err: Exception | None = None
     for q in candidates:
-        fn = build_fn(q)
-        for _ in range(warmup):
-            jax.block_until_ready(fn())
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = fn()
-        jax.block_until_ready(out)
-        times[q] = (time.perf_counter() - t0) / iters
+        try:
+            fn = build_fn(q)
+            for _ in range(warmup):
+                jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            times[q] = (time.perf_counter() - t0) / iters
+        except Exception as e:  # noqa: BLE001 — sweep must survive any build
+            err = e
+    if not times:
+        if fallback is not None:
+            return fallback, times
+        raise err if err is not None else ValueError("no candidates")
     best = min(times, key=times.get)
     return best, times
 
@@ -257,6 +408,36 @@ def parse_granularity(value: str):
     if q < 1:
         raise ValueError(f"granularity must be >= 1 or 'auto', got {q}")
     return q
+
+
+def add_granularity_cli_args(ap) -> None:
+    """Install the shared ``--granularity`` / ``--tune-cache`` flags on an
+    argparse parser (one definition for every launcher)."""
+    ap.add_argument("--granularity", default=1, type=parse_granularity,
+                    help="chunks_per_rank sub-chunk factor for every fused "
+                         "ring (matmul/MoE/embedding collectives, the "
+                         "KV-ring attention and the CE-loss ring): an int "
+                         ">= 1, or 'auto' for the shape-keyed alpha-beta "
+                         "autotuner (paper Fig. 13)")
+    ap.add_argument("--tune-cache", default=None,
+                    help="path to a persisted autotune cache: loaded (if "
+                         "present) at startup, saved on exit — 'auto' "
+                         "decisions then survive across processes")
+
+
+def load_cache_if_exists(path: str | None) -> int:
+    """Launcher-side cache preload: a missing/unset path is not an error
+    (first run simply starts cold), and neither is a corrupt file — a
+    half-written cache from a killed process degrades to a cold start
+    instead of wedging every subsequent launch.  Returns entries loaded."""
+    import os
+
+    if path and os.path.exists(path):
+        try:
+            return load_cache(path)
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            return 0
+    return 0
 
 
 def resolve_granularity(granularity, pick: Callable[[], int]) -> int:

@@ -47,6 +47,18 @@ def feasible_chunks_per_rank(dim: int, n: int, q: int) -> int:
     return q
 
 
+def split_ring_payload(a, n_sub: int, axis: int = 1):
+    """Split a ring payload into ``n_sub`` equal sub-chunks along ``axis``
+    so each can ring (and be consumed) independently — the paper's
+    Fig. 13 sub-chunk granularity.  ``n_sub`` must divide the axis
+    (callers clamp via :func:`feasible_chunks_per_rank` first)."""
+    if n_sub == 1:
+        return [a]
+    sub = a.shape[axis] // n_sub
+    return [lax.dynamic_slice_in_dim(a, j * sub, sub, axis=axis)
+            for j in range(n_sub)]
+
+
 # ---------------------------------------------------------------------------
 # reduce-scatter fused with per-chunk compute (GEMV/GEMM + AllReduce core)
 # ---------------------------------------------------------------------------

@@ -19,8 +19,13 @@ from repro.core.collectives import (
 )
 from repro.core.autotune import (
     choose_chunks_per_rank,
+    choose_tile_k,
     choose_tile_n,
+    load_cache,
     measured_best,
+    save_cache,
+    tune_ce_ring,
+    tune_ring_attention,
 )
 from repro.parallel.sharding import FusionConfig, ParallelContext
 
@@ -41,6 +46,11 @@ __all__ = [
     "attention_partial_merge",
     "feasible_chunks_per_rank",
     "choose_chunks_per_rank",
+    "choose_tile_k",
     "choose_tile_n",
+    "load_cache",
     "measured_best",
+    "save_cache",
+    "tune_ce_ring",
+    "tune_ring_attention",
 ]

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import ring_permute
+from repro.core.autotune import resolve_chunks_per_rank, tune_ce_ring
+from repro.core.collectives import ring_permute, split_ring_payload
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
@@ -50,8 +51,14 @@ def _cap_bwd(lg_raw, cap):
 
 
 def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
-                   logit_softcap, n_world: int):
-    """Builds the per-rank CE with custom VJP (runs inside shard_map)."""
+                   logit_softcap, n_world: int, n_sub: int = 1):
+    """Builds the per-rank CE with custom VJP (runs inside shard_map).
+
+    ``n_sub`` (= ``chunks_per_rank``, paper Fig. 13) splits the ring
+    payload — the local sequence chunk — into sub-chunks that ring
+    independently: each arriving sub-chunk is reduced to its softmax
+    stats (fwd) or its dx contribution (bwd) while the next sub-chunk's
+    collective-permute is in flight."""
 
     @jax.custom_vjp
     def local_ce(xl, el, yl):
@@ -76,25 +83,30 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
 
         if seq_sharded:
             s_loc = xl.shape[1]
+            sub = s_loc // n_sub
             S = s_loc * n
             m_all = jnp.full((b, S), NEG, jnp.float32)
             se_all = jnp.zeros((b, S), jnp.float32)
             lab_all = jnp.zeros((b, S), jnp.float32)
 
-            def place(buf, val, src):
-                return lax.dynamic_update_slice_in_dim(buf, val, src * s_loc,
+            def place(buf, val, start):
+                return lax.dynamic_update_slice_in_dim(buf, val, start,
                                                        axis=1)
 
-            buf = xl
+            bufs = split_ring_payload(xl, n_sub)
             for i in range(n):
                 src = (d - i) % n
-                yc = lax.dynamic_slice_in_dim(yl, src * s_loc, s_loc, axis=1)
-                m, se, lab = _stats_chunk(buf, yc, el, v_off, v_loc)
-                m_all = place(m_all, m, src)
-                se_all = place(se_all, se, src)
-                lab_all = place(lab_all, lab, src)
-                if i < n - 1:
-                    buf = ring_permute(buf, axis, n)
+                for j in range(n_sub):
+                    if i > 0:
+                        # forward sub-chunk j the moment sub-chunk j-1's
+                        # stats reduction is issued (Fig. 13 granularity)
+                        bufs[j] = ring_permute(bufs[j], axis, n)
+                    start = src * s_loc + j * sub
+                    yc = lax.dynamic_slice_in_dim(yl, start, sub, axis=1)
+                    m, se, lab = _stats_chunk(bufs[j], yc, el, v_off, v_loc)
+                    m_all = place(m_all, m, start)
+                    se_all = place(se_all, se, start)
+                    lab_all = place(lab_all, lab, start)
         else:
             m_all, se_all, lab_all = _stats_chunk(xl, yl, el, v_off, v_loc)
 
@@ -158,30 +170,38 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
             dxc, dEl = chunk_grads(xl, yl, m_g, se_g)
             return dxc.astype(xl.dtype), dEl.astype(el.dtype), None
 
-        # ring replay: each chunk's dx accumulator travels with the chunk.
-        # The accumulator rides in the operand dtype (bf16 wire for bf16
-        # models — halves ring bytes; f32 models keep f32 exactness).
+        # ring replay: each sub-chunk's dx accumulator travels with its
+        # sub-chunk.  The accumulator rides in the operand dtype (bf16
+        # wire for bf16 models — halves ring bytes; f32 models keep f32
+        # exactness).
+        sub = s_loc // n_sub
         dEl_acc = jnp.zeros(el.shape, jnp.float32)
-        xbuf = xl
-        src = d
-        yc = lax.dynamic_slice_in_dim(yl, src * s_loc, s_loc, axis=1)
-        mc = lax.dynamic_slice_in_dim(m_g, src * s_loc, s_loc, axis=1)
-        sec = lax.dynamic_slice_in_dim(se_g, src * s_loc, s_loc, axis=1)
-        dxc, dEl = chunk_grads(xbuf, yc, mc, sec)
-        dxbuf = dxc.astype(xl.dtype)
-        dEl_acc += dEl
-        for i in range(1, n):
-            xbuf = ring_permute(xbuf, axis, n)
-            dxbuf = ring_permute(dxbuf, axis, n)
-            src = (d - i) % n
-            yc = lax.dynamic_slice_in_dim(yl, src * s_loc, s_loc, axis=1)
-            mc = lax.dynamic_slice_in_dim(m_g, src * s_loc, s_loc, axis=1)
-            sec = lax.dynamic_slice_in_dim(se_g, src * s_loc, s_loc, axis=1)
-            dxc, dEl = chunk_grads(xbuf, yc, mc, sec)
-            dxbuf = (dxbuf.astype(jnp.float32) + dxc).astype(xl.dtype)
+        xbufs = split_ring_payload(xl, n_sub)
+        dxbufs = []
+
+        def sub_grads(j, src, xsub):
+            start = src * s_loc + j * sub
+            yc = lax.dynamic_slice_in_dim(yl, start, sub, axis=1)
+            mc = lax.dynamic_slice_in_dim(m_g, start, sub, axis=1)
+            sec = lax.dynamic_slice_in_dim(se_g, start, sub, axis=1)
+            return chunk_grads(xsub, yc, mc, sec)
+
+        for j in range(n_sub):
+            dxc, dEl = sub_grads(j, d, xbufs[j])
+            dxbufs.append(dxc.astype(xl.dtype))
             dEl_acc += dEl
-        # one final hop returns each chunk's accumulated dx to its owner
-        dxl = ring_permute(dxbuf, axis, n)
+        for i in range(1, n):
+            src = (d - i) % n
+            for j in range(n_sub):
+                xbufs[j] = ring_permute(xbufs[j], axis, n)
+                dxbufs[j] = ring_permute(dxbufs[j], axis, n)
+                dxc, dEl = sub_grads(j, src, xbufs[j])
+                dxbufs[j] = (dxbufs[j].astype(jnp.float32)
+                             + dxc).astype(xl.dtype)
+                dEl_acc += dEl
+        # one final hop returns each sub-chunk's accumulated dx home
+        dxbufs = [ring_permute(s, axis, n) for s in dxbufs]
+        dxl = dxbufs[0] if n_sub == 1 else jnp.concatenate(dxbufs, axis=1)
         return dxl.astype(xl.dtype), dEl_acc.astype(el.dtype), None
 
     local_ce.defvjp(fwd_rule, bwd_rule)
@@ -196,16 +216,36 @@ def sharded_cross_entropy(
     *,
     mode: str | None = None,
     logit_softcap: float | None = None,
+    chunks_per_rank: int | str | None = None,
 ):
-    """Mean token cross-entropy; logits stay chunk-local in fwd AND bwd."""
+    """Mean token cross-entropy; logits stay chunk-local in fwd AND bwd.
+
+    ``chunks_per_rank`` sub-chunks the ring payload in the forward stats
+    ring and the backward dx ring (paper Fig. 13); ``None`` defers to
+    ``FusionConfig.granularity`` and ``"auto"`` to the shape-keyed
+    alpha-beta tuner (:func:`tune_ce_ring`).
+    """
     axis, n = ctx.tp_axis, ctx.tp
     B, S, D = x.shape
+    V = embed.shape[0]
     dp = ctx.batch_axes if B % ctx.dp == 0 else None
     n_dp = ctx.dp if dp is not None else 1
     seq_sharded = S % n == 0 and S >= n
 
+    n_sub = 1
+    if seq_sharded:
+        s_loc = S // n
+        b_loc = B // n_dp
+        # the ring payload is the local sequence chunk: only q | s_loc
+        # matters (the fwd stats ring and the bwd dx ring share the split)
+        n_sub = resolve_chunks_per_rank(
+            chunks_per_rank, ctx.fusion.granularity,
+            lambda: tune_ce_ring(b_loc, s_loc, D, V // n,
+                                 dtype_bytes=x.dtype.itemsize, n_dev=n),
+            dim=s_loc, ring=1)
+
     local_ce = _make_local_ce(axis, n, dp, n_dp, seq_sharded, logit_softcap,
-                              ctx.mesh.size)
+                              ctx.mesh.size, n_sub=n_sub)
 
     x_spec = P(dp, axis, None) if seq_sharded else P(dp, None, None)
     loss = shard_map(

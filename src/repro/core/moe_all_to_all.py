@@ -65,7 +65,8 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     schedule = schedule or ctx.fusion.schedule
     axis = ctx.tp_axis
     b = x.shape[0]
-    _, n_ep, e_loc, cap, dmodel = x.shape
+    _, n_ep, e_glob, cap, dmodel = x.shape
+    e_loc = e_glob // ctx.tp      # expert dim is tp-sharded (in_specs)
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
     b_loc = b // (ctx.dp if dp is not None else 1)
     q = (1 if mode == "bulk" else
@@ -143,7 +144,8 @@ def fused_expert_ffn_combine(
     schedule = schedule or ctx.fusion.schedule
     axis = ctx.tp_axis
     b = x_dispatched.shape[0]
-    _, n_ep, e_loc, cap, dmodel = x_dispatched.shape
+    _, n_ep, e_glob, cap, dmodel = x_dispatched.shape
+    e_loc = e_glob // ctx.tp      # expert dim is tp-sharded (in_specs)
     d_ff = w_up.shape[-1]
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
     b_loc = b // (ctx.dp if dp is not None else 1)

@@ -11,7 +11,8 @@ they are free at runtime — the schedule is baked into the lowered HLO.
 from __future__ import annotations
 
 
-def ring_offsets(world: int, schedule: str = "comm_aware") -> list[int]:
+def ring_offsets(world: int, schedule: str = "comm_aware",
+                 skew: int = 0) -> list[int]:
     """Order in which a device visits destination offsets 0..world-1.
 
     Offset 0 is the locally-consumed chunk; offsets 1..world-1 are remote.
@@ -22,12 +23,47 @@ def ring_offsets(world: int, schedule: str = "comm_aware") -> list[int]:
       rule.
     oblivious: natural order starting at the local chunk (the paper's
       baseline scheduling, reproduced for the Fig. 14 skew benchmark).
+
+    ``skew`` rotates the *remote* portion of the order (Fig. 14: feed a
+    measured straggler offset in so the lagging peer's chunk is scheduled
+    first); the local chunk keeps its position, so the remote-ahead-of-
+    local rule is preserved.
     """
     if schedule == "comm_aware":
-        return [w for w in range(world - 1, 0, -1)] + [0]
-    if schedule == "oblivious":
-        return list(range(world))
-    raise ValueError(f"unknown schedule {schedule!r}")
+        offs = [w for w in range(world - 1, 0, -1)] + [0]
+    elif schedule == "oblivious":
+        offs = list(range(world))
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if skew and world > 1:
+        remote = [o for o in offs if o != 0]
+        r = skew % len(remote)
+        remote = remote[r:] + remote[:r]
+        it = iter(remote)
+        offs = [o if o == 0 else next(it) for o in offs]
+    return offs
+
+
+def sub_chunk_send_events(world: int, chunks_per_rank: int,
+                          schedule: str = "comm_aware",
+                          skew: int = 0) -> list[list[tuple[int, int]]]:
+    """Per-rank (destination, fine-chunk) send events of the sub-chunked
+    direct-send schedule (``direct_all_to_all_compute`` with
+    ``chunks_per_rank=q``).
+
+    Fine chunk ``f = dest * q + s`` is the ``s``-th sub-slice of the
+    payload rank ``r`` owes rank ``dest``; events are listed in issue
+    order.  The schedule is a *permutation*: every (rank, fine-chunk) pair
+    is sent exactly once and lands at the rank owning it — the invariant
+    the property suite pins down for arbitrary (world, q, skew).
+    """
+    q = chunks_per_rank
+    events = []
+    for r in range(world):
+        offs = ring_offsets(world, schedule, skew)
+        events.append([((r + off) % world, ((r + off) % world) * q + s)
+                       for off in offs for s in range(q)])
+    return events
 
 
 def reduce_ring_chunk_order(world: int, schedule: str = "comm_aware") -> list[int]:

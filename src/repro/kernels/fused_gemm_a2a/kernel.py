@@ -13,11 +13,17 @@ GEMV/GEMM+AllReduce kernel:
 * The dispatched token blocks stay in HBM; each destination's
   ``[B, E, C, D]`` block is streamed into a VMEM double buffer one step
   ahead, so VMEM holds two blocks — not the whole dispatch buffer.
-* The gated expert FFN (up/gate GEMMs, activation, down GEMM) runs per
-  destination block; the finished block is PUT straight into the peer's
-  *output ref* slot for this source rank (zero-copy: the combine A2A
-  needs no receive-side shuffle), wire time hidden behind the next
-  block's GEMMs.
+* The expert weights stay in HBM too: the gated FFN's GEMMs are
+  contraction-tiled, streaming ``[tile_k, F]`` up/gate panels and
+  ``[tile_f, D]`` down panels through per-stream double buffers and
+  accumulating partials in f32 — so VMEM holds two panels per stream
+  instead of all ``E_loc`` experts' ``[D, F]`` slabs, and ``D x F``
+  scales past VMEM in both dims (the K-panel treatment of the
+  GEMV+AllReduce kernel applied to both chained GEMMs).  Panels may be
+  ragged in the final step of either contraction.
+* The finished block is PUT straight into the peer's *output ref* slot
+  for this source rank (zero-copy: the combine A2A needs no receive-side
+  shuffle), wire time hidden behind the next block's GEMMs.
 * DMA completion semaphores replace the paper's sliceRdy polling.
 
 Runs inside shard_map over the expert-parallel axis.
@@ -37,30 +43,63 @@ from repro.kernels.tile_pipeline import (ANY, drain, remote_tile_put,
                                          step_schedule, stream_block_copy)
 
 
-def _ffn_block(xs, wu_ref, wg_ref, wd_ref, act, out_dtype):
-    """Gated FFN over one destination block.  xs: [B, E, C, D] value."""
-    b, e, c, d = xs.shape
-    outs = []
-    for ei in range(e):
-        xe = xs[:, ei].reshape(b * c, d)
-        h = jnp.dot(xe, wu_ref[ei], preferred_element_type=jnp.float32)
-        g = jnp.dot(xe, wg_ref[ei], preferred_element_type=jnp.float32)
-        y = jnp.dot((act(g) * h).astype(xs.dtype), wd_ref[ei],
-                    preferred_element_type=jnp.float32)
-        outs.append(y.reshape(b, 1, c, d))
-    return jnp.concatenate(outs, axis=1).astype(out_dtype)
+def _panel_copy(hbm, slots, sems, slot, ei, row0, rows, full_rows):
+    """Descriptor for one ``[rows, cols]`` weight panel of expert ``ei``
+    (``rows < full_rows`` on a ragged final panel).  All indices are
+    python-static — the (expert, panel) loops are unrolled."""
+    if rows == full_rows:
+        dst = slots.at[slot]
+    else:
+        dst = slots.at[slot, pl.ds(0, rows)]
+    return pltpu.make_async_copy(hbm.at[ei, pl.ds(row0, rows)], dst,
+                                 sems.at[slot])
 
 
-def _gemm_a2a_kernel(ids_ref, x_hbm, wu_ref, wg_ref, wd_ref, o_ref,
-                     x_slots, x_sems, tx_ref, send_sem, recv_sem, *,
-                     n_dev, act, axis_name, id_style):
+def _weight_schedule(e_loc, kp_d, kp_f):
+    """Static (stream, expert, panel) order the FFN consumes panels in."""
+    items = []
+    for ei in range(e_loc):
+        items += [("ug", ei, p) for p in range(kp_d)]
+        items += [("d", ei, p) for p in range(kp_f)]
+    return items
+
+
+def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
+                     x_slots, x_sems, wu_slots, wu_sems, wg_slots, wg_sems,
+                     wd_slots, wd_sems, tx_ref, send_sem, recv_sem, *,
+                     n_dev, e_loc, tile_k, tile_f, dm, f, act,
+                     axis_name, id_style):
     my = ids_ref[0]
     i = pl.program_id(0)
     step_off = lambda s: ids_ref[1 + s]
+    kp_d = -(-dm // tile_k)
+    kp_f = -(-f // tile_f)
+    items = _weight_schedule(e_loc, kp_d, kp_f)
 
     def xdma(step, slot):
         dest = lax.rem(my + step_off(step), n_dev)
         return stream_block_copy(x_hbm, x_slots, x_sems, slot, dest)
+
+    def wcopy(item, occ):
+        stream, ei, p = item
+        if stream == "ug":
+            k0 = p * tile_k
+            ksz = min(tile_k, dm - k0)
+            return [_panel_copy(wu_hbm, wu_slots, wu_sems, occ % 2, ei,
+                                k0, ksz, tile_k),
+                    _panel_copy(wg_hbm, wg_slots, wg_sems, occ % 2, ei,
+                                k0, ksz, tile_k)]
+        f0 = p * tile_f
+        fsz = min(tile_f, f - f0)
+        return [_panel_copy(wd_hbm, wd_slots, wd_sems, occ % 2, ei,
+                            f0, fsz, tile_f)]
+
+    # per-stream double-buffer slot = occurrence count % 2 (python-static)
+    occs = []
+    counts = {"ug": 0, "d": 0}
+    for it in items:
+        occs.append(counts[it[0]])
+        counts[it[0]] += 1
 
     @pl.when(i == 0)
     def _():
@@ -70,22 +109,59 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_ref, wg_ref, wd_ref, o_ref,
     def _():
         xdma(i + 1, (i + 1) % 2).start()
 
+    for c in wcopy(items[0], occs[0]):
+        c.start()
     xdma(i, i % 2).wait()
     off = step_off(i)
     dest = lax.rem(my + off, n_dev)
-    y = _ffn_block(x_slots[i % 2], wu_ref, wg_ref, wd_ref, act, o_ref.dtype)
+    xs = x_slots[i % 2]                               # [B, E, C, D]
+    b, _, cc, _ = xs.shape
+
+    # ---- contraction-tiled gated FFN, weights streamed from HBM -------
+    ys = []
+    h = g = u = y = None
+    for j, (item, occ) in enumerate(zip(items, occs)):
+        for c in wcopy(item, occ):
+            c.wait()
+        if j + 1 < len(items):
+            for c in wcopy(items[j + 1], occs[j + 1]):
+                c.start()
+        stream, ei, p = item
+        slot = occ % 2
+        xe = xs[:, ei].reshape(b * cc, dm)
+        if stream == "ug":
+            k0 = p * tile_k
+            ksz = min(tile_k, dm - k0)
+            xp = xe[:, k0:k0 + ksz]
+            hp = jnp.dot(xp, wu_slots[slot, :ksz],
+                         preferred_element_type=jnp.float32)
+            gp = jnp.dot(xp, wg_slots[slot, :ksz],
+                         preferred_element_type=jnp.float32)
+            h = hp if p == 0 else h + hp
+            g = gp if p == 0 else g + gp
+        else:
+            if p == 0:
+                u = (act(g) * h).astype(xs.dtype)
+            f0 = p * tile_f
+            fsz = min(tile_f, f - f0)
+            yp = jnp.dot(u[:, f0:f0 + fsz], wd_slots[slot, :fsz],
+                         preferred_element_type=jnp.float32)
+            y = yp if p == 0 else y + yp
+            if p == kp_f - 1:
+                ys.append(y.reshape(b, 1, cc, dm).astype(o_ref.dtype))
+    block = jnp.concatenate(ys, axis=1)               # [B, E, C, D]
 
     @pl.when(off != 0)
     def _():
         # finished block: PUT straight into the peer's output slot for
         # this source rank (zero-copy combine; data lands in final layout)
-        tx_ref[i] = y
+        tx_ref[i] = block
         remote_tile_put(tx_ref.at[i], o_ref.at[my], send_sem, recv_sem,
                         dest, axis_name, id_style).start()
 
     @pl.when(off == 0)
     def _():
-        o_ref[my] = y
+        o_ref[my] = block
 
     @pl.when(i == n_dev - 1)
     def _():
@@ -100,36 +176,55 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_ref, wg_ref, wd_ref, o_ref,
 @functools.partial(jax.jit,
                    static_argnames=("n_dev", "act", "comm_aware",
                                     "collective_id", "interpret",
-                                    "axis_name", "id_style"))
+                                    "axis_name", "id_style", "tile_k",
+                                    "tile_f"))
 def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
                           axis_name, act, comm_aware=True, collective_id=8,
-                          interpret=True, id_style=None):
+                          interpret=True, id_style=None, tile_k=None,
+                          tile_f=None):
     """Per-shard fused expert FFN + combine All-to-All.
 
     xt: [n_dev, B, E_loc, C, D] dispatched tokens stacked by combine
     destination; w_up/w_gate: [E_loc, D, F]; w_down: [E_loc, F, D];
     my_ep: int32 ring position.  Returns [n_dev, B, E_loc, C, D] stacked
     by *source* rank (the bulk All-to-All's layout).
+
+    ``tile_k`` / ``tile_f`` bound the contraction panels of the up/gate
+    and down GEMMs (``None`` = whole depth; values need not divide D or F
+    — the final panel of either contraction is ragged).  The weights are
+    streamed per (expert, panel) from HBM, so per-expert ``D x F`` and
+    the ``E_loc`` multiplier never hit VMEM at once.
     """
     if id_style is None:
         id_style = "logical" if interpret else "mesh"
     nd, b, e, c, d = xt.shape
+    f = w_up.shape[2]
     assert nd == n_dev, (nd, n_dev)
-    kernel = functools.partial(_gemm_a2a_kernel, n_dev=n_dev, act=act,
-                               axis_name=axis_name, id_style=id_style)
+    tile_k = d if tile_k is None else max(1, min(int(tile_k), d))
+    tile_f = f if tile_f is None else max(1, min(int(tile_f), f))
+    kernel = functools.partial(_gemm_a2a_kernel, n_dev=n_dev, e_loc=e,
+                               tile_k=tile_k, tile_f=tile_f, dm=d, f=f,
+                               act=act, axis_name=axis_name,
+                               id_style=id_style)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_dev,),
         in_specs=[
             pl.BlockSpec(memory_space=ANY),           # token blocks in HBM
-            pl.BlockSpec((e,) + w_up.shape[1:], lambda i, s: (0, 0, 0)),
-            pl.BlockSpec((e,) + w_gate.shape[1:], lambda i, s: (0, 0, 0)),
-            pl.BlockSpec((e,) + w_down.shape[1:], lambda i, s: (0, 0, 0)),
+            pl.BlockSpec(memory_space=ANY),           # w_up in HBM
+            pl.BlockSpec(memory_space=ANY),           # w_gate in HBM
+            pl.BlockSpec(memory_space=ANY),           # w_down in HBM
         ],
         out_specs=pl.BlockSpec((nd, b, e, c, d), lambda i, s: (0,) * 5),
         scratch_shapes=[
             pltpu.VMEM((2, b, e, c, d), xt.dtype),    # streamed x blocks
             pltpu.SemaphoreType.DMA((2,)),            # block double buffer
+            pltpu.VMEM((2, tile_k, f), w_up.dtype),   # streamed up panels
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((2, tile_k, f), w_gate.dtype),  # streamed gate panels
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((2, tile_f, d), w_down.dtype),  # streamed down panels
+            pltpu.SemaphoreType.DMA((2,)),
             # tx staging: remote blocks only (own block is written to the
             # output directly and scheduled last, so remote steps are
             # i < n_dev - 1)

@@ -23,18 +23,21 @@ def fused_gemm_a2a_kernel_available(mesh=None) -> bool:
 
 
 def fused_gemm_a2a_shard(xt, w_up, w_gate, w_down, axis, *, act,
-                         comm_aware=True):
+                         comm_aware=True, tile_k=None, tile_f=None):
     """Call inside shard_map.  xt: [n, B_loc, E_loc, C, D] stacked by
-    combine destination; the PUT ring runs over mesh axis ``axis``."""
+    combine destination; the PUT ring runs over mesh axis ``axis``.
+    ``tile_k`` / ``tile_f`` bound the streamed weight panels of the
+    up/gate and down GEMM contractions (None = whole depth)."""
     n_dev = axis_size(axis)
     my = lax.axis_index(axis)
     return fused_gemm_a2a_pallas(
         xt, w_up, w_gate, w_down, my, n_dev=n_dev, axis_name=axis, act=act,
-        comm_aware=comm_aware, interpret=interpret_mode())
+        comm_aware=comm_aware, interpret=interpret_mode(), tile_k=tile_k,
+        tile_f=tile_f)
 
 
 def fused_gemm_a2a(ctx: ParallelContext, x_dispatched, w_up, w_gate, w_down,
-                   *, act, comm_aware=True):
+                   *, act, comm_aware=True, tile_k=None, tile_f=None):
     """Standalone global-array entry (tests/benchmarks).
 
     x_dispatched: [B, n_ep, E, C, D] global, E sharded over tp — same
@@ -47,7 +50,8 @@ def fused_gemm_a2a(ctx: ParallelContext, x_dispatched, w_up, w_gate, w_down,
     def local_fn(xl, wu, wg, wd):
         xt = jnp.moveaxis(xl, 1, 0)  # [n_ep, B_loc, E_loc, C, D]
         out = fused_gemm_a2a_shard(xt, wu, wg, wd, ctx.tp_axis, act=act,
-                                   comm_aware=comm_aware)
+                                   comm_aware=comm_aware, tile_k=tile_k,
+                                   tile_f=tile_f)
         return jnp.moveaxis(out, 0, 1)
 
     return shard_map(

@@ -4,17 +4,22 @@ This is the direct TPU analogue of the paper's flagship kernel, rebuilt
 as a **tile-granular pipeline** (T3-style track-&-trigger at output-tile
 granularity):
 
-* The kernel runs a multi-step grid over output tiles.  ``w`` stays in
-  HBM; each step's ``[K, tile_n]`` weight panel is streamed into a VMEM
-  double buffer one step ahead of its use, so VMEM holds two panels — not
-  the whole operand.  This removes the old single-shot kernel's VMEM
-  capacity cliff: ``K x N`` may exceed VMEM by an arbitrary factor.
-* As soon as a tile's accumulation completes, it is PUT into the owning
-  peer's reduction buffer with ``pltpu.make_async_remote_copy`` (the
-  ROC_SHMEM non-blocking PUT analogue); HBM DMA-in, MXU compute, and
-  remote DMA-out of different tiles are all in flight simultaneously.
-  DMA completion semaphores replace the paper's WG_Done bitmask /
-  sliceRdy polling flags.
+* The kernel runs a multi-step grid over (output tile, K panel) pairs.
+  ``w`` stays in HBM; each step's ``[tile_k, tile_n]`` weight panel is
+  streamed into a VMEM double buffer one step ahead of its use, so VMEM
+  holds two panels — not the whole operand and not even a whole
+  ``[K, tile_n]`` column strip.  ``N x K`` may exceed VMEM by an
+  arbitrary factor in *both* dimensions: ``tile_n`` bounds the output
+  width, ``tile_k`` bounds the contraction depth.  Partial products are
+  accumulated in a f32 VMEM scratch across K panels; the final K panel
+  may be *ragged* (``K % tile_k != 0``) — its copy descriptor and matmul
+  are sized to the remainder.
+* As soon as a tile's accumulation over its last K panel completes, it
+  is PUT into the owning peer's reduction buffer with
+  ``pltpu.make_async_remote_copy`` (the ROC_SHMEM non-blocking PUT
+  analogue); HBM DMA-in, MXU compute, and remote DMA-out of different
+  tiles are all in flight simultaneously.  DMA completion semaphores
+  replace the paper's WG_Done bitmask / sliceRdy polling flags.
 * Zero-copy: each remote write lands directly in the consumer's
   per-source reduction slot (phase 1) or directly in the consumer's
   *output ref* (phase 2) — no staging buffer or copy kernel on the
@@ -23,8 +28,9 @@ granularity):
   first; the locally-reduced tiles are computed *last* (paper Fig. 7b),
   so local compute hides remote wire time.  The per-rank chunk is further
   split into ``tiles_per_rank`` sub-tiles — the kernel-level face of the
-  ``chunks_per_rank`` granularity knob (paper Fig. 13); ``tile_n`` is
-  picked by :func:`repro.core.autotune.choose_tile_n` when not pinned.
+  ``chunks_per_rank`` granularity knob (paper Fig. 13); ``tile_n`` /
+  ``tile_k`` are picked by :func:`repro.core.autotune.choose_tile_n` /
+  :func:`repro.core.autotune.choose_tile_k` when not pinned.
 * Two-phase direct AllReduce (the paper's choice for fully-connected
   scale-up nodes): phase 1 reduce-scatter via the PUTs above; phase 2
   each rank broadcasts its reduced chunk straight into every peer's
@@ -44,67 +50,136 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
-from repro.core.autotune import choose_tile_n, feasible_tile
+from repro.core.autotune import choose_tile_k, choose_tile_n, feasible_tile
 from repro.kernels.tile_pipeline import (ANY, drain, neighbor_barrier,
                                          remote_tile_put, step_schedule,
                                          stream_tile_copy)
 
 
 def _fused_kernel(ids_ref, x_ref, w_hbm, o_ref,
-                  w_slots, w_sems, tx_ref, rx_ref, acc_ref,
+                  w_slots, w_sems, kacc_ref, tx_ref, rx_ref, acc_ref,
                   send_sem, recv_sem, bsend_sem, brecv_sem, *,
-                  n_dev, tiles_per_rank, tile_n, barrier,
-                  axis_name, id_style):
+                  n_dev, tiles_per_rank, tile_n, tile_k, k_panels, k_rem,
+                  barrier, axis_name, id_style):
     my = ids_ref[0]
     i = pl.program_id(0)
     num_tiles = n_dev * tiles_per_rank
+    num_steps = num_tiles * k_panels
     bn = tiles_per_rank * tile_n
-    # schedule rides in the prefetch operand: ids = [my | offs | subs]
-    step_off = lambda s: ids_ref[1 + s]
-    step_sub = lambda s: ids_ref[1 + num_tiles + s]
+    ragged = k_rem != tile_k
+    # schedule rides in the prefetch operand: ids = [my | offs | subs],
+    # indexed by the *tile* a step belongs to
+    step_off = lambda t: ids_ref[1 + t]
+    step_sub = lambda t: ids_ref[1 + num_tiles + t]
 
-    def wdma(step, slot):
-        dest = lax.rem(my + step_off(step), n_dev)
-        col = dest * bn + step_sub(step) * tile_n
-        return stream_tile_copy(w_hbm, w_slots, w_sems, slot, col, tile_n)
+    def wdma(step, last_panel: bool):
+        """HBM→VMEM copy descriptor for one [tile_k, tile_n] weight panel.
+
+        ``last_panel`` selects the statically-sized ragged descriptor for
+        the final K panel; wait descriptors must rebuild the same variant
+        (DMA semaphores account by bytes)."""
+        t = lax.div(step, k_panels)
+        p = lax.rem(step, k_panels)
+        slot = lax.rem(step, 2)
+        dest = lax.rem(my + step_off(t), n_dev)
+        col = dest * bn + step_sub(t) * tile_n
+        if last_panel and ragged:
+            return pltpu.make_async_copy(
+                w_hbm.at[pl.ds((k_panels - 1) * tile_k, k_rem),
+                         pl.ds(col, tile_n)],
+                w_slots.at[slot, pl.ds(0, k_rem)],
+                w_sems.at[slot],
+            )
+        return stream_tile_copy(w_hbm, w_slots, w_sems, slot,
+                                col, tile_n, row_start=p * tile_k,
+                                rows=tile_k)
+
+    def start(step):
+        """Start ``step``'s panel copy (ragged-aware when K is ragged)."""
+        if not ragged:
+            wdma(step, False).start()
+            return
+        p = lax.rem(step, k_panels)
+
+        @pl.when(p == k_panels - 1)
+        def _():
+            wdma(step, True).start()
+
+        @pl.when(p != k_panels - 1)
+        def _():
+            wdma(step, False).start()
 
     @pl.when(i == 0)
     def _():
         if barrier:
             # sync ring neighbours before touching symmetric buffers
             neighbor_barrier(my, n_dev, axis_name, id_style)
-        wdma(0, 0).start()
+        # step 0 is panel 0 of the first tile — ragged only if k_panels==1,
+        # which implies tile_k == K and k_rem == tile_k (never ragged)
+        wdma(jnp.int32(0), False).start()
 
-    @pl.when(i + 1 < num_tiles)
+    @pl.when(i + 1 < num_steps)
     def _():
-        wdma(i + 1, (i + 1) % 2).start()
+        start(i + 1)
 
-    # ---- tile pipeline: wait panel in, matmul, trigger PUT out ---------
-    wdma(i, i % 2).wait()
-    partial = jnp.dot(x_ref[...], w_slots[i % 2],
-                      preferred_element_type=jnp.float32)
-    off = step_off(i)
-    sub = step_sub(i)
+    # ---- K-panel pipeline: wait panel in, matmul, accumulate ----------
+    p = lax.rem(i, k_panels)
+    slot = lax.rem(i, 2)
+
+    def accumulate(partial):
+        @pl.when(p == 0)
+        def _():
+            kacc_ref[...] = partial
+
+        @pl.when(p != 0)
+        def _():
+            kacc_ref[...] += partial
+
+    if not ragged:
+        wdma(i, False).wait()
+        accumulate(jnp.dot(x_ref[:, pl.ds(p * tile_k, tile_k)],
+                           w_slots[slot],
+                           preferred_element_type=jnp.float32))
+    else:
+        @pl.when(p == k_panels - 1)
+        def _():
+            wdma(i, True).wait()
+            accumulate(jnp.dot(
+                x_ref[:, pl.ds((k_panels - 1) * tile_k, k_rem)],
+                w_slots[slot, pl.ds(0, k_rem)],
+                preferred_element_type=jnp.float32))
+
+        @pl.when(p != k_panels - 1)
+        def _():
+            wdma(i, False).wait()
+            accumulate(jnp.dot(x_ref[:, pl.ds(p * tile_k, tile_k)],
+                               w_slots[slot],
+                               preferred_element_type=jnp.float32))
+
+    # ---- last K panel of a tile: trigger PUT / place own tile ---------
+    t = lax.div(i, k_panels)
+    off = step_off(t)
+    sub = step_sub(t)
     dest = lax.rem(my + off, n_dev)
 
-    @pl.when(off != 0)
+    @pl.when((p == k_panels - 1) & (off != 0))
     def _():
         # remote tile: stage in wire dtype, PUT into the peer's per-source
-        # slot the moment the MXU finishes this tile (phase-1 RS)
-        tx_ref[i] = partial.astype(tx_ref.dtype)
+        # slot the moment the accumulation finishes (phase-1 RS)
+        tx_ref[t] = kacc_ref[...].astype(tx_ref.dtype)
         remote_tile_put(
-            tx_ref.at[i],
+            tx_ref.at[t],
             rx_ref.at[my, :, pl.ds(sub * tile_n, tile_n)],
             send_sem, recv_sem, dest, axis_name, id_style,
         ).start()
 
-    @pl.when(off == 0)
+    @pl.when((p == k_panels - 1) & (off == 0))
     def _():
         # own tiles last: local compute hides the PUTs' wire time (Fig. 7b)
-        acc_ref[:, pl.ds(sub * tile_n, tile_n)] = partial
+        acc_ref[:, pl.ds(sub * tile_n, tile_n)] = kacc_ref[...]
 
     # ---- final step: reduce arrivals, write own chunk, broadcast -------
-    @pl.when(i == num_tiles - 1)
+    @pl.when(i == num_steps - 1)
     def _():
         n_remote = (n_dev - 1) * tiles_per_rank
         # sliceRdy analogue: the DMA recv semaphore counts tile arrivals
@@ -139,11 +214,13 @@ def _fused_kernel(ids_ref, x_ref, w_hbm, o_ref,
 @functools.partial(jax.jit,
                    static_argnames=("n_dev", "comm_aware", "collective_id",
                                     "barrier", "interpret", "axis_name",
-                                    "id_style", "tile_n"))
+                                    "id_style", "tile_n", "tile_k",
+                                    "vmem_budget_bytes"))
 def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
                                   comm_aware=True, collective_id=7,
                                   barrier=False, interpret=True,
-                                  id_style=None, tile_n=None):
+                                  id_style=None, tile_n=None, tile_k=None,
+                                  vmem_budget_bytes=8 << 20):
     """Per-shard tile-pipelined fused GEMV/GEMM+AllReduce.
 
     x: [B, K_loc]; w: [K_loc, N]; my_tp: int32 scalar (position on the
@@ -152,7 +229,10 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
     ``tile_n`` is the output-tile width of the pipeline (the granularity
     knob): ``None`` lets the autotuner size it against the VMEM budget;
     any requested value is clamped to the largest divisor of the per-rank
-    chunk ``N // n_dev`` so tiles stay uniform.
+    chunk ``N // n_dev`` so tiles stay uniform.  ``tile_k`` is the
+    contraction-panel depth: ``None`` sizes it so two ``[tile_k, tile_n]``
+    panels plus the fixed buffers fit ``vmem_budget_bytes``; it need not
+    divide ``K`` — the final panel is ragged.
     """
     if id_style is None:
         id_style = "logical" if interpret else "mesh"
@@ -162,8 +242,16 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
     bn = n // n_dev
     if tile_n is None:
         tile_n = choose_tile_n(b, k, n, n_dev=n_dev,
-                               dtype_bytes=x.dtype.itemsize)
+                               dtype_bytes=x.dtype.itemsize,
+                               vmem_budget_bytes=vmem_budget_bytes)
     tile_n = feasible_tile(bn, tile_n)
+    if tile_k is None:
+        tile_k = choose_tile_k(b, k, n, tile_n, n_dev=n_dev,
+                               dtype_bytes=x.dtype.itemsize,
+                               vmem_budget_bytes=vmem_budget_bytes)
+    tile_k = max(1, min(int(tile_k), k))
+    k_panels = -(-k // tile_k)
+    k_rem = k - (k_panels - 1) * tile_k
     tiles_per_rank = bn // tile_n
     num_tiles = n_dev * tiles_per_rank
 
@@ -171,21 +259,23 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
     # the kernel body is schedule-agnostic
     kernel = functools.partial(_fused_kernel, n_dev=n_dev,
                                tiles_per_rank=tiles_per_rank, tile_n=tile_n,
+                               tile_k=tile_k, k_panels=k_panels, k_rem=k_rem,
                                barrier=barrier,
                                axis_name=axis_name, id_style=id_style)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(num_tiles,),
+        grid=(num_tiles * k_panels,),
         in_specs=[
             pl.BlockSpec((b, k), lambda i, s: (0, 0)),
             pl.BlockSpec(memory_space=ANY),           # w stays in HBM
         ],
         out_specs=pl.BlockSpec((b, n), lambda i, s: (0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((2, k, tile_n), w.dtype),      # streamed w panels
+            pltpu.VMEM((2, tile_k, tile_n), w.dtype),  # streamed w panels
             pltpu.SemaphoreType.DMA((2,)),            # panel double buffer
+            pltpu.VMEM((b, tile_n), jnp.float32),     # K-panel accumulator
             # tx staging: remote tiles only — the schedule puts the own
-            # (non-staged) tiles last, so remote steps are i < n_remote
+            # (non-staged) tiles last, so remote tiles are t < n_remote
             pltpu.VMEM((max((n_dev - 1) * tiles_per_rank, 1), b, tile_n),
                        x.dtype),
             pltpu.VMEM((n_dev, b, bn), x.dtype),      # rx slots (per source)

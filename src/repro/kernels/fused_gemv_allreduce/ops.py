@@ -23,19 +23,24 @@ def fused_matmul_allreduce_kernel_available(mesh=None) -> bool:
 
 
 def fused_matmul_allreduce_shard(xl, wl, axis, *, comm_aware=True,
-                                 tile_n=None):
+                                 tile_n=None, tile_k=None,
+                                 vmem_budget_bytes=8 << 20):
     """Call inside shard_map.  xl: [rows_loc, K_loc]; wl: [K_loc, N].
     The PUT ring runs over mesh axis ``axis``.  ``tile_n`` pins the
-    pipeline's output-tile width (None = autotuned from the VMEM budget)."""
+    pipeline's output-tile width and ``tile_k`` its contraction-panel
+    depth (None = autotuned from the VMEM budget; ``tile_k`` may leave a
+    ragged final K panel)."""
     n_dev = axis_size(axis)
     my = lax.axis_index(axis)
     return fused_matmul_allreduce_pallas(
         xl, wl, my, n_dev=n_dev, axis_name=axis, comm_aware=comm_aware,
-        interpret=interpret_mode(), tile_n=tile_n)
+        interpret=interpret_mode(), tile_n=tile_n, tile_k=tile_k,
+        vmem_budget_bytes=vmem_budget_bytes)
 
 
 def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True,
-                           tile_n=None):
+                           tile_n=None, tile_k=None,
+                           vmem_budget_bytes=8 << 20):
     """Standalone global-array entry (tests/benchmarks).
 
     x: [..., K] K sharded over tp; w: [K, N] row-sharded -> [..., N]."""
@@ -46,7 +51,8 @@ def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True,
 
     def local_fn(xl, wl):
         return fused_matmul_allreduce_shard(
-            xl, wl, ctx.tp_axis, comm_aware=comm_aware, tile_n=tile_n)
+            xl, wl, ctx.tp_axis, comm_aware=comm_aware, tile_n=tile_n,
+            tile_k=tile_k, vmem_budget_bytes=vmem_budget_bytes)
 
     yf = shard_map(
         local_fn, mesh=ctx.mesh,

@@ -50,11 +50,21 @@ def neighbor_barrier(my, n_dev: int, axis_name: str, id_style: str):
     pltpu.semaphore_wait(bsem, 2)
 
 
-def stream_tile_copy(hbm_ref, vmem_slots, sems, slot, col_start, tile_n):
-    """Descriptor for one HBM→VMEM column-panel copy into a double-buffer
-    slot.  Start it one step ahead; wait with an identical descriptor."""
+def stream_tile_copy(hbm_ref, vmem_slots, sems, slot, col_start, tile_n,
+                     row_start=None, rows=None):
+    """Descriptor for one HBM→VMEM panel copy into a double-buffer slot.
+
+    With ``row_start``/``rows`` unset the panel spans every row (the
+    ``[K, tile_n]`` column strip); setting them streams a
+    ``[rows, tile_n]`` sub-panel — the K-dim streaming used by the
+    contraction-tiled kernels.  Start it one step ahead; wait with an
+    identical descriptor."""
+    if row_start is None:
+        src = hbm_ref.at[:, pl.ds(col_start, tile_n)]
+    else:
+        src = hbm_ref.at[pl.ds(row_start, rows), pl.ds(col_start, tile_n)]
     return pltpu.make_async_copy(
-        hbm_ref.at[:, pl.ds(col_start, tile_n)],
+        src,
         vmem_slots.at[slot],
         sems.at[slot],
     )

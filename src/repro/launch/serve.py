@@ -12,7 +12,8 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core.autotune import parse_granularity
+from repro.core.autotune import (add_granularity_cli_args,
+                                 load_cache_if_exists, save_cache)
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
@@ -27,13 +28,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
-    ap.add_argument("--granularity", default=1, type=parse_granularity,
-                    help="chunks_per_rank sub-chunk factor for fused "
-                         "collectives: an int >= 1, or 'auto' for the "
-                         "shape-keyed alpha-beta autotuner (paper Fig. 13)")
+    add_granularity_cli_args(ap)
     ap.add_argument("--production-mesh", action="store_true")
     args = ap.parse_args()
 
+    load_cache_if_exists(args.tune_cache)
     fusion = FusionConfig(mode=args.fusion, granularity=args.granularity)
     ctx = (make_context(fusion=fusion) if args.production_mesh
            else make_host_mesh(fusion=fusion))
@@ -62,6 +61,8 @@ def main():
           f"batch={args.batch}, fusion={args.fusion})")
     for r in finished[:4]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.tokens[:12]}")
+    if args.tune_cache:
+        save_cache(args.tune_cache)
     return finished
 
 

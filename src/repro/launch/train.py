@@ -18,7 +18,8 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core.autotune import parse_granularity
+from repro.core.autotune import (add_granularity_cli_args,
+                                 load_cache_if_exists, save_cache)
 from repro.data.synthetic import DLRMBatches, LMBatches
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
@@ -70,10 +71,7 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
-    ap.add_argument("--granularity", default=1, type=parse_granularity,
-                    help="chunks_per_rank sub-chunk factor for fused "
-                         "collectives: an int >= 1, or 'auto' for the "
-                         "shape-keyed alpha-beta autotuner (paper Fig. 13)")
+    add_granularity_cli_args(ap)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true")
@@ -81,6 +79,7 @@ def main():
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
+    load_cache_if_exists(args.tune_cache)
     fusion = FusionConfig(mode=args.fusion, granularity=args.granularity)
     ctx = (make_context(fusion=fusion) if args.production_mesh
            else make_host_mesh(fusion=fusion))
@@ -122,6 +121,8 @@ def main():
     state, step = sup.run(state, batches, args.steps, on_metrics=on_metrics)
     print(f"done at step {step}; loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
           f"straggler stats {sup.straggler.summary()}")
+    if args.tune_cache:
+        save_cache(args.tune_cache)
     return losses
 
 

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import attention_partial_merge, ring_permute
+from repro.core.autotune import resolve_chunks_per_rank, tune_ring_attention
+from repro.core.collectives import (attention_partial_merge, ring_permute,
+                                    split_ring_payload)
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
@@ -176,18 +178,26 @@ def _span_flash_bwd(q5, kc, vc, do5, delta, m, l, qpos, kpos, dq5, *,
 
 
 def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
-                         q_block, kv_block, Hq, Hkv, hd, s_loc, n_world):
+                         q_block, kv_block, Hq, Hkv, hd, s_loc, n_world,
+                         n_sub=1):
     """Ring attention with analytic backward (custom VJP).
 
     Forward: each arriving KV chunk is flash-consumed while the next hop's
     collective-permute is in flight (the fused AllGather x attention op).
-    Backward: KV chunks ring again (recomputed masks/scores, flash-bwd per
-    chunk); each chunk's (dk, dv) accumulator travels the ring *with* the
-    chunk and is delivered back to its owner in one final offset permute.
-    Peak memory: one score tile — autodiff through the unrolled ring would
-    instead save every hop's probability tensors.
+    ``n_sub`` (= ``chunks_per_rank``, paper Fig. 13) splits the local KV
+    chunk into sub-chunks that ring *independently*: each sub-chunk is
+    forwarded the moment the previous sub-chunk's attention partial has
+    been consumed, so sub-chunk ``j``'s wire time hides behind sub-chunk
+    ``j-1``'s flash update; the online-softmax stats merge per sub-chunk
+    through the shared (m, l, o) carry.
+    Backward: KV sub-chunks ring again (recomputed masks/scores, flash-bwd
+    per sub-chunk); each sub-chunk's (dk, dv) accumulator travels the ring
+    *with* its sub-chunk and is delivered back to its owner in one final
+    offset permute.  Peak memory: one score tile — autodiff through the
+    unrolled ring would instead save every hop's probability tensors.
     """
     g = Hq // Hkv
+    sub = s_loc // n_sub
     # Without causal/window masking the position arrays are dead code; an
     # unconsumed axis_index leaves a dangling partition-id instruction that
     # the SPMD partitioner refuses, so only trace it when a mask needs it.
@@ -207,18 +217,22 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
         qpos = d * s_loc + jnp.arange(s_loc)
         q5 = ql.reshape(b, s_loc, Hkv, g, hd)
         carry = _init_carry(b, Hkv, g, s_loc, hd)
+        # local chunk whole: it is resident at t=0, no wire to hide
         carry = _span_flash(q5, kl, vl, qpos, d * s_loc + jnp.arange(s_loc),
                             carry, causal=causal, window=window, scale=scale,
                             cap=cap, q_block=q_block, kv_block=kv_block)
-        kbuf, vbuf = kl, vl
+        kbufs = split_ring_payload(kl, n_sub)
+        vbufs = split_ring_payload(vl, n_sub)
         for i in range(1, hops + 1):
-            kbuf = ring_permute(kbuf, axis, n)
-            vbuf = ring_permute(vbuf, axis, n)
             src = (d - i) % n
-            carry = _span_flash(q5, kbuf, vbuf, qpos,
-                                src * s_loc + jnp.arange(s_loc), carry,
-                                causal=causal, window=window, scale=scale,
-                                cap=cap, q_block=q_block, kv_block=kv_block)
+            for j in range(n_sub):
+                kbufs[j] = ring_permute(kbufs[j], axis, n)
+                vbufs[j] = ring_permute(vbufs[j], axis, n)
+                carry = _span_flash(
+                    q5, kbufs[j], vbufs[j], qpos,
+                    src * s_loc + j * sub + jnp.arange(sub), carry,
+                    causal=causal, window=window, scale=scale,
+                    cap=cap, q_block=q_block, kv_block=kv_block)
         m, l, _ = carry
         o = _finalize(carry, b, s_loc, Hq, hd)
         return o.astype(ql.dtype), m, l
@@ -246,30 +260,37 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
             q5, kl, vl, do5, delta, m, l, qpos, kpos0, dq5,
             causal=causal, window=window, scale=scale, cap=cap,
             q_block=q_block, kv_block=kv_block)
-        kbuf, vbuf = kl, vl
+        kbufs = split_ring_payload(kl, n_sub)
+        vbufs = split_ring_payload(vl, n_sub)
         # traveling (dk, dv) accumulators ride in the operand dtype — bf16
         # wire for bf16 models (halves ring bytes), f32 kept exact
-        dkbuf, dvbuf = dk.astype(kl.dtype), dv.astype(vl.dtype)
+        dkbufs = [s.astype(kl.dtype) for s in split_ring_payload(dk, n_sub)]
+        dvbufs = [s.astype(vl.dtype) for s in split_ring_payload(dv, n_sub)]
         for i in range(1, hops + 1):
-            kbuf = ring_permute(kbuf, axis, n)
-            vbuf = ring_permute(vbuf, axis, n)
-            dkbuf = ring_permute(dkbuf, axis, n)
-            dvbuf = ring_permute(dvbuf, axis, n)
             src = (d - i) % n
-            dq5, dkf, dvf = _span_flash_bwd(
-                q5, kbuf, vbuf, do5, delta, m, l, qpos,
-                src * s_loc + jnp.arange(s_loc), dq5,
-                causal=causal, window=window, scale=scale, cap=cap,
-                q_block=q_block, kv_block=kv_block,
-                dk0=dkbuf.astype(jnp.float32), dv0=dvbuf.astype(jnp.float32))
-            dkbuf, dvbuf = dkf.astype(kl.dtype), dvf.astype(vl.dtype)
+            for j in range(n_sub):
+                kbufs[j] = ring_permute(kbufs[j], axis, n)
+                vbufs[j] = ring_permute(vbufs[j], axis, n)
+                dkbufs[j] = ring_permute(dkbufs[j], axis, n)
+                dvbufs[j] = ring_permute(dvbufs[j], axis, n)
+                dq5, dkf, dvf = _span_flash_bwd(
+                    q5, kbufs[j], vbufs[j], do5, delta, m, l, qpos,
+                    src * s_loc + j * sub + jnp.arange(sub), dq5,
+                    causal=causal, window=window, scale=scale, cap=cap,
+                    q_block=q_block, kv_block=kv_block,
+                    dk0=dkbufs[j].astype(jnp.float32),
+                    dv0=dvbufs[j].astype(jnp.float32))
+                dkbufs[j] = dkf.astype(kl.dtype)
+                dvbufs[j] = dvf.astype(vl.dtype)
         # deliver accumulated (dk, dv) back to the owning rank: the chunk
         # rests hops ranks ahead of its owner -> one offset permute home
         if hops % n != 0:
-            dkbuf = ring_permute(dkbuf, axis, n, shift=-hops)
-            dvbuf = ring_permute(dvbuf, axis, n, shift=-hops)
+            dkbufs = [ring_permute(s, axis, n, shift=-hops) for s in dkbufs]
+            dvbufs = [ring_permute(s, axis, n, shift=-hops) for s in dvbufs]
+        dkl = dkbufs[0] if n_sub == 1 else jnp.concatenate(dkbufs, axis=1)
+        dvl = dvbufs[0] if n_sub == 1 else jnp.concatenate(dvbufs, axis=1)
         dql = dq5.reshape(b, s_loc, Hq, hd).astype(ql.dtype)
-        return dql, dkbuf.astype(kl.dtype), dvbuf.astype(vl.dtype)
+        return dql, dkl.astype(kl.dtype), dvl.astype(vl.dtype)
 
     ring_attn.defvjp(fwd_rule, bwd_rule)
     return ring_attn
@@ -289,7 +310,11 @@ def context_attention(
     mode: str | None = None,
     q_block: int = 256,
     kv_block: int = 1024,
+    chunks_per_rank: int | str | None = None,
 ):
+    """``chunks_per_rank`` sub-chunks the KV ring payload (paper Fig. 13);
+    ``None`` defers to ``FusionConfig.granularity`` and ``"auto"`` to the
+    shape-keyed alpha-beta tuner (:func:`tune_ring_attention`)."""
     mode = mode or ctx.fusion.resolve("kv_ag")
     axis, n = ctx.tp_axis, ctx.tp
     B, S, Hq, hd = q.shape
@@ -305,9 +330,18 @@ def context_attention(
         hops = min(n - 1, -(-window // s_loc))
 
     if mode != "bulk":
+        b_loc = B // ctx.dp if dp is not None else B
+        # the ring payload is the local KV chunk: only q | s_loc matters
+        n_sub = resolve_chunks_per_rank(
+            chunks_per_rank, ctx.fusion.granularity,
+            lambda: tune_ring_attention(
+                b_loc, s_loc, Hq, Hkv, hd, dtype_bytes=k.dtype.itemsize,
+                n_dev=n, hops=hops),
+            dim=s_loc, ring=1)
         ring_attn = _make_ring_attention(
             axis, n, hops, causal, window, scale, softcap_val,
-            q_block, kv_block, Hq, Hkv, hd, s_loc, ctx.mesh.size)
+            q_block, kv_block, Hq, Hkv, hd, s_loc, ctx.mesh.size,
+            n_sub=n_sub)
 
     def local_fn(ql, kl, vl):
         d = lax.axis_index(axis)

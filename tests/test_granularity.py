@@ -1,17 +1,20 @@
-"""Tile-granular pipelined kernels + sub-chunk ring granularity + autotuner."""
+"""Tile-pipelined kernels (N and K dims), autotuner, measured sweep.
+
+XLA-level ``chunks_per_rank`` parity for every fused-op family lives in
+``test_parity_matrix.py``; this module owns the Pallas kernel pipelines
+and the autotuner unit behaviour.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import autotune
-from repro.core.autotune import (choose_chunks_per_rank, choose_tile_n,
-                                 feasible_tile, measured_best,
+from repro.core.autotune import (choose_chunks_per_rank, choose_tile_k,
+                                 choose_tile_n, feasible_tile, measured_best,
                                  resolve_granularity)
 from repro.core.collectives import feasible_chunks_per_rank
-from repro.core.fused import (allgather_matmul, embedding_all_to_all,
-                              fused_expert_ffn_combine, matmul_allreduce,
-                              matmul_reducescatter, moe_dispatch_all_to_all)
+from repro.core.fused import fused_expert_ffn_combine, matmul_allreduce
 from repro.core.perfmodel import V5E, model_bulk, model_fused
 from repro.kernels.fused_gemm_a2a.ops import fused_gemm_a2a
 from repro.kernels.fused_gemv_allreduce.ops import fused_matmul_allreduce
@@ -60,6 +63,47 @@ def test_pipelined_kernel_exceeds_old_vmem_block(ctx1d, rng):
 
 
 # ---------------------------------------------------------------------------
+# K-panel streaming: the contraction dim no longer caps at VMEM
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tile_k", [16, 32])
+def test_kpanel_streaming_even_panels(ctx1d, rng, tile_k):
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 128)).astype(np.float32)
+    y = jax.jit(lambda x, w: fused_matmul_allreduce(
+        ctx1d, x, w, tile_n=8, tile_k=tile_k))(x, w)
+    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("k,tile_k", [(56, 16), (72, 32), (40, 24)])
+def test_kpanel_ragged_final_panel(ctx1d, rng, k, tile_k):
+    """tile_k need not divide K: the final panel streams (and matmuls)
+    only the K remainder — its copy descriptor is sized to the ragged
+    rows, so the DMA byte accounting stays exact."""
+    x = rng.standard_normal((4, k)).astype(np.float32)
+    w = rng.standard_normal((k, 64)).astype(np.float32)
+    y = jax.jit(lambda x, w: fused_matmul_allreduce(
+        ctx1d, x, w, tile_n=8, tile_k=tile_k))(x, w)
+    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=2e-3, atol=2e-3)
+
+
+def test_kpanel_exceeds_vmem_budget(ctx1d, rng):
+    """A shape whose full [K, tile_n] double-buffered panel exceeds the
+    VMEM budget: the tuner must pick tile_k < K (K-panel streaming
+    actually exercised) and parity must hold."""
+    budget = 96 << 10
+    K, N, tile_n = 256, 512, 64
+    assert 2 * K * tile_n * 4 > budget        # full-K panels cannot fit
+    tk = choose_tile_k(2, K, N, tile_n, n_dev=8, dtype_bytes=4,
+                       vmem_budget_bytes=budget)
+    assert 1 <= tk < K
+    x = rng.standard_normal((2, K)).astype(np.float32)
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    y = jax.jit(lambda x, w: fused_matmul_allreduce(
+        ctx1d, x, w, tile_n=tile_n, vmem_budget_bytes=budget))(x, w)
+    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
 # device-initiated fused GEMM + All-to-All kernel
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("comm_aware", [True, False])
@@ -81,73 +125,22 @@ def test_fused_gemm_a2a_kernel_matches_bulk(ctx1d, rng, comm_aware):
                                rtol=2e-3, atol=2e-3)
 
 
-# ---------------------------------------------------------------------------
-# XLA-level sub-chunk granularity: chunks_per_rank parity vs bulk
-# ---------------------------------------------------------------------------
-@pytest.mark.parametrize("q", [1, 2, 4, "auto"])
-@pytest.mark.parametrize("schedule", ["comm_aware", "oblivious"])
-def test_matmul_allreduce_chunks_per_rank(ctx, rng, q, schedule):
-    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
-    w = rng.standard_normal((32, 64)).astype(np.float32)
-    ref = jax.jit(lambda x, w: matmul_allreduce(ctx, x, w, mode="bulk"))(x, w)
-    y = jax.jit(lambda x, w: matmul_allreduce(
-        ctx, x, w, mode="fused", schedule=schedule, chunks_per_rank=q))(x, w)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
-                               rtol=2e-4, atol=2e-4)
-
-
-@pytest.mark.parametrize("q", [2, 4])
-def test_matmul_allreduce_cols_chunks_per_rank(ctx, rng, q):
-    # decode shape: rows < ring forces column sub-chunking
-    x = rng.standard_normal((2, 1, 32)).astype(np.float32)
-    w = rng.standard_normal((32, 64)).astype(np.float32)
-    ref = np.einsum("bsk,kn->bsn", x, w)
-    y = jax.jit(lambda x, w: matmul_allreduce(
-        ctx, x, w, mode="fused", chunks_per_rank=q))(x, w)
-    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
-
-
-@pytest.mark.parametrize("op", [allgather_matmul, matmul_reducescatter])
-@pytest.mark.parametrize("q", [2, 4])
-def test_sp_matmuls_chunks_per_rank(ctx, rng, op, q):
-    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
-    w = rng.standard_normal((32, 64)).astype(np.float32)
-    ref = np.einsum("bsk,kn->bsn", x, w)
-    y = jax.jit(lambda x, w: op(ctx, x, w, mode="fused",
-                                chunks_per_rank=q))(x, w)
-    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
-
-
-@pytest.mark.parametrize("q", [2, 4])
-def test_moe_a2a_chunks_per_rank(ctx, rng, q):
-    B, n_ep, E, C, D, F = 4, 4, 8, 8, 16, 24
-    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(np.float32)
+@pytest.mark.parametrize("tile_k,tile_f", [(8, 8), (12, 16), (16, 24)])
+def test_gemm_a2a_contraction_panels(ctx1d, rng, tile_k, tile_f):
+    """Both chained GEMMs stream their contraction in panels (ragged
+    final panel when the tile does not divide D or F)."""
+    B, n_ep, E, C, D, F = 4, 8, 8, 4, 16, 24
+    xm = rng.standard_normal((B, n_ep, E, C, D)).astype(np.float32)
     wu = rng.standard_normal((E, D, F)).astype(np.float32)
     wg = rng.standard_normal((E, D, F)).astype(np.float32)
     wd = rng.standard_normal((E, F, D)).astype(np.float32)
-    db = jax.jit(lambda x: moe_dispatch_all_to_all(ctx, x, mode="bulk"))(xd)
-    d2 = jax.jit(lambda x: moe_dispatch_all_to_all(
-        ctx, x, mode="fused", chunks_per_rank=q))(xd)
-    np.testing.assert_allclose(np.asarray(d2), np.asarray(db),
-                               rtol=1e-5, atol=1e-5)
-    zb = jax.jit(lambda x: fused_expert_ffn_combine(
-        ctx, x, wu, wg, wd, act=jax.nn.silu, mode="bulk"))(xd)
-    z2 = jax.jit(lambda x: fused_expert_ffn_combine(
-        ctx, x, wu, wg, wd, act=jax.nn.silu, mode="fused",
-        chunks_per_rank=q))(xd)
-    np.testing.assert_allclose(np.asarray(z2), np.asarray(zb),
-                               rtol=2e-4, atol=2e-4)
-
-
-@pytest.mark.parametrize("q", [2, "auto"])
-def test_embedding_a2a_chunks_per_rank(ctx, rng, q):
-    B, T, L, V, D = 16, 8, 4, 32, 8
-    idx = rng.integers(0, V, size=(B, T, L)).astype(np.int32)
-    tabs = rng.standard_normal((T, V, D)).astype(np.float32)
-    ref = tabs[np.arange(T)[None, :, None], idx, :].mean(axis=2)
-    y = jax.jit(lambda i, t: embedding_all_to_all(
-        ctx, i, t, mode="fused", chunks_per_rank=q))(idx, tabs)
-    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5)
+    ref = jax.jit(lambda x: fused_expert_ffn_combine(
+        ctx1d, x, wu, wg, wd, act=jax.nn.silu, mode="bulk"))(xm)
+    y = jax.jit(lambda x: fused_gemm_a2a(
+        ctx1d, x, wu, wg, wd, act=jax.nn.silu, tile_k=tile_k,
+        tile_f=tile_f))(xm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
 
 
 def test_granularity_via_fusion_config(ctx, rng):
@@ -194,6 +187,43 @@ def test_autotune_cache_and_clamp():
     autotune.clear_cache()
 
 
+def test_autotune_cache_roundtrip(tmp_path):
+    """TuneKey -> decision -> serialize -> reload -> identical decision."""
+    autotune.clear_cache()
+    kw = dict(shape=(512, 1024, 2048), dtype_bytes=2, n_dev=8,
+              flops=2.0 * 512 * 1024 * 2048, hbm_bytes=1024 * 2048 * 2.0,
+              wire_bytes=512 * 2048 * 4.0)
+    q1 = choose_chunks_per_rank("matmul_allreduce", **kw)
+    q2 = choose_chunks_per_rank("ce_ring", **{**kw, "divisor_of": 64},
+                                divisor_ring=1)
+    saved = dict(autotune.cache_info())
+    path = str(tmp_path / "tune_cache.json")
+    assert autotune.save_cache(path) == len(saved)
+
+    autotune.clear_cache()
+    assert not autotune.cache_info()
+    assert autotune.load_cache(path) == len(saved)
+    # decisions come back under the *same* keys (HardwareModel included)
+    assert autotune.cache_info() == saved
+    assert choose_chunks_per_rank("matmul_allreduce", **kw) == q1
+    assert choose_chunks_per_rank("ce_ring", **{**kw, "divisor_of": 64},
+                                  divisor_ring=1) == q2
+    # a live in-process decision beats a stale file on collision, and
+    # colliding entries do not count as loaded
+    assert autotune.load_cache(path) == 0
+    assert autotune.cache_info() == saved
+    # the launcher-side preload treats a truncated/corrupt cache (killed
+    # process mid-save) as a cold start, not a crash
+    corrupt = str(tmp_path / "corrupt.json")
+    with open(corrupt, "w") as f:
+        f.write('{"version": 1, "entr')
+    autotune.clear_cache()
+    assert autotune.load_cache_if_exists(corrupt) == 0
+    assert autotune.load_cache_if_exists(None) == 0
+    assert not autotune.cache_info()
+    autotune.clear_cache()
+
+
 def test_feasibility_helpers():
     assert feasible_chunks_per_rank(64, 8, 4) == 4
     assert feasible_chunks_per_rank(24, 8, 4) == 3
@@ -223,6 +253,24 @@ def test_choose_tile_n_respects_budget():
                          vmem_budget_bytes=1 << 20) == 1
 
 
+def test_choose_tile_k_respects_budget():
+    # roomy budget: whole contraction in one panel
+    assert choose_tile_k(1, 64, 512, 64, n_dev=8, dtype_bytes=4) == 64
+    # a full-depth panel is never rounded down into a ragged tail
+    assert choose_tile_k(1, 20, 512, 64, n_dev=8, dtype_bytes=4) == 20
+    # tight budget: panels shrink below K, sublane-aligned
+    tk = choose_tile_k(2, 4096, 512, 64, n_dev=8, dtype_bytes=4,
+                       vmem_budget_bytes=1 << 20)
+    assert 1 <= tk < 4096 and tk % 8 == 0
+    # panels plus fixed buffers fit the budget
+    fixed = (2 * 4096 + 2 * 512 + 7 * 2 * 64 + 8 * 2 * 64) * 4 \
+        + 2 * 64 * 4 + 2 * 64 * 4
+    assert fixed + 2 * tk * 64 * 4 <= (1 << 20)
+    # degenerate budget still returns a positive panel depth
+    assert choose_tile_k(2, 4096, 512, 64, n_dev=8, dtype_bytes=4,
+                         vmem_budget_bytes=1) == 1
+
+
 def test_model_fused_beats_bulk_when_overlappable():
     flops, hbm, wire = 2e9, 4e6, 4e6
     b = model_bulk(flops, hbm, wire)
@@ -242,3 +290,29 @@ def test_measured_best_picks_fastest():
 
     best, times = measured_best(build, [1, 2, 4], iters=2, warmup=1)
     assert best == 1 and set(times) == {1, 2, 4}
+
+
+def test_measured_best_falls_back_on_raising_candidates():
+    def build_partial(q):
+        if q == 1:
+            raise RuntimeError("candidate cannot build")
+
+        def fn():
+            return jnp.zeros(())
+        return fn
+
+    # a raising candidate is excluded, the rest still compete
+    best, times = measured_best(build_partial, [1, 2], iters=1, warmup=0,
+                                fallback=7)
+    assert best == 2 and set(times) == {2}
+
+    def build_none(q):
+        raise RuntimeError("no candidate builds")
+
+    # every candidate raising -> the model decision is returned
+    best, times = measured_best(build_none, [1, 2, 4], iters=1, warmup=0,
+                                fallback=7)
+    assert best == 7 and times == {}
+    # ... and with no fallback the error propagates
+    with pytest.raises(RuntimeError):
+        measured_best(build_none, [1, 2], iters=1, warmup=0)

@@ -1,0 +1,262 @@
+"""Cross-op parity matrix (the granularity contract, in one table).
+
+Every fused-op family must equal its unfused reference at every supported
+``chunks_per_rank``, in both model dtypes, on even *and* ragged shapes
+(ragged = the requested q does not divide the chunked dim and must be
+clamped to the largest feasible factor).  This one parametrized harness
+replaces the per-op parity copies that used to live in
+``test_granularity.py`` / ``test_fused_ops.py``.
+
+References are bulk-mode (same dtype) where a bulk path exists — both
+sides then share the operand rounding and only the decomposition is under
+test — and a dense jnp formula for the CE loss (which has no bulk mode).
+Reference results are cached per (op, dtype, shape) so the q sweep only
+recompiles the fused side.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.fused import (allgather_matmul, embedding_all_to_all,
+                              fused_expert_ffn_combine, matmul_allreduce,
+                              matmul_reducescatter, moe_dispatch_all_to_all,
+                              sharded_cross_entropy)
+from repro.models.attention import context_attention
+from repro.parallel.sharding import FusionConfig
+
+F32, BF16 = np.float32, jnp.bfloat16
+TOL = {"f32": dict(rtol=3e-4, atol=3e-4), "bf16": dict(rtol=3e-2, atol=3e-2)}
+
+
+def _dense_ce(x, e, y):
+    lg = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                    e.astype(jnp.float32))
+    m = lg.max(-1, keepdims=True)
+    lse = jnp.log(jnp.exp(lg - m).sum(-1)) + m[..., 0]
+    nll = lse - jnp.take_along_axis(lg, y[..., None], -1)[..., 0]
+    return nll.mean()[None]
+
+
+# ---------------------------------------------------------------------------
+# op-family builders: (ctx, rng, dtype, ragged) -> (fused_fn(q), ref_fn())
+# ---------------------------------------------------------------------------
+def _mk_matmul_allreduce(ctx, rng, dtype, ragged):
+    B, S, K, N = (2, 12, 32, 48) if ragged else (4, 16, 32, 64)
+    x = rng.standard_normal((B, S, K)).astype(dtype)
+    w = rng.standard_normal((K, N)).astype(dtype)
+    return (lambda q: matmul_allreduce(ctx, x, w, mode="fused",
+                                       chunks_per_rank=q),
+            lambda: matmul_allreduce(ctx, x, w, mode="bulk"))
+
+
+def _mk_gemv_cols(ctx, rng, dtype, ragged):
+    # decode shape: rows < ring forces output-column sub-chunking
+    B, K, N = (2, 32, 48) if ragged else (2, 32, 64)
+    x = rng.standard_normal((B, 1, K)).astype(dtype)
+    w = rng.standard_normal((K, N)).astype(dtype)
+    return (lambda q: matmul_allreduce(ctx, x, w, mode="fused",
+                                       chunks_per_rank=q),
+            lambda: matmul_allreduce(ctx, x, w, mode="bulk"))
+
+
+def _mk_matmul_reducescatter(ctx, rng, dtype, ragged):
+    B, S, K, N = (2, 12, 32, 48) if ragged else (4, 16, 32, 64)
+    x = rng.standard_normal((B, S, K)).astype(dtype)
+    w = rng.standard_normal((K, N)).astype(dtype)
+    return (lambda q: matmul_reducescatter(ctx, x, w, mode="fused",
+                                           chunks_per_rank=q),
+            lambda: matmul_reducescatter(ctx, x, w, mode="bulk"))
+
+
+def _mk_allgather_matmul(ctx, rng, dtype, ragged):
+    B, S, K, N = (2, 12, 32, 48) if ragged else (4, 16, 32, 64)
+    x = rng.standard_normal((B, S, K)).astype(dtype)
+    w = rng.standard_normal((K, N)).astype(dtype)
+    return (lambda q: allgather_matmul(ctx, x, w, mode="fused",
+                                       chunks_per_rank=q),
+            lambda: allgather_matmul(ctx, x, w, mode="bulk"))
+
+
+def _mk_moe_dispatch(ctx, rng, dtype, ragged):
+    B, n_ep, E, C, D = (4, 4, 8, 6, 16) if ragged else (4, 4, 8, 8, 16)
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(dtype)
+    return (lambda q: moe_dispatch_all_to_all(ctx, xd, mode="fused",
+                                              chunks_per_rank=q),
+            lambda: moe_dispatch_all_to_all(ctx, xd, mode="bulk"))
+
+
+def _mk_moe_combine(ctx, rng, dtype, ragged):
+    B, n_ep, E, C, D, F = (4, 4, 8, 6, 16, 24) if ragged \
+        else (4, 4, 8, 8, 16, 24)
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(dtype)
+    wu = rng.standard_normal((E, D, F)).astype(dtype)
+    wg = rng.standard_normal((E, D, F)).astype(dtype)
+    wd = rng.standard_normal((E, F, D)).astype(dtype)
+    return (lambda q: fused_expert_ffn_combine(
+                ctx, xd, wu, wg, wd, act=jax.nn.silu, mode="fused",
+                chunks_per_rank=q),
+            lambda: fused_expert_ffn_combine(
+                ctx, xd, wu, wg, wd, act=jax.nn.silu, mode="bulk"))
+
+
+def _mk_embedding_a2a(ctx, rng, dtype, ragged):
+    B, T, L, V, D = (16, 8, 3, 32, 12) if ragged else (16, 8, 4, 32, 8)
+    idx = rng.integers(0, V, size=(B, T, L)).astype(np.int32)
+    tabs = rng.standard_normal((T, V, D)).astype(dtype)
+    return (lambda q: embedding_all_to_all(ctx, idx, tabs, mode="fused",
+                                           chunks_per_rank=q),
+            lambda: embedding_all_to_all(ctx, idx, tabs, mode="bulk"))
+
+
+def _mk_ring_attention(ctx, rng, dtype, ragged):
+    B, S, Hq, Hkv, hd = (4, 48, 8, 2, 16) if ragged else (4, 64, 8, 2, 16)
+    q_ = rng.standard_normal((B, S, Hq, hd)).astype(dtype)
+    k_ = rng.standard_normal((B, S, Hkv, hd)).astype(dtype)
+    v_ = rng.standard_normal((B, S, Hkv, hd)).astype(dtype)
+
+    def run(mode, q=None):
+        return context_attention(ctx, q_, k_, v_, causal=True, mode=mode,
+                                 q_block=16, kv_block=16, chunks_per_rank=q)
+
+    return (lambda q: run("fused", q), lambda: run("bulk"))
+
+
+def _mk_ce_loss(ctx, rng, dtype, ragged):
+    B, S, D, V = (4, 12, 32, 32) if ragged else (4, 16, 32, 64)
+    x = rng.standard_normal((B, S, D)).astype(dtype)
+    e = rng.standard_normal((V, D)).astype(dtype)
+    y = rng.integers(0, V, (B, S)).astype(np.int32)
+    return (lambda q: sharded_cross_entropy(ctx, x, e, y,
+                                            chunks_per_rank=q)[None],
+            lambda: _dense_ce(x, e, y))
+
+
+OPS = {
+    "matmul_allreduce": _mk_matmul_allreduce,
+    "gemv_cols": _mk_gemv_cols,
+    "matmul_reducescatter": _mk_matmul_reducescatter,
+    "allgather_matmul": _mk_allgather_matmul,
+    "moe_dispatch": _mk_moe_dispatch,
+    "moe_combine": _mk_moe_combine,
+    "embedding_a2a": _mk_embedding_a2a,
+    "ring_attention": _mk_ring_attention,
+    "ce_loss": _mk_ce_loss,
+}
+
+_REF_CACHE: dict = {}
+
+
+def _reference(op, dtype_id, ragged, ref_fn):
+    key = (op, dtype_id, ragged)
+    if key not in _REF_CACHE:
+        _REF_CACHE[key] = np.asarray(jax.jit(ref_fn)(), np.float32)
+    return _REF_CACHE[key]
+
+
+@pytest.mark.parametrize("q", [1, 2, 4])
+@pytest.mark.parametrize("ragged", [False, True], ids=["even", "ragged"])
+@pytest.mark.parametrize("dtype", [F32, BF16], ids=["f32", "bf16"])
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_parity(ctx, rng, op, dtype, ragged, q):
+    dtype_id = "bf16" if dtype is BF16 else "f32"
+    fused, ref_fn = OPS[op](ctx, rng, dtype, ragged)
+    ref = _reference(op, dtype_id, ragged, ref_fn)
+    y = np.asarray(jax.jit(lambda: fused(q))(), np.float32)
+    tol = TOL[dtype_id]
+    # ring-carried partials round once per hop, so the absolute error
+    # scales with the accumulated magnitude — anchor atol to the ref scale
+    atol = tol["atol"] * max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(y, ref, rtol=tol["rtol"], atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# oblivious-schedule parity (the matrix runs the default comm-aware order;
+# the Fig. 14 baseline order must stay numerically identical too)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q", [1, 2])
+@pytest.mark.parametrize("op", ["matmul_allreduce", "matmul_reducescatter",
+                                "moe_dispatch", "moe_combine"])
+def test_parity_oblivious_schedule(ctx, rng, op, q):
+    kw = dict(mode="fused", schedule="oblivious", chunks_per_rank=q)
+    if op == "matmul_allreduce" or op == "matmul_reducescatter":
+        fn = matmul_allreduce if op == "matmul_allreduce" \
+            else matmul_reducescatter
+        x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+        w = rng.standard_normal((32, 64)).astype(np.float32)
+        y = jax.jit(lambda: fn(ctx, x, w, **kw))()
+        ref = jax.jit(lambda: fn(ctx, x, w, mode="bulk"))()
+    else:
+        B, n_ep, E, C, D, F = 4, 4, 8, 8, 16, 24
+        xd = rng.standard_normal((B, n_ep, E, C, D)).astype(np.float32)
+        if op == "moe_dispatch":
+            y = jax.jit(lambda: moe_dispatch_all_to_all(ctx, xd, **kw))()
+            ref = jax.jit(lambda: moe_dispatch_all_to_all(
+                ctx, xd, mode="bulk"))()
+        else:
+            wu = rng.standard_normal((E, D, F)).astype(np.float32)
+            wg = rng.standard_normal((E, D, F)).astype(np.float32)
+            wd = rng.standard_normal((E, F, D)).astype(np.float32)
+            y = jax.jit(lambda: fused_expert_ffn_combine(
+                ctx, xd, wu, wg, wd, act=jax.nn.silu, **kw))()
+            ref = jax.jit(lambda: fused_expert_ffn_combine(
+                ctx, xd, wu, wg, wd, act=jax.nn.silu, mode="bulk"))()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# grad parity for the two custom-VJP rings (fwd parity is in the matrix)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q", [1, 2, 4, "auto"])
+def test_ring_attention_grad_parity(ctx, rng, q):
+    B, S, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    qq = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+    kk = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    vv = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    co = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+
+    def loss(mode, cpr=None):
+        return lambda q_, k_, v_: (context_attention(
+            ctx, q_, k_, v_, causal=True, mode=mode, q_block=16,
+            kv_block=16, chunks_per_rank=cpr).astype(jnp.float32) * co).sum()
+
+    gb = jax.jit(jax.grad(loss("bulk"), argnums=(0, 1, 2)))(qq, kk, vv)
+    gf = jax.jit(jax.grad(loss("fused", q), argnums=(0, 1, 2)))(qq, kk, vv)
+    for a, b in zip(gf, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("q", [1, 2, 4, "auto"])
+def test_ce_loss_grad_parity(ctx, rng, q):
+    B, S, D, V = 4, 16, 32, 64
+    x = rng.standard_normal((B, S, D)).astype(np.float32)
+    e = rng.standard_normal((V, D)).astype(np.float32)
+    y = rng.integers(0, V, (B, S)).astype(np.int32)
+    g = jax.jit(jax.grad(lambda x, e: sharded_cross_entropy(
+        ctx, x, e, y, chunks_per_rank=q), argnums=(0, 1)))(x, e)
+    gr = jax.grad(lambda x, e: _dense_ce(x, e, y)[0], argnums=(0, 1))(x, e)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# "auto" resolves a per-op decision through one FusionConfig switch
+# ---------------------------------------------------------------------------
+def test_auto_granularity_resolves_per_op(ctx, rng):
+    autotune.clear_cache()
+    c2 = ctx.with_fusion(FusionConfig(granularity="auto"))
+    for op in ["matmul_allreduce", "allgather_matmul", "moe_combine",
+               "embedding_a2a", "ring_attention", "ce_loss"]:
+        fused, ref_fn = OPS[op](c2, np.random.default_rng(0), F32, False)
+        y = np.asarray(jax.jit(lambda: fused(None))(), np.float32)
+        ref = _reference(op, "f32", False, ref_fn)
+        np.testing.assert_allclose(y, ref, **TOL["f32"])
+    ops_seen = {k.op for k in autotune.cache_info()}
+    # every ring family keyed its own decision (per-op "auto" values)
+    assert {"matmul_allreduce", "allgather_matmul", "all_to_all",
+            "ring_attention", "ce_ring"} <= ops_seen
+    autotune.clear_cache()

@@ -7,7 +7,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.scheduling import reduce_ring_chunk_order, ring_offsets
+from repro.core.scheduling import (reduce_ring_chunk_order, ring_offsets,
+                                   sub_chunk_send_events)
 from repro.train.grad_compression import _dequantize_int8, _quantize_int8
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -21,6 +22,48 @@ def test_ring_offsets_cover_all_peers(world):
         assert sorted(offs) == list(range(world))
     # comm-aware: local chunk strictly last
     assert ring_offsets(world, "comm_aware")[-1] == 0
+
+
+@given(st.integers(2, 32), st.integers(1, 8), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_sub_chunk_schedule_is_permutation(world, q, skew):
+    """Sub-chunk ring scheduling is a permutation: for arbitrary
+    (n_dev, chunks_per_rank, skew), every (rank, fine chunk) payload is
+    sent exactly once and lands at the owning destination."""
+    for schedule in ["comm_aware", "oblivious"]:
+        events = sub_chunk_send_events(world, q, schedule, skew)
+        assert len(events) == world
+        for r, sends in enumerate(events):
+            fines = [f for _, f in sends]
+            # each rank emits every fine chunk exactly once ...
+            assert sorted(fines) == list(range(world * q))
+            # ... addressed to the rank that owns it
+            assert all(dest == f // q for dest, f in sends)
+            # sub-chunks of one destination payload are issued in order,
+            # back to back (each forwarded as soon as the previous one is
+            # consumed — never interleaved across destinations)
+            dests = [dest for dest, _ in sends]
+            for j in range(0, len(sends), q):
+                assert len(set(dests[j:j + q])) == 1
+                assert [f % q for _, f in sends[j:j + q]] == list(range(q))
+    # comm-aware keeps the local payload last under any skew
+    aware = sub_chunk_send_events(world, q, "comm_aware", skew)
+    for r, sends in enumerate(aware):
+        assert all(dest == r for dest, _ in sends[-q:])
+
+
+@given(st.integers(2, 32), st.integers(1, 31))
+@settings(**SETTINGS)
+def test_ring_offsets_skew_rotates_remotes(world, skew):
+    """Skew rotates which remote peer goes first (Fig. 14 straggler
+    feed-in) without disturbing coverage or the local chunk's slot."""
+    base = ring_offsets(world, "comm_aware")
+    skewed = ring_offsets(world, "comm_aware", skew)
+    assert sorted(skewed) == list(range(world))
+    assert skewed[-1] == 0
+    remote = base[:-1]
+    r = skew % len(remote)
+    assert skewed[:-1] == remote[r:] + remote[:r]
 
 
 @given(st.integers(2, 64))
