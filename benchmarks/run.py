@@ -21,6 +21,7 @@ BENCHES = [
     ("bench_gemm_a2a", "Fig. 10 GEMM+All-to-All (MoE)"),
     ("bench_embedding_a2a", "Fig. 8/12 embedding+All-to-All"),
     ("bench_scheduling", "Fig. 14 comm-aware scheduling skew"),
+    ("bench_skew", "Fig. 14 measured-skew feedback loop"),
     ("bench_granularity", "Fig. 13 overlap granularity"),
     ("bench_scaleout_sim", "Fig. 15 128-node DLRM scale-out sim"),
     ("bench_kernels", "device-initiated kernel comparison"),

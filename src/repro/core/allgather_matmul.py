@@ -23,12 +23,14 @@ from repro.core.autotune import (resolve_chunks_per_rank,
                                  tune_allgather_matmul,
                                  tune_matmul_allreduce)
 from repro.core.collectives import ring_permute, ring_reduce_scatter_compute
+from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
 
 def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
-                     chunks_per_rank: int | str | None = None):
+                     chunks_per_rank: int | str | None = None,
+                     skew: int | None = None):
     """y[b, s, :] = (AG_tp(x) @ w_colshard)[b, s, :].
 
     Fused: the locally-held sequence chunk is multiplied first (it is
@@ -36,9 +38,13 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
     multiplied while the next is on the wire.  ``chunks_per_rank`` splits
     the ring payload into sub-chunks so each arriving sub-slice is
     consumed (and the next forwarded) independently — finer overlap for
-    long sequence chunks (paper Fig. 13).
+    long sequence chunks (paper Fig. 13).  ``skew`` rotates the sub-ring
+    service order by the measured straggler bucket (Fig. 14; ``None``
+    uses ``ctx.fusion.skew``); results land in disjoint output slices, so
+    the rotation is bit-exact.
     """
     mode = mode or ctx.fusion.resolve("ag_matmul")
+    skew = ctx.fusion.skew if skew is None else int(skew)
     axis, n = ctx.tp_axis, ctx.tp
     b, s, k = x.shape
     nout = w.shape[1]
@@ -47,8 +53,10 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
     q = (1 if mode == "bulk" else resolve_chunks_per_rank(
         chunks_per_rank, ctx.fusion.granularity,
         lambda: tune_allgather_matmul(b, s // n, k, nout // n,
-                                      dtype_bytes=x.dtype.itemsize, n_dev=n),
+                                      dtype_bytes=x.dtype.itemsize, n_dev=n,
+                                      skew=skew),
         dim=s // n, ring=1))
+    order = sub_chunk_service_order(q, skew)
 
     def local_fn(xl, wl):
         if mode == "bulk":
@@ -65,7 +73,7 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
                 out, bufs[j] @ wl, d * s_loc + j * sub, axis=1)
         for i in range(1, n):
             src = (d - i) % n
-            for j in range(q):
+            for j in order:
                 bufs[j] = ring_permute(bufs[j], axis, n)
                 out = lax.dynamic_update_slice_in_dim(
                     out, bufs[j] @ wl, src * s_loc + j * sub, axis=1)
@@ -82,12 +90,16 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
 
 def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
                          schedule: str | None = None,
-                         chunks_per_rank: int | str | None = None):
+                         chunks_per_rank: int | str | None = None,
+                         skew: int | None = None):
     """y = ReduceScatter_tp(x @ w_rowshard) scattered over the sequence dim.
 
-    ``chunks_per_rank`` sub-chunks each ring step's payload (Fig. 13)."""
+    ``chunks_per_rank`` sub-chunks each ring step's payload (Fig. 13);
+    ``skew`` rotates the sub-chunk service order by the measured straggler
+    bucket (Fig. 14; ``None`` uses ``ctx.fusion.skew``)."""
     mode = mode or ctx.fusion.resolve("matmul_rs")
     schedule = schedule or ctx.fusion.schedule
+    skew = ctx.fusion.skew if skew is None else int(skew)
     axis, n = ctx.tp_axis, ctx.tp
     b, s, k = x.shape
     nout = w.shape[1]
@@ -97,7 +109,7 @@ def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
         lambda: tune_matmul_allreduce(b * s, k // n, nout,
                                       dtype_bytes=x.dtype.itemsize,
                                       n_dev=n, chunk_dim=s,
-                                      allgather_phase=False),
+                                      allgather_phase=False, skew=skew),
         dim=s, ring=n))
 
     def local_fn(xl, wl):
@@ -112,7 +124,8 @@ def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
             return xi @ wl
 
         return ring_reduce_scatter_compute(partial, axis, schedule=schedule,
-                                           chunks_per_rank=q, sub_axis=1)
+                                           chunks_per_rank=q, sub_axis=1,
+                                           skew=skew)
 
     return shard_map(
         local_fn,

@@ -29,9 +29,12 @@ MAX_CHUNKS_PER_RANK = 16
 @dataclasses.dataclass(frozen=True)
 class TuneKey:
     """Cache key: op family + every fact that moves the decision — shape,
-    dtype, world size, the divisibility constraint, and the hardware
-    model (two call sites that differ in any of these must not share a
-    cached q)."""
+    dtype, world size, the divisibility constraint, the hardware model,
+    and the measured skew bucket (two call sites that differ in any of
+    these must not share a cached q).  The alpha-beta model is
+    skew-oblivious, but a *measured* decision is not: a straggler-rotated
+    schedule overlaps differently, so calibrated entries must be keyed by
+    the bucket they were measured under."""
 
     op: str
     shape: tuple
@@ -40,6 +43,7 @@ class TuneKey:
     divisor_of: int | None
     divisor_ring: int
     hw: "HardwareModel"
+    skew: int = 0
 
 
 _GRANULARITY_CACHE: dict[TuneKey, int] = {}
@@ -52,6 +56,21 @@ def cache_info() -> Mapping[TuneKey, int]:
 
 def clear_cache() -> None:
     _GRANULARITY_CACHE.clear()
+
+
+def set_decision(key: TuneKey, q: int) -> None:
+    """Overwrite one memoized decision — the measured-calibration pass
+    replaces model choices with measured winners through this (and only
+    this) door, so the overwrite is greppable and testable."""
+    _GRANULARITY_CACHE[key] = int(q)
+
+
+def calibration_candidates(key: TuneKey,
+                           max_q: int = MAX_CHUNKS_PER_RANK) -> list[int]:
+    """Feasible ``chunks_per_rank`` candidates for one cached key — the
+    same divisor ladder the model sweep scored, for the measured sweep to
+    re-score on real hardware."""
+    return _divisor_candidates(key.divisor_of, key.divisor_ring, max_q)
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +87,7 @@ def _key_from_json(d: Mapping) -> TuneKey:
     d = dict(d)
     d["hw"] = HardwareModel(**d["hw"])
     d["shape"] = tuple(d["shape"])
+    d.setdefault("skew", 0)  # caches written before the skew field existed
     return TuneKey(**d)
 
 
@@ -137,6 +157,7 @@ def choose_chunks_per_rank(
     divisor_ring: int | None = None,
     max_q: int = MAX_CHUNKS_PER_RANK,
     hw: HardwareModel = V5E,
+    skew: int = 0,
 ) -> int:
     """Pick ``chunks_per_rank`` minimizing the modeled fused time.
 
@@ -144,12 +165,15 @@ def choose_chunks_per_rank(
     chunked dimension (``None`` = unconstrained); ``divisor_ring`` is the
     ring factor that dimension must additionally absorb (defaults to
     ``n_dev`` — the reduce-scatter convention; pass 1 for per-destination
-    payloads).  The decision is memoized under the full constraint key.
+    payloads).  ``skew`` is the measured schedule rotation the caller is
+    running under — it does not move the alpha-beta model, but keys the
+    decision so a later measured sweep can record per-bucket winners.
+    The decision is memoized under the full constraint key.
     """
     ring = n_dev if divisor_ring is None else divisor_ring
     key = TuneKey(op, tuple(int(s) for s in shape), int(dtype_bytes),
                   int(n_dev), None if divisor_of is None else int(divisor_of),
-                  int(ring), hw)
+                  int(ring), hw, int(skew))
     hit = _GRANULARITY_CACHE.get(key)
     if hit is not None:
         return hit
@@ -166,7 +190,7 @@ def tune_matmul_allreduce(rows: int, k_local: int, n_out: int, *,
                           dtype_bytes: int, n_dev: int, chunk_dim: int,
                           divisor_ring: int | None = None,
                           allgather_phase: bool = True,
-                          hw: HardwareModel = V5E) -> int:
+                          hw: HardwareModel = V5E, skew: int = 0) -> int:
     """Granularity for the row-parallel GEMM/GEMV + AllReduce family.
 
     ``chunk_dim`` is the dimension being ring-chunked (rows or output
@@ -186,12 +210,12 @@ def tune_matmul_allreduce(rows: int, k_local: int, n_out: int, *,
         shape=(rows, k_local, n_out),
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops, hbm_bytes=hbm,
         wire_bytes=wire, divisor_of=chunk_dim, divisor_ring=divisor_ring,
-        hw=hw)
+        hw=hw, skew=skew)
 
 
 def tune_allgather_matmul(b: int, s_loc: int, k: int, n_out_local: int, *,
                           dtype_bytes: int, n_dev: int,
-                          hw: HardwareModel = V5E) -> int:
+                          hw: HardwareModel = V5E, skew: int = 0) -> int:
     """Granularity for the AllGather x matmul family.
 
     Unlike the reduce-scatter ring (which carries *output* chunks), the
@@ -205,12 +229,12 @@ def tune_allgather_matmul(b: int, s_loc: int, k: int, n_out_local: int, *,
     return choose_chunks_per_rank(
         "allgather_matmul", shape=(b, s_loc, k, n_out_local),
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops, hbm_bytes=hbm,
-        wire_bytes=wire, divisor_of=s_loc, divisor_ring=1, hw=hw)
+        wire_bytes=wire, divisor_of=s_loc, divisor_ring=1, hw=hw, skew=skew)
 
 
 def tune_all_to_all(chunk_elems: int, flops_per_dest: float, *,
                     dtype_bytes: int, n_dev: int, sub_dim: int,
-                    hw: HardwareModel = V5E) -> int:
+                    hw: HardwareModel = V5E, skew: int = 0) -> int:
     """Granularity for the direct-send compute + All-to-All family.
 
     The payload is per-destination already, so only ``q | sub_dim``
@@ -221,13 +245,14 @@ def tune_all_to_all(chunk_elems: int, flops_per_dest: float, *,
         dtype_bytes=dtype_bytes, n_dev=n_dev,
         flops=flops_per_dest * n_dev,
         hbm_bytes=float(chunk_elems * dtype_bytes * n_dev),
-        wire_bytes=wire, divisor_of=sub_dim, divisor_ring=1, hw=hw)
+        wire_bytes=wire, divisor_of=sub_dim, divisor_ring=1, hw=hw,
+        skew=skew)
 
 
 def tune_ring_attention(b: int, s_loc: int, n_heads: int, n_kv_heads: int,
                         head_dim: int, *, dtype_bytes: int, n_dev: int,
                         hops: int | None = None,
-                        hw: HardwareModel = V5E) -> int:
+                        hw: HardwareModel = V5E, skew: int = 0) -> int:
     """Granularity for the ring-attention KV ring (fused AG x attention).
 
     The ring forwards the local ``[b, s_loc, Hkv, hd]`` K and V chunks;
@@ -250,12 +275,12 @@ def tune_ring_attention(b: int, s_loc: int, n_heads: int, n_kv_heads: int,
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops,
         hbm_bytes=2.0 * kv_chunk * (hops + 1),
         wire_bytes=2.0 * kv_chunk * hops,
-        divisor_of=s_loc, divisor_ring=1, hw=hw)
+        divisor_of=s_loc, divisor_ring=1, hw=hw, skew=skew)
 
 
 def tune_ce_ring(b: int, s_loc: int, d_model: int, v_loc: int, *,
                  dtype_bytes: int, n_dev: int,
-                 hw: HardwareModel = V5E) -> int:
+                 hw: HardwareModel = V5E, skew: int = 0) -> int:
     """Granularity for the vocab-sharded cross-entropy ring.
 
     The forward stats ring forwards the local ``[b, s_loc, D]`` activation
@@ -272,7 +297,7 @@ def tune_ce_ring(b: int, s_loc: int, d_model: int, v_loc: int, *,
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops,
         hbm_bytes=float(v_loc * d_model * dtype_bytes),
         wire_bytes=x_chunk * (n_dev - 1),
-        divisor_of=s_loc, divisor_ring=1, hw=hw)
+        divisor_of=s_loc, divisor_ring=1, hw=hw, skew=skew)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,313 @@
+"""Measured-sweep calibration pass (serve/train warm-up).
+
+The autotuner's alpha-beta model picks ``chunks_per_rank`` per
+:class:`~repro.core.autotune.TuneKey` at trace time; this module is the
+ROADMAP's "measured-sweep calibration pass": after a few warm-up steps
+have populated the decision cache with the *hot* keys, each key's
+workload is reconstructed from the key itself as an op-level
+microbenchmark, every feasible candidate is timed with
+:func:`~repro.core.autotune.measured_best`, and the model decision is
+overwritten with the measured winner — so steady state runs on measured
+choices, persisted across processes via the existing ``--tune-cache``.
+
+The reconstruction is a *proxy*: operand values are random and the
+surrounding model is absent, but shape, dtype, sharding, ring world and
+schedule (including the skew bucket in the key) — everything the overlap
+depends on — are exact.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Callable, Iterable, Mapping
+
+import numpy as np
+
+from repro.core import autotune
+from repro.core.autotune import TuneKey, calibration_candidates, measured_best
+from repro.parallel.sharding import ParallelContext
+
+log = logging.getLogger("repro.calibrate")
+
+
+def _dtype(key: TuneKey):
+    import jax.numpy as jnp
+
+    return {2: jnp.bfloat16, 4: np.float32}.get(key.dtype_bytes, np.float32)
+
+
+def _rng(key: TuneKey):
+    return np.random.default_rng(abs(hash((key.op, key.shape))) % (2 ** 31))
+
+
+# ---------------------------------------------------------------------------
+# per-op-family microbench builders: (ctx, key) -> build_fn(q) -> closure
+# ---------------------------------------------------------------------------
+def _build_matmul_allreduce(ctx: ParallelContext, key: TuneKey):
+    import jax
+
+    from repro.core.matmul_allreduce import matmul_allreduce
+
+    rows_local, k_local, n_out = key.shape
+    dt = _dtype(key)
+    rng = _rng(key)
+    x = rng.standard_normal((rows_local * ctx.dp, k_local * ctx.tp)).astype(dt)
+    w = rng.standard_normal((k_local * ctx.tp, n_out)).astype(dt)
+
+    def build(q: int):
+        fn = jax.jit(lambda: matmul_allreduce(
+            ctx, x, w, mode="fused", chunks_per_rank=q, skew=key.skew))
+        return fn
+
+    return build
+
+
+def _build_matmul_reducescatter(ctx: ParallelContext, key: TuneKey):
+    import jax
+
+    from repro.core.allgather_matmul import matmul_reducescatter
+
+    rows, k_local, n_out = key.shape
+    s = key.divisor_of or rows
+    b = max(rows // s, 1)
+    dt = _dtype(key)
+    rng = _rng(key)
+    x = rng.standard_normal((b, s, k_local * ctx.tp)).astype(dt)
+    w = rng.standard_normal((k_local * ctx.tp, n_out)).astype(dt)
+
+    def build(q: int):
+        return jax.jit(lambda: matmul_reducescatter(
+            ctx, x, w, mode="fused", chunks_per_rank=q, skew=key.skew))
+
+    return build
+
+
+def _build_allgather_matmul(ctx: ParallelContext, key: TuneKey):
+    import jax
+
+    from repro.core.allgather_matmul import allgather_matmul
+
+    b, s_loc, k, n_out_local = key.shape
+    dt = _dtype(key)
+    rng = _rng(key)
+    x = rng.standard_normal((b, s_loc * ctx.tp, k)).astype(dt)
+    w = rng.standard_normal((k, n_out_local * ctx.tp)).astype(dt)
+
+    def build(q: int):
+        return jax.jit(lambda: allgather_matmul(
+            ctx, x, w, mode="fused", chunks_per_rank=q))
+
+    return build
+
+
+def _build_all_to_all(ctx: ParallelContext, key: TuneKey):
+    """Raw direct-send A2A with the key's per-destination payload — the
+    shared microbench for the MoE dispatch/combine and embedding families
+    (the key records payload bytes, sub axis and per-destination flops,
+    not the producing op).  The recorded compute is reproduced by a proxy
+    GEMM contracting a synthetic ``k_eq`` dimension sized so each
+    destination's produce costs ~``flops_per_dest`` — without it a
+    compute-heavy family (the fused FFN+combine) would be re-scored on a
+    compute-free wire microbench and measured_best would reward the wrong
+    granularity."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.collectives import direct_all_to_all_compute
+    from jax import lax
+
+    chunk_elems = int(key.shape[0])
+    flops_per_dest = float(key.shape[1])
+    sub_dim = key.divisor_of or 1
+    rows = max(chunk_elems // max(sub_dim, 1), 1)
+    n = key.n_dev
+    if n == ctx.tp:
+        axes = ctx.tp_axis
+        spec3 = P(ctx.tp_axis, None, None)
+    elif n == ctx.world:
+        axes = tuple(ctx.dp_axes) + (ctx.tp_axis,)
+        spec3 = P(axes, None, None)
+    else:
+        raise ValueError(f"A2A key world {n} matches neither tp={ctx.tp} "
+                         f"nor world={ctx.world}")
+    dt = _dtype(key)
+    rng = _rng(key)
+    # 2 * sub_dim * k_eq * rows flops per destination ~= flops_per_dest
+    k_eq = int(round(flops_per_dest / max(2.0 * sub_dim * rows, 1.0)))
+    x = rng.standard_normal((n * n, sub_dim, max(k_eq, rows))).astype(dt)
+    w_proxy = (rng.standard_normal((k_eq, rows)).astype(dt)
+               if k_eq > 0 else None)
+
+    def build(q: int):
+        def local_fn(xl, wl):
+            # xl: [n, sub_dim, k_eq|rows] — one payload per destination
+            sub = sub_dim // q
+
+            def produce(f):
+                dest, s = (f // q, f % q) if q > 1 else (f, 0)
+                xb = lax.dynamic_index_in_dim(xl, dest, axis=0,
+                                              keepdims=False)
+                if q > 1:
+                    xb = lax.dynamic_slice_in_dim(xb, s * sub, sub, axis=0)
+                if wl is None:
+                    return xb[:, :rows]
+                return xb[:, :k_eq] @ wl  # the op's per-dest compute proxy
+
+            return direct_all_to_all_compute(
+                produce, jax.ShapeDtypeStruct((sub_dim, rows), xl.dtype),
+                axes, chunks_per_rank=q, sub_axis=0, skew=key.skew)
+
+        return jax.jit(lambda: shard_map(
+            lambda xl: local_fn(xl, None if w_proxy is None
+                                else jnp.asarray(w_proxy)),
+            mesh=ctx.mesh, in_specs=(spec3,), out_specs=spec3,
+            check_vma=False)(jnp.asarray(x)))
+
+    return build
+
+
+def _build_ring_attention(ctx: ParallelContext, key: TuneKey):
+    import jax
+
+    from repro.models.attention import context_attention
+
+    b_loc, s_loc, hq, hkv, hd, hops = key.shape
+    n = ctx.tp
+    window = None if hops >= n - 1 else hops * s_loc
+    dt = _dtype(key)
+    rng = _rng(key)
+    B = b_loc * ctx.dp
+    S = s_loc * n
+    q_ = rng.standard_normal((B, S, hq, hd)).astype(dt)
+    k_ = rng.standard_normal((B, S, hkv, hd)).astype(dt)
+    v_ = rng.standard_normal((B, S, hkv, hd)).astype(dt)
+
+    def build(q: int):
+        return jax.jit(lambda: context_attention(
+            ctx, q_, k_, v_, causal=True, window=window, mode="fused",
+            q_block=min(64, s_loc), kv_block=min(64, s_loc),
+            chunks_per_rank=q, skew=key.skew))
+
+    return build
+
+
+def _build_ce_ring(ctx: ParallelContext, key: TuneKey):
+    import jax
+
+    from repro.core.loss import sharded_cross_entropy
+
+    b_loc, s_loc, d_model, v_loc = key.shape
+    n = ctx.tp
+    dt = _dtype(key)
+    rng = _rng(key)
+    B = b_loc * ctx.dp
+    S = s_loc * n
+    V = v_loc * n
+    x = rng.standard_normal((B, S, d_model)).astype(dt)
+    e = rng.standard_normal((V, d_model)).astype(dt)
+    y = rng.integers(0, V, (B, S)).astype(np.int32)
+
+    def build(q: int):
+        return jax.jit(lambda: sharded_cross_entropy(
+            ctx, x, e, y, chunks_per_rank=q, skew=key.skew))
+
+    return build
+
+
+_BUILDERS: Mapping[str, Callable] = {
+    "matmul_allreduce": _build_matmul_allreduce,
+    "matmul_reducescatter": _build_matmul_reducescatter,
+    "allgather_matmul": _build_allgather_matmul,
+    "all_to_all": _build_all_to_all,
+    "ring_attention": _build_ring_attention,
+    "ce_ring": _build_ce_ring,
+}
+
+
+def add_calibration_cli_args(ap) -> None:
+    """Install the shared ``--calibrate`` warm-up flags on an argparse
+    parser (one definition for both launchers)."""
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measured-sweep warm-up: after tracing the step "
+                         "once (which records the hot autotune keys), time "
+                         "every feasible chunks_per_rank per key and "
+                         "overwrite the model decisions with measured "
+                         "winners before steady state (pair with "
+                         "--granularity auto; persists via --tune-cache)")
+    ap.add_argument("--calibrate-iters", type=int, default=3,
+                    help="timing iterations per calibration candidate")
+
+
+def warmup_and_calibrate(ctx: ParallelContext, trace_fn: Callable, *args,
+                         iters: int = 3, max_q: int | None = None,
+                         granularity=None) -> dict:
+    """One-call launcher warm-up: abstractly evaluate ``trace_fn(*args)``
+    — granularity decisions are made at Python trace time, so this
+    populates the hot-key cache without running a step — then run the
+    measured pass over those keys.  ``granularity`` is the launcher's
+    CLI setting, only used to warn when it is pinned (the sweep can only
+    drive ``"auto"`` decisions).
+
+    Only keys *added by this trace* are swept: a preloaded ``--tune-cache``
+    can hold entries from other workloads (and already-measured winners
+    from prior warm-ups), and re-timing the whole file would make warm-up
+    cost grow with cache age.  Clear the cache file to force a full
+    re-calibration."""
+    import jax
+
+    if granularity is not None and granularity != "auto":
+        print("calibrate: --granularity is pinned; the measured sweep "
+              "only drives 'auto' decisions")
+    before = set(autotune.cache_info())
+    jax.eval_shape(trace_fn, *args)
+    hot = [k for k in autotune.cache_info() if k not in before]
+    rep = measured_calibration_pass(ctx, keys=hot, iters=iters, max_q=max_q)
+    print(f"calibrate: {len(rep)}/{len(hot)} newly traced hot keys "
+          f"re-scored by measurement")
+    return rep
+
+
+def measured_calibration_pass(
+    ctx: ParallelContext,
+    *,
+    keys: Iterable[TuneKey] | None = None,
+    iters: int = 3,
+    warmup: int = 1,
+    max_q: int | None = None,
+) -> dict[TuneKey, dict]:
+    """Re-score every hot TuneKey's candidate ladder by measurement and
+    overwrite the cached decision with the winner.
+
+    ``keys`` defaults to every currently cached decision (the keys the
+    warm-up steps touched).  A key whose op family has no builder, whose
+    world does not match the live mesh, or whose every candidate fails to
+    build is left on its model decision (``measured_best``'s fallback).
+    Returns a per-key report: ``{"model_q", "measured_q", "times"}``.
+    """
+    report: dict[TuneKey, dict] = {}
+    todo = list(keys) if keys is not None else list(autotune.cache_info())
+    for key in todo:
+        builder = _BUILDERS.get(key.op)
+        model_q = autotune.cache_info().get(key)
+        if builder is None or model_q is None:
+            continue
+        if key.n_dev not in (ctx.tp, ctx.world):
+            log.info("calibrate: skipping %s (world %d not on this mesh)",
+                     key.op, key.n_dev)
+            continue
+        cands = calibration_candidates(
+            key, max_q if max_q is not None else autotune.MAX_CHUNKS_PER_RANK)
+        try:
+            build_fn = builder(ctx, key)
+        except Exception as e:  # noqa: BLE001 — a bad rebuild must not kill warm-up
+            log.info("calibrate: cannot rebuild %s: %s", key.op, e)
+            continue
+        best, times = measured_best(build_fn, cands, iters=iters,
+                                    warmup=warmup, fallback=model_q)
+        autotune.set_decision(key, best)
+        report[key] = {"model_q": model_q, "measured_q": best,
+                       "times": times}
+        log.info("calibrate: %s%s model q=%d -> measured q=%d",
+                 key.op, key.shape, model_q, best)
+    return report

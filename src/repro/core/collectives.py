@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.scheduling import ring_offsets
+from repro.core.scheduling import ring_offsets, sub_chunk_service_order
 from repro.compat import axis_size, optimization_barrier
 
 
@@ -51,9 +51,16 @@ def split_ring_payload(a, n_sub: int, axis: int = 1):
     """Split a ring payload into ``n_sub`` equal sub-chunks along ``axis``
     so each can ring (and be consumed) independently — the paper's
     Fig. 13 sub-chunk granularity.  ``n_sub`` must divide the axis
-    (callers clamp via :func:`feasible_chunks_per_rank` first)."""
+    (callers clamp via :func:`feasible_chunks_per_rank` first); an
+    indivisible split raises rather than silently truncating the payload.
+    """
     if n_sub == 1:
         return [a]
+    if a.shape[axis] % n_sub:
+        raise ValueError(
+            f"sub-chunk factor {n_sub} does not divide ring-payload axis "
+            f"{axis} of size {a.shape[axis]}; clamp via "
+            f"feasible_chunks_per_rank first")
     sub = a.shape[axis] // n_sub
     return [lax.dynamic_slice_in_dim(a, j * sub, sub, axis=axis)
             for j in range(n_sub)]
@@ -69,6 +76,7 @@ def ring_reduce_scatter_compute(
     schedule: str = "comm_aware",
     chunks_per_rank: int = 1,
     sub_axis: int = 0,
+    skew: int = 0,
 ):
     """sum_over_ranks(partial_fn(chunk)) -> own rank's reduced chunk.
 
@@ -92,10 +100,18 @@ def ring_reduce_scatter_compute(
     The oblivious schedule computes *all* partials first (natural order)
     and only then runs the pure ring reduce — communication is exposed at
     the tail exactly like the paper's communication-oblivious baseline.
+
+    ``skew`` (a measured straggler rotation, Fig. 14): the ring-carry
+    structure pins which chunk each rank touches at every hop, so skew
+    rotates the only free axis — the service order of the ``q``
+    independent sub-chunk rings — putting the straggler-facing sub-ring
+    on the wire first.  Each sub-ring's compute chain is untouched, so
+    the result is bit-identical under any skew.
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     q = chunks_per_rank
+    order = sub_chunk_service_order(q, skew)
 
     def merge(accs):
         return accs[0] if q == 1 else jnp.concatenate(accs, axis=sub_axis)
@@ -104,10 +120,12 @@ def ring_reduce_scatter_compute(
         return merge([partial_fn(jnp.int32(s)) for s in range(q)])
 
     if schedule == "comm_aware":
-        accs = [partial_fn(((d - 1) % n) * q + s) for s in range(q)]
+        accs: list = [None] * q
+        for s in order:
+            accs[s] = partial_fn(((d - 1) % n) * q + s)
         for i in range(1, n):
             c = (d - i - 1) % n
-            for s in range(q):
+            for s in order:
                 accs[s] = ring_permute(accs[s], axis_name, n)
                 accs[s] = accs[s] + partial_fn(c * q + s)
         return merge(accs)
@@ -119,10 +137,11 @@ def ring_reduce_scatter_compute(
         # parts[j] is the partial for chunk (d - n + j) mod n; the carry
         # schedule consumes them in reverse creation order so the own
         # chunk was produced first (local-first, the paper's baseline).
-        accs = parts[-1]  # chunk (d-1)
+        accs = list(parts[-1])  # chunk (d-1)
         for i in range(1, n):
-            accs = [ring_permute(a, axis_name, n) for a in accs]
-            accs = [a + p for a, p in zip(accs, parts[-(i + 1)])]
+            for s in order:
+                accs[s] = ring_permute(accs[s], axis_name, n)
+                accs[s] = accs[s] + parts[-(i + 1)][s]
         return merge(accs)
 
     raise ValueError(f"unknown schedule {schedule!r}")
@@ -169,6 +188,7 @@ def direct_all_to_all_compute(
     schedule: str = "comm_aware",
     chunks_per_rank: int = 1,
     sub_axis: int = 0,
+    skew: int = 0,
 ):
     """Fused compute + All-to-All via per-destination direct sends.
 
@@ -189,13 +209,22 @@ def direct_all_to_all_compute(
 
     comm_aware: farthest destination first, own chunk last (paper's
     remote-ahead-of-local rule).  oblivious: natural order (Fig. 14
-    baseline).
+    baseline).  ``skew`` rotates the remote portion of the destination
+    order (a measured straggler rotation — Fig. 14), exactly matching the
+    schedule :func:`repro.core.scheduling.sub_chunk_send_events` models;
+    per-destination chunks are independent, so the output is bit-identical
+    under any skew.
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     q = chunks_per_rank
     chunk_shape = tuple(out_shape_dtype.shape)
     out = jnp.zeros((n,) + chunk_shape, out_shape_dtype.dtype)
+    if chunk_shape[sub_axis] % q:
+        raise ValueError(
+            f"sub-chunk factor {q} does not divide destination-chunk axis "
+            f"{sub_axis} of size {chunk_shape[sub_axis]}; clamp via "
+            f"feasible_chunks_per_rank first")
     sub = chunk_shape[sub_axis] // q
 
     def place(out, ysub, src, s):
@@ -204,7 +233,7 @@ def direct_all_to_all_compute(
         starts[sub_axis + 1] = jnp.int32(s * sub)
         return lax.dynamic_update_slice(out, ysub[None], tuple(starts))
 
-    for off in ring_offsets(n, schedule):
+    for off in ring_offsets(n, schedule, skew):
         dest = (d + off) % n
         for s in range(q):
             y = produce_fn(dest * q + s) if q > 1 else produce_fn(dest)

@@ -52,6 +52,7 @@ def embedding_all_to_all(
     mode: str | None = None,
     schedule: str | None = None,
     chunks_per_rank: int | str | None = None,
+    skew: int | None = None,
 ):
     """Pooled embeddings exchanged table-parallel -> data-parallel.
 
@@ -63,10 +64,15 @@ def embedding_all_to_all(
     ``chunks_per_rank`` splits each destination's batch fragment into
     sub-fragments along the batch rows, shipping every sub-fragment the
     moment its pooling finishes (paper Fig. 13 — the paper's slice is
-    exactly such a batch-fragment of one table's output).
+    exactly such a batch-fragment of one table's output).  ``skew``
+    rotates the destination order by the measured straggler bucket
+    (Fig. 14).  This op rings over the flattened *world* axis, so
+    ``None`` uses ``ctx.fusion.skew_world`` — a tp-ring bucket would be
+    an arbitrary offset on this (larger) ring.
     """
     mode = mode or ctx.fusion.resolve("embed_a2a")
     schedule = schedule or ctx.fusion.schedule
+    skew = ctx.fusion.skew_world if skew is None else int(skew)
     world_axes = tuple(ctx.dp_axes) + (ctx.tp_axis,)
     n = ctx.world
     B, T, L = indices.shape
@@ -82,7 +88,7 @@ def embedding_all_to_all(
             lambda: tune_all_to_all((B // n) * t_local_g * D,
                                     float((B // n) * t_local_g * L * D),
                                     dtype_bytes=tables.dtype.itemsize,
-                                    n_dev=n, sub_dim=B // n),
+                                    n_dev=n, sub_dim=B // n, skew=skew),
             dim=B // n, ring=1)
 
     def local_fn(idx_l, tab_l):
@@ -117,6 +123,7 @@ def embedding_all_to_all(
                 schedule=schedule,
                 chunks_per_rank=q,
                 sub_axis=0,
+                skew=skew,
             )
         # recv: [n_src, b_chunk, T_local, D] -> [b_chunk, T_global, D]
         return jnp.moveaxis(recv, 0, 1).reshape((b_chunk, n * t_local, D))

@@ -27,6 +27,13 @@ from repro.core.autotune import (
     tune_ce_ring,
     tune_ring_attention,
 )
+from repro.core.calibrate import measured_calibration_pass
+from repro.core.scheduling import (
+    best_skew_rotation,
+    modeled_execution_skew,
+    modeled_finish_times,
+    skew_statistic,
+)
 from repro.parallel.sharding import FusionConfig, ParallelContext
 
 __all__ = [
@@ -50,7 +57,12 @@ __all__ = [
     "choose_tile_n",
     "load_cache",
     "measured_best",
+    "measured_calibration_pass",
     "save_cache",
     "tune_ce_ring",
     "tune_ring_attention",
+    "best_skew_rotation",
+    "modeled_execution_skew",
+    "modeled_finish_times",
+    "skew_statistic",
 ]

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.autotune import resolve_chunks_per_rank, tune_ce_ring
 from repro.core.collectives import ring_permute, split_ring_payload
+from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
@@ -51,14 +52,19 @@ def _cap_bwd(lg_raw, cap):
 
 
 def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
-                   logit_softcap, n_world: int, n_sub: int = 1):
+                   logit_softcap, n_world: int, n_sub: int = 1,
+                   skew: int = 0):
     """Builds the per-rank CE with custom VJP (runs inside shard_map).
 
     ``n_sub`` (= ``chunks_per_rank``, paper Fig. 13) splits the ring
     payload — the local sequence chunk — into sub-chunks that ring
     independently: each arriving sub-chunk is reduced to its softmax
     stats (fwd) or its dx contribution (bwd) while the next sub-chunk's
-    collective-permute is in flight."""
+    collective-permute is in flight.  ``skew`` (measured straggler
+    rotation, Fig. 14) rotates the sub-ring service order within each
+    hop; stats land in disjoint slots, so the forward is bit-identical
+    under any skew."""
+    order = sub_chunk_service_order(n_sub, skew)
 
     @jax.custom_vjp
     def local_ce(xl, el, yl):
@@ -96,7 +102,7 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
             bufs = split_ring_payload(xl, n_sub)
             for i in range(n):
                 src = (d - i) % n
-                for j in range(n_sub):
+                for j in (order if i > 0 else range(n_sub)):
                     if i > 0:
                         # forward sub-chunk j the moment sub-chunk j-1's
                         # stats reduction is issued (Fig. 13 granularity)
@@ -192,7 +198,7 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
             dEl_acc += dEl
         for i in range(1, n):
             src = (d - i) % n
-            for j in range(n_sub):
+            for j in order:
                 xbufs[j] = ring_permute(xbufs[j], axis, n)
                 dxbufs[j] = ring_permute(dxbufs[j], axis, n)
                 dxc, dEl = sub_grads(j, src, xbufs[j])
@@ -217,15 +223,19 @@ def sharded_cross_entropy(
     mode: str | None = None,
     logit_softcap: float | None = None,
     chunks_per_rank: int | str | None = None,
+    skew: int | None = None,
 ):
     """Mean token cross-entropy; logits stay chunk-local in fwd AND bwd.
 
     ``chunks_per_rank`` sub-chunks the ring payload in the forward stats
     ring and the backward dx ring (paper Fig. 13); ``None`` defers to
     ``FusionConfig.granularity`` and ``"auto"`` to the shape-keyed
-    alpha-beta tuner (:func:`tune_ce_ring`).
+    alpha-beta tuner (:func:`tune_ce_ring`).  ``skew`` rotates the
+    sub-ring service order by the measured straggler bucket (Fig. 14;
+    ``None`` uses ``ctx.fusion.skew``).
     """
     axis, n = ctx.tp_axis, ctx.tp
+    skew = ctx.fusion.skew if skew is None else int(skew)
     B, S, D = x.shape
     V = embed.shape[0]
     dp = ctx.batch_axes if B % ctx.dp == 0 else None
@@ -241,11 +251,12 @@ def sharded_cross_entropy(
         n_sub = resolve_chunks_per_rank(
             chunks_per_rank, ctx.fusion.granularity,
             lambda: tune_ce_ring(b_loc, s_loc, D, V // n,
-                                 dtype_bytes=x.dtype.itemsize, n_dev=n),
+                                 dtype_bytes=x.dtype.itemsize, n_dev=n,
+                                 skew=skew),
             dim=s_loc, ring=1)
 
     local_ce = _make_local_ce(axis, n, dp, n_dp, seq_sharded, logit_softcap,
-                              ctx.mesh.size, n_sub=n_sub)
+                              ctx.mesh.size, n_sub=n_sub, skew=skew)
 
     x_spec = P(dp, axis, None) if seq_sharded else P(dp, None, None)
     loss = shard_map(

@@ -43,7 +43,7 @@ def _bulk(xl, wl, axis):
     return lax.psum(xl @ wl, axis)
 
 
-def _fused_rows(xl, wl, axis, schedule, q):
+def _fused_rows(xl, wl, axis, schedule, q, skew):
     n = axis_size(axis)
     chunk = xl.shape[0] // (n * q)
 
@@ -52,11 +52,12 @@ def _fused_rows(xl, wl, axis, schedule, q):
         return xi @ wl
 
     mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule,
-                                       chunks_per_rank=q, sub_axis=0)
+                                       chunks_per_rank=q, sub_axis=0,
+                                       skew=skew)
     return lax.all_gather(mine, axis, axis=0, tiled=True)
 
 
-def _fused_cols(xl, wl, axis, schedule, q):
+def _fused_cols(xl, wl, axis, schedule, q, skew):
     n = axis_size(axis)
     chunk = wl.shape[1] // (n * q)
 
@@ -65,7 +66,8 @@ def _fused_cols(xl, wl, axis, schedule, q):
         return xl @ wi
 
     mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule,
-                                       chunks_per_rank=q, sub_axis=1)
+                                       chunks_per_rank=q, sub_axis=1,
+                                       skew=skew)
     return lax.all_gather(mine, axis, axis=1, tiled=True)
 
 
@@ -77,6 +79,7 @@ def matmul_allreduce(
     mode: str | None = None,
     schedule: str | None = None,
     chunks_per_rank: int | str | None = None,
+    skew: int | None = None,
 ):
     """y = AllReduce_tp(x @ w) for row-parallel ``w``.
 
@@ -84,10 +87,12 @@ def matmul_allreduce(
     Returns [..., N] replicated over tp (sharded over dp on leading dims).
 
     ``chunks_per_rank``: sub-chunk granularity of the fused ring (int or
-    "auto"); ``None`` uses ``ctx.fusion.granularity``.
+    "auto"); ``None`` uses ``ctx.fusion.granularity``.  ``skew``: measured
+    straggler rotation (Fig. 14); ``None`` uses ``ctx.fusion.skew``.
     """
     mode = mode or ctx.fusion.resolve("matmul_rs")
     schedule = schedule or ctx.fusion.schedule
+    skew = ctx.fusion.skew if skew is None else int(skew)
     axis = ctx.tp_axis
     n = ctx.tp
 
@@ -114,7 +119,7 @@ def matmul_allreduce(
             chunks_per_rank, ctx.fusion.granularity,
             lambda: tune_matmul_allreduce(
                 rows_local, k // n, nout, dtype_bytes=x.dtype.itemsize,
-                n_dev=n, chunk_dim=chunk_dim),
+                n_dev=n, chunk_dim=chunk_dim, skew=skew),
             dim=chunk_dim, ring=n)
     else:
         q = 1  # bulk/kernel paths do not ring-chunk at this level
@@ -127,8 +132,8 @@ def matmul_allreduce(
 
             return fused_matmul_allreduce_shard(xl, wl, axis)
         if use_rows:
-            return _fused_rows(xl, wl, axis, schedule, q)
-        return _fused_cols(xl, wl, axis, schedule, q)
+            return _fused_rows(xl, wl, axis, schedule, q, skew)
+        return _fused_cols(xl, wl, axis, schedule, q, skew)
 
     yf = shard_map(
         local_fn,

@@ -35,20 +35,21 @@ from repro.compat import shard_map
 
 
 def _resolve_q(ctx, chunks_per_rank, *, sub_dim, chunk_elems,
-               flops_per_dest, dtype_bytes):
+               flops_per_dest, dtype_bytes, skew=0):
     """FusionConfig/override -> feasible chunks_per_rank.  Sub-chunks are
     cut along the capacity axis, so q must divide ``sub_dim`` (= C)."""
     return resolve_chunks_per_rank(
         chunks_per_rank, ctx.fusion.granularity,
         lambda: tune_all_to_all(chunk_elems, flops_per_dest,
                                 dtype_bytes=dtype_bytes, n_dev=ctx.tp,
-                                sub_dim=sub_dim),
+                                sub_dim=sub_dim, skew=skew),
         dim=sub_dim, ring=1)
 
 
 def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
                             schedule: str | None = None,
-                            chunks_per_rank: int | str | None = None):
+                            chunks_per_rank: int | str | None = None,
+                            skew: int | None = None):
     """All-to-All of dispatch buffers over the EP axis.
 
     x: [B, n_ep, E_local, C, D] global — dim 1 indexes the destination EP
@@ -59,10 +60,12 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
 
     ``chunks_per_rank`` splits each destination's token block along the
     capacity axis; every sub-block is shipped as soon as it is sliced out
-    (paper Fig. 13 granularity knob).
+    (paper Fig. 13 granularity knob).  ``skew`` rotates the destination
+    order by the measured straggler bucket (Fig. 14).
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
     schedule = schedule or ctx.fusion.schedule
+    skew = ctx.fusion.skew if skew is None else int(skew)
     axis = ctx.tp_axis
     b = x.shape[0]
     _, n_ep, e_glob, cap, dmodel = x.shape
@@ -72,7 +75,8 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     q = (1 if mode == "bulk" else
          _resolve_q(ctx, chunks_per_rank, sub_dim=cap,
                     chunk_elems=b_loc * e_loc * cap * dmodel,
-                    flops_per_dest=0.0, dtype_bytes=x.dtype.itemsize))
+                    flops_per_dest=0.0, dtype_bytes=x.dtype.itemsize,
+                    skew=skew))
 
     def local_fn(xl):
         # xl: [B_loc, n_ep, E_local, C, D]; exchange dim 1 across ranks.
@@ -96,6 +100,7 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
                 schedule=schedule,
                 chunks_per_rank=q,
                 sub_axis=2,
+                skew=skew,
             )
         return jnp.moveaxis(out, 0, 1)
 
@@ -118,6 +123,7 @@ def fused_expert_ffn_combine(
     mode: str | None = None,
     schedule: str | None = None,
     chunks_per_rank: int | str | None = None,
+    skew: int | None = None,
 ):
     """Expert FFN fused with the combine All-to-All (the paper's GEMM+A2A).
 
@@ -142,6 +148,7 @@ def fused_expert_ffn_combine(
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
     schedule = schedule or ctx.fusion.schedule
+    skew = ctx.fusion.skew if skew is None else int(skew)
     axis = ctx.tp_axis
     b = x_dispatched.shape[0]
     _, n_ep, e_glob, cap, dmodel = x_dispatched.shape
@@ -161,7 +168,7 @@ def fused_expert_ffn_combine(
                     chunk_elems=b_loc * e_loc * cap * dmodel,
                     flops_per_dest=2.0 * 3 * b_loc * e_loc * cap * dmodel
                     * d_ff,
-                    dtype_bytes=x_dispatched.dtype.itemsize))
+                    dtype_bytes=x_dispatched.dtype.itemsize, skew=skew))
 
     def ffn_block(xb, wu, wg, wd):
         # xb: [B_loc, E_local, C, D] -> same shape
@@ -198,6 +205,7 @@ def fused_expert_ffn_combine(
                 schedule=schedule,
                 chunks_per_rank=q,
                 sub_axis=2,
+                skew=skew,
             )
         return jnp.moveaxis(out, 0, 1)
 

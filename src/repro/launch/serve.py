@@ -14,6 +14,8 @@ import numpy as np
 from repro.configs.registry import get_arch
 from repro.core.autotune import (add_granularity_cli_args,
                                  load_cache_if_exists, save_cache)
+from repro.core.calibrate import (add_calibration_cli_args,
+                                  warmup_and_calibrate)
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
@@ -29,6 +31,7 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
     add_granularity_cli_args(ap)
+    add_calibration_cli_args(ap)
     ap.add_argument("--production-mesh", action="store_true")
     args = ap.parse_args()
 
@@ -45,6 +48,15 @@ def main():
     params, _ = split_params(params_p)
     decode = bundle.decode_fn(ctx)
     decode_jit = jax.jit(lambda t, c, pos: decode(params, t, c, pos))
+
+    if args.calibrate:
+        warm_cache = bundle.init_cache(args.batch)
+        warm_tok = np.zeros((args.batch, 1), np.int32)
+        warmup_and_calibrate(ctx, decode_jit, warm_tok, warm_cache, 0,
+                             iters=args.calibrate_iters,
+                             granularity=args.granularity)
+        # measured decisions are read at trace time: re-jit for steady state
+        decode_jit = jax.jit(lambda t, c, pos: decode(params, t, c, pos))
 
     engine = DecodeEngine(decode_jit, bundle.init_cache, args.batch)
     rng = np.random.default_rng(0)

@@ -20,11 +20,14 @@ import numpy as np
 from repro.configs.registry import get_arch
 from repro.core.autotune import (add_granularity_cli_args,
                                  load_cache_if_exists, save_cache)
+from repro.core.calibrate import (add_calibration_cli_args,
+                                  warmup_and_calibrate)
 from repro.data.synthetic import DLRMBatches, LMBatches
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
 from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
+from repro.runtime.straggler import SkewEstimator, SkewScheduler
 from repro.train.optimizer import OptimizerConfig
 from repro.train.step import TrainConfig, build_train_step, init_train_state, train_state_specs
 
@@ -72,6 +75,14 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
     add_granularity_cli_args(ap)
+    add_calibration_cli_args(ap)
+    ap.add_argument("--skew-schedule", action="store_true",
+                    help="close the Fig. 14 loop: feed per-step telemetry "
+                         "to the cross-rank skew estimator and re-jit the "
+                         "fused-op schedules when the straggler bucket "
+                         "changes (single-process runs see uniform times, "
+                         "so the bucket stays 0 unless a cluster telemetry "
+                         "provider is plugged in)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true")
@@ -97,13 +108,31 @@ def main():
     state_sh = _shardings(ctx, train_state_specs(tc, param_specs))
     state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, state_sh)
 
-    step_fn = jax.jit(build_train_step(bundle.loss_fn(ctx), tc),
-                      donate_argnums=(0,))
+    def build_step(skew: int = 0):
+        c = ctx.with_fusion(dataclasses.replace(fusion, skew=skew))
+        return jax.jit(build_train_step(bundle.loss_fn(c), tc),
+                       donate_argnums=(0,))
+
+    step_fn = build_step()
+    batches = make_batches(bundle, args.batch, args.seq)
+
+    if args.calibrate:
+        batch0 = next(iter(make_batches(bundle, args.batch, args.seq)))
+        warmup_and_calibrate(ctx, step_fn, state, batch0,
+                             iters=args.calibrate_iters,
+                             granularity=args.granularity)
+        step_fn = build_step()  # measured decisions are read at trace time
+
+    skew_sched = None
+    if args.skew_schedule:
+        skew_sched = SkewScheduler(build_step,
+                                   SkewEstimator(dict(ctx.mesh.shape)),
+                                   axis=ctx.tp_axis)
 
     sup = TrainSupervisor(
         SupervisorConfig(checkpoint_dir=args.ckpt_dir,
                          checkpoint_every=args.ckpt_every),
-        step_fn, state_shardings=state_sh)
+        step_fn, state_shardings=state_sh, skew_scheduler=skew_sched)
 
     t0 = time.time()
     losses = []
@@ -117,7 +146,6 @@ def main():
                   f"({(time.time() - t0) / max(step, 1):.2f}s/step)",
                   flush=True)
 
-    batches = make_batches(bundle, args.batch, args.seq)
     state, step = sup.run(state, batches, args.steps, on_metrics=on_metrics)
     print(f"done at step {step}; loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
           f"straggler stats {sup.straggler.summary()}")

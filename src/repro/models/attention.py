@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.autotune import resolve_chunks_per_rank, tune_ring_attention
 from repro.core.collectives import (attention_partial_merge, ring_permute,
                                     split_ring_payload)
+from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
@@ -179,7 +180,7 @@ def _span_flash_bwd(q5, kc, vc, do5, delta, m, l, qpos, kpos, dq5, *,
 
 def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
                          q_block, kv_block, Hq, Hkv, hd, s_loc, n_world,
-                         n_sub=1):
+                         n_sub=1, skew=0):
     """Ring attention with analytic backward (custom VJP).
 
     Forward: each arriving KV chunk is flash-consumed while the next hop's
@@ -195,9 +196,16 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
     *with* its sub-chunk and is delivered back to its owner in one final
     offset permute.  Peak memory: one score tile — autodiff through the
     unrolled ring would instead save every hop's probability tensors.
+
+    ``skew`` (measured straggler rotation, Fig. 14) rotates the service
+    order of the ``n_sub`` independent sub-chunk rings within each hop —
+    the straggler-facing sub-ring is forwarded first.  The shared
+    online-softmax carry then merges sub-chunks in rotated order, which
+    is algebraically the same sum (equal within the usual fp tolerance).
     """
     g = Hq // Hkv
     sub = s_loc // n_sub
+    order = sub_chunk_service_order(n_sub, skew)
     # Without causal/window masking the position arrays are dead code; an
     # unconsumed axis_index leaves a dangling partition-id instruction that
     # the SPMD partitioner refuses, so only trace it when a mask needs it.
@@ -225,7 +233,7 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
         vbufs = split_ring_payload(vl, n_sub)
         for i in range(1, hops + 1):
             src = (d - i) % n
-            for j in range(n_sub):
+            for j in order:
                 kbufs[j] = ring_permute(kbufs[j], axis, n)
                 vbufs[j] = ring_permute(vbufs[j], axis, n)
                 carry = _span_flash(
@@ -268,7 +276,7 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
         dvbufs = [s.astype(vl.dtype) for s in split_ring_payload(dv, n_sub)]
         for i in range(1, hops + 1):
             src = (d - i) % n
-            for j in range(n_sub):
+            for j in order:
                 kbufs[j] = ring_permute(kbufs[j], axis, n)
                 vbufs[j] = ring_permute(vbufs[j], axis, n)
                 dkbufs[j] = ring_permute(dkbufs[j], axis, n)
@@ -311,11 +319,15 @@ def context_attention(
     q_block: int = 256,
     kv_block: int = 1024,
     chunks_per_rank: int | str | None = None,
+    skew: int | None = None,
 ):
     """``chunks_per_rank`` sub-chunks the KV ring payload (paper Fig. 13);
     ``None`` defers to ``FusionConfig.granularity`` and ``"auto"`` to the
-    shape-keyed alpha-beta tuner (:func:`tune_ring_attention`)."""
+    shape-keyed alpha-beta tuner (:func:`tune_ring_attention`).  ``skew``
+    rotates the sub-ring service order by the measured straggler bucket
+    (Fig. 14; ``None`` uses ``ctx.fusion.skew``)."""
     mode = mode or ctx.fusion.resolve("kv_ag")
+    skew = ctx.fusion.skew if skew is None else int(skew)
     axis, n = ctx.tp_axis, ctx.tp
     B, S, Hq, hd = q.shape
     Hkv = k.shape[2]
@@ -336,12 +348,12 @@ def context_attention(
             chunks_per_rank, ctx.fusion.granularity,
             lambda: tune_ring_attention(
                 b_loc, s_loc, Hq, Hkv, hd, dtype_bytes=k.dtype.itemsize,
-                n_dev=n, hops=hops),
+                n_dev=n, hops=hops, skew=skew),
             dim=s_loc, ring=1)
         ring_attn = _make_ring_attention(
             axis, n, hops, causal, window, scale, softcap_val,
             q_block, kv_block, Hq, Hkv, hd, s_loc, ctx.mesh.size,
-            n_sub=n_sub)
+            n_sub=n_sub, skew=skew)
 
     def local_fn(ql, kl, vl):
         d = lax.axis_index(axis)

@@ -48,11 +48,28 @@ class FusionConfig:
       (:mod:`repro.core.autotune`) per fused-op call site.  Values that
       do not divide the chunked dimension are clamped per-op to the
       largest feasible factor.
+    skew: measured straggler rotation (paper Fig. 14).  An integer bucket
+      produced by :class:`repro.runtime.straggler.SkewEstimator` from
+      per-rank step-time telemetry; every fused op ringing over the *tp*
+      axis rotates its static chunk schedule by it (the A2A family
+      rotates the remote destination order, the ring-carry family the
+      sub-chunk service order).  The schedule is baked into the lowered
+      HLO, so changing the bucket requires a re-jit —
+      :class:`repro.runtime.straggler.SkewScheduler` owns that loop.
+      0 = no measured skew (the default schedules).
+    skew_world: the same bucket for ops that ring over the flattened
+      full-world axis (the DLRM embedding A2A).  A rotation is only
+      meaningful for the ring it was estimated on, so the world-ring ops
+      deliberately do not inherit the tp-ring ``skew``
+      (``SkewEstimator`` reduces per axis; feed each ring its own
+      bucket).
     """
 
     mode: str = "fused"
     schedule: str = "comm_aware"
     granularity: int | str = 1
+    skew: int = 0
+    skew_world: int = 0
     fuse_ag_matmul: bool = True
     fuse_matmul_rs: bool = True
     fuse_moe_a2a: bool = True

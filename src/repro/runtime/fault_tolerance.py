@@ -33,14 +33,39 @@ class TrainSupervisor:
     """Drives (state, batch) -> (state, metrics) with checkpoint/restart."""
 
     def __init__(self, cfg: SupervisorConfig, step_fn: Callable,
-                 state_shardings=None):
+                 state_shardings=None, skew_scheduler=None,
+                 per_rank_times: Callable | None = None):
+        """``skew_scheduler`` (a :class:`~repro.runtime.straggler.
+        SkewScheduler`) closes the Fig. 14 loop: each step's wall time is
+        fed to it (expanded to a per-rank vector by ``per_rank_times`` —
+        on a multi-host cluster a process all-gather, by default the local
+        time replicated, which keeps the rotation at 0) and on a bucket
+        change the supervisor swaps in the re-jitted step for the new
+        schedule.  When set, it also *owns* the step function —
+        ``step_fn`` is ignored in favor of ``skew_scheduler.fn()``."""
         self.cfg = cfg
         self.step_fn = step_fn
         self.state_shardings = state_shardings
         self.manager = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep,
                                          async_save=cfg.async_save)
         self.straggler = StragglerMonitor()
+        self.skew_scheduler = skew_scheduler
+        self.per_rank_times = per_rank_times
+        if skew_scheduler is not None:
+            self.step_fn = skew_scheduler.fn()
         self.restarts = 0
+
+    def _feed_skew(self, dt: float) -> None:
+        sched = self.skew_scheduler
+        if sched is None:
+            return
+        world = sched.estimator.world
+        times = (self.per_rank_times(dt) if self.per_rank_times is not None
+                 else [dt] * world)
+        if sched.observe(times):
+            log.info("skew bucket -> %d (axis %r); re-jitting schedules",
+                     sched.bucket, sched.axis)
+            self.step_fn = sched.fn()
 
     def maybe_restore(self, state):
         restored = self.manager.restore_latest(state, self.state_shardings)
@@ -72,7 +97,9 @@ class TrainSupervisor:
                 state, ckpt_step = self.maybe_restore(state)
                 step = ckpt_step
                 continue
-            self.straggler.record(time.monotonic() - t0)
+            dt = time.monotonic() - t0
+            self.straggler.record(dt)
+            self._feed_skew(dt)
             step += 1
             if on_metrics is not None:
                 on_metrics(step, metrics)

@@ -1,0 +1,471 @@
+"""The skew feedback loop (Fig. 14): telemetry -> bucket -> schedules.
+
+Covers: the StragglerMonitor baseline/flag-rate fixes, the cross-rank
+SkewEstimator reduction, the schedule model invariants, skewed-schedule
+parity across every fused-op family (fused == reference for skew in
+{0, 1, n-1}; bit-identical across buckets for the independent-chain
+families), the one-re-jit-per-bucket regression, indivisible sub-chunk
+errors, TuneKey skew persistence, and the measured calibration pass.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.calibrate import measured_calibration_pass
+from repro.core.collectives import direct_all_to_all_compute, split_ring_payload
+from repro.core.embedding_all_to_all import embedding_all_to_all
+from repro.core.loss import sharded_cross_entropy
+from repro.core.matmul_allreduce import matmul_allreduce
+from repro.core.moe_all_to_all import (fused_expert_ffn_combine,
+                                       moe_dispatch_all_to_all)
+from repro.core.allgather_matmul import matmul_reducescatter
+from repro.core.scheduling import (best_skew_rotation, modeled_execution_skew,
+                                   modeled_finish_times, ring_offsets,
+                                   skew_statistic, sub_chunk_service_order)
+from repro.models.attention import context_attention
+from repro.parallel.sharding import FusionConfig
+from repro.runtime.straggler import (SkewEstimator, SkewScheduler,
+                                     StragglerMonitor)
+
+LINKS = [1.0, 1.0, 1.0, 1.0, 4.0, 1.0, 1.0, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor bugfixes
+# ---------------------------------------------------------------------------
+def test_monitor_baseline_excludes_current_sample():
+    # baseline median (excluding the step) is 1.0, so 3.0 must flag; the
+    # old median-over-window-including-self was 2.0, masking the outlier
+    m = StragglerMonitor(window=20, threshold=1.5, min_baseline=9)
+    for t in [1, 1, 1, 1, 1, 3, 3, 3, 3]:
+        assert not m.record(t)  # baseline shorter than min_baseline
+    assert m.record(3.0)
+
+
+def test_monitor_flag_rate_decays_on_recovery():
+    m = StragglerMonitor(window=10, threshold=1.5, min_baseline=5)
+    for _ in range(6):
+        m.record(1.0)
+    for _ in range(3):
+        assert m.record(10.0)
+    assert m.flags == 3 and m.flag_rate > 0
+    for _ in range(10):  # recovered: flag window fully refreshed
+        m.record(1.0)
+    assert m.flag_rate == 0.0
+    assert m.flags == 3  # cumulative count is history, not state
+
+
+def test_monitor_summary_has_rate_and_ewma():
+    m = StragglerMonitor()
+    m.record(1.0)
+    s = m.summary()
+    assert {"flag_rate", "ewma_s"} <= set(s)
+
+
+# ---------------------------------------------------------------------------
+# schedule model + estimator reduction
+# ---------------------------------------------------------------------------
+def test_modeled_skew_comm_aware_measured_beats_oblivious():
+    times = [1.0] * 8
+    times[5] = 1.5
+    rot = best_skew_rotation(8, times, link_scale=LINKS)
+    s_obl = modeled_execution_skew(8, "oblivious", 0, times, link_scale=LINKS)
+    s_aw = modeled_execution_skew(8, "comm_aware", 0, times, link_scale=LINKS)
+    s_me = modeled_execution_skew(8, "comm_aware", rot, times,
+                                  link_scale=LINKS)
+    assert s_me <= s_aw < s_obl
+    assert rot != 0  # the measured feed-in actually moved the schedule
+
+
+def test_best_rotation_uniform_times_is_zero():
+    # homogeneous topology + uniform rates: no reason to rotate
+    assert best_skew_rotation(8, [1.0] * 8) == 0
+    # a slow link alone may justify a rotation, but never a worse one
+    r = best_skew_rotation(8, [1.0] * 8, link_scale=LINKS)
+    assert modeled_execution_skew(8, "comm_aware", r, [1.0] * 8,
+                                  link_scale=LINKS) <= \
+        modeled_execution_skew(8, "comm_aware", 0, [1.0] * 8,
+                               link_scale=LINKS)
+
+
+def test_modeled_finish_times_uniform_comm_aware_fully_hidden():
+    fin = modeled_finish_times(8, "comm_aware", 0, [1.0] * 8)
+    assert skew_statistic(fin) == 0.0  # wire hidden behind compute
+
+
+def test_sub_chunk_service_order_is_rotation():
+    assert sub_chunk_service_order(4, 0) == [0, 1, 2, 3]
+    assert sub_chunk_service_order(4, 1) == [1, 2, 3, 0]
+    assert sub_chunk_service_order(4, 6) == [2, 3, 0, 1]
+    assert sub_chunk_service_order(1, 3) == [0]
+
+
+def test_estimator_reduces_injected_delay_to_bench_rotation():
+    est = SkewEstimator({"ring": 8}, link_scales={"ring": LINKS})
+    times = [1.0] * 8
+    times[5] = 1.5
+    for _ in range(3):
+        est.observe(times)
+    assert est.rotation("ring") == best_skew_rotation(8, times,
+                                                      link_scale=LINKS)
+    assert est.axis_skew("ring") == pytest.approx(0.5)
+
+
+def test_estimator_axis_reduction_on_2d_mesh():
+    # mesh (data=2, model=4), flat row-major order; model-position 2 slow
+    est = SkewEstimator({"data": 2, "model": 4})
+    times = [1.0, 1.0, 1.4, 1.0, 1.0, 1.0, 1.4, 1.0]
+    for _ in range(3):
+        est.observe(times)
+    assert est.axis_skew("model") == pytest.approx(0.4)
+    assert est.axis_skew("data") == pytest.approx(0.0)
+
+
+def test_estimator_rejects_bad_observations():
+    est = SkewEstimator({"ring": 4})
+    with pytest.raises(ValueError):
+        est.observe([1.0, 1.0])  # wrong world
+    with pytest.raises(ValueError):
+        est.observe([1.0, 1.0, 0.0, 1.0])  # non-positive
+
+
+# ---------------------------------------------------------------------------
+# re-jit regression: exactly one build per bucket change
+# ---------------------------------------------------------------------------
+def test_skew_scheduler_rebuilds_once_per_bucket():
+    est = SkewEstimator({"ring": 8}, link_scales={"ring": LINKS},
+                        alpha=1.0, min_obs=1, hysteresis=0.0)
+    builds = []
+
+    def build(skew):
+        builds.append(skew)
+        return lambda: skew
+
+    sched = SkewScheduler(build, est, axis="ring")
+    assert sched.fn()() == 0 and builds == [0]
+    slow = [1.0] * 8
+    slow[5] = 1.5
+    changed = sched.observe(slow)
+    assert changed and sched.bucket != 0
+    b1 = sched.bucket
+    assert sched.fn()() == b1
+    assert len(builds) == 2  # exactly one re-jit for the new bucket
+    # same telemetry again: same bucket, no rebuild
+    assert not sched.observe(slow)
+    sched.fn()
+    assert len(builds) == 2
+    # shift the straggler: new bucket, exactly one more re-jit
+    slow2 = [1.0] * 8
+    slow2[0] = 1.5
+    assert sched.observe(slow2)
+    b2 = sched.bucket
+    assert b2 != b1 and sched.fn()() == b2
+    assert len(builds) == 3
+    # straggler moves back: previously seen bucket is cached, no rebuild
+    assert sched.observe(slow) and sched.bucket == b1
+    assert sched.fn()() == b1
+    assert len(builds) == 3
+
+
+# ---------------------------------------------------------------------------
+# parity: fused == reference for skew in {0, 1, n-1}, bit-identical across
+# buckets for the independent-chain (reduce-scatter / A2A) families
+# ---------------------------------------------------------------------------
+def _skew_buckets(n):
+    return [0, 1, n - 1]
+
+
+def _assert_buckets(fused_fn, ref, n, *, exact=False, tol=3e-4):
+    base = None
+    for sk in _skew_buckets(n):
+        y = np.asarray(jax.jit(lambda sk=sk: fused_fn(sk))(), np.float32)
+        np.testing.assert_allclose(
+            y, ref, rtol=tol, atol=tol * max(1.0, float(np.abs(ref).max())))
+        if exact:
+            base = y if base is None else base
+            assert (y == base).all(), "schedule rotation changed the result"
+
+
+def test_skew_parity_matmul_allreduce(ctx, rng):
+    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    ref = np.asarray(jax.jit(
+        lambda: matmul_allreduce(ctx, x, w, mode="bulk"))(), np.float32)
+    _assert_buckets(lambda sk: matmul_allreduce(
+        ctx, x, w, mode="fused", chunks_per_rank=2, skew=sk),
+        ref, ctx.tp, exact=True)
+
+
+def test_skew_parity_matmul_reducescatter(ctx, rng):
+    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    ref = np.asarray(jax.jit(
+        lambda: matmul_reducescatter(ctx, x, w, mode="bulk"))(), np.float32)
+    _assert_buckets(lambda sk: matmul_reducescatter(
+        ctx, x, w, mode="fused", chunks_per_rank=2, skew=sk),
+        ref, ctx.tp, exact=True)
+
+
+@pytest.mark.parametrize("schedule", ["comm_aware", "oblivious"])
+def test_skew_parity_moe_a2a(ctx, rng, schedule):
+    B, n_ep, E, C, D, F = 4, 4, 8, 8, 16, 24
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(np.float32)
+    wu = rng.standard_normal((E, D, F)).astype(np.float32)
+    wg = rng.standard_normal((E, D, F)).astype(np.float32)
+    wd = rng.standard_normal((E, F, D)).astype(np.float32)
+    ref_d = np.asarray(jax.jit(
+        lambda: moe_dispatch_all_to_all(ctx, xd, mode="bulk"))(), np.float32)
+    _assert_buckets(lambda sk: moe_dispatch_all_to_all(
+        ctx, xd, mode="fused", schedule=schedule, chunks_per_rank=2, skew=sk),
+        ref_d, ctx.tp, exact=True)
+    ref_c = np.asarray(jax.jit(lambda: fused_expert_ffn_combine(
+        ctx, xd, wu, wg, wd, act=jax.nn.silu, mode="bulk"))(), np.float32)
+    _assert_buckets(lambda sk: fused_expert_ffn_combine(
+        ctx, xd, wu, wg, wd, act=jax.nn.silu, mode="fused",
+        schedule=schedule, chunks_per_rank=2, skew=sk), ref_c, ctx.tp)
+
+
+def test_skew_parity_allgather_matmul(ctx, rng):
+    from repro.core.allgather_matmul import allgather_matmul
+
+    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    ref = np.asarray(jax.jit(
+        lambda: allgather_matmul(ctx, x, w, mode="bulk"))(), np.float32)
+    _assert_buckets(lambda sk: allgather_matmul(
+        ctx, x, w, mode="fused", chunks_per_rank=2, skew=sk),
+        ref, ctx.tp, exact=True)
+
+
+def test_skew_parity_embedding_a2a(ctx, rng):
+    B, T, L, V, D = 16, 8, 4, 32, 8
+    idx = rng.integers(0, V, size=(B, T, L)).astype(np.int32)
+    tabs = rng.standard_normal((T, V, D)).astype(np.float32)
+    ref = np.asarray(jax.jit(lambda: embedding_all_to_all(
+        ctx, idx, tabs, mode="bulk"))(), np.float32)
+    _assert_buckets(lambda sk: embedding_all_to_all(
+        ctx, idx, tabs, mode="fused", chunks_per_rank=2, skew=sk),
+        ref, ctx.world, exact=True)
+
+
+def test_skew_parity_ring_attention(ctx, rng):
+    B, S, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    q_ = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+    k_ = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    v_ = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+
+    def run(mode, sk=0):
+        return context_attention(ctx, q_, k_, v_, causal=True, mode=mode,
+                                 q_block=16, kv_block=16, chunks_per_rank=2,
+                                 skew=sk)
+
+    ref = np.asarray(jax.jit(lambda: run("bulk"))(), np.float32)
+    _assert_buckets(lambda sk: run("fused", sk), ref, ctx.tp, tol=2e-3)
+
+
+def test_skew_parity_ring_attention_grad(ctx, rng):
+    B, S, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    qq = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+    kk = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    vv = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    co = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+
+    def loss(mode, sk=0):
+        return lambda q_, k_, v_: (context_attention(
+            ctx, q_, k_, v_, causal=True, mode=mode, q_block=16, kv_block=16,
+            chunks_per_rank=2, skew=sk).astype(jnp.float32) * co).sum()
+
+    gb = jax.jit(jax.grad(loss("bulk"), argnums=(0, 1, 2)))(qq, kk, vv)
+    gf = jax.jit(jax.grad(loss("fused", ctx.tp - 1),
+                          argnums=(0, 1, 2)))(qq, kk, vv)
+    for a, b in zip(gf, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_skew_parity_ce_loss(ctx, rng):
+    B, S, D, V = 4, 16, 32, 64
+    x = rng.standard_normal((B, S, D)).astype(np.float32)
+    e = rng.standard_normal((V, D)).astype(np.float32)
+    y = rng.integers(0, V, (B, S)).astype(np.int32)
+    ref = np.asarray(jax.jit(lambda: sharded_cross_entropy(
+        ctx, x, e, y, chunks_per_rank=2, skew=0))())
+    for sk in _skew_buckets(ctx.tp):
+        loss = np.asarray(jax.jit(lambda sk=sk: sharded_cross_entropy(
+            ctx, x, e, y, chunks_per_rank=2, skew=sk))())
+        # fwd stats land in disjoint slots: bit-identical under rotation
+        assert loss == ref
+        g = jax.jit(jax.grad(lambda x, e, sk=sk: sharded_cross_entropy(
+            ctx, x, e, y, chunks_per_rank=2, skew=sk), argnums=(0, 1)))(x, e)
+        gr = jax.jit(jax.grad(lambda x, e: sharded_cross_entropy(
+            ctx, x, e, y, chunks_per_rank=2, skew=0), argnums=(0, 1)))(x, e)
+        for a, b in zip(g, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=2e-6)
+
+
+def test_fusion_config_skew_drives_every_op(ctx, rng):
+    """ctx.fusion.skew is the default skew for every tp-ring fused op,
+    ctx.fusion.skew_world for the flattened-world embedding A2A."""
+    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    c2 = ctx.with_fusion(FusionConfig(granularity=2, skew=1))
+    y_cfg = jax.jit(lambda: matmul_allreduce(c2, x, w, mode="fused"))()
+    y_arg = jax.jit(lambda: matmul_allreduce(
+        ctx, x, w, mode="fused", chunks_per_rank=2, skew=1))()
+    assert (np.asarray(y_cfg) == np.asarray(y_arg)).all()
+
+    B, T, L, V, D = 16, 8, 4, 32, 8
+    idx = rng.integers(0, V, size=(B, T, L)).astype(np.int32)
+    tabs = rng.standard_normal((T, V, D)).astype(np.float32)
+    c3 = ctx.with_fusion(FusionConfig(granularity=2, skew_world=3))
+    ye_cfg = jax.jit(lambda: embedding_all_to_all(c3, idx, tabs,
+                                                  mode="fused"))()
+    ye_arg = jax.jit(lambda: embedding_all_to_all(
+        ctx, idx, tabs, mode="fused", chunks_per_rank=2, skew=3))()
+    assert (np.asarray(ye_cfg) == np.asarray(ye_arg)).all()
+
+
+# ---------------------------------------------------------------------------
+# indivisible sub-chunking must raise, not truncate
+# ---------------------------------------------------------------------------
+def test_split_ring_payload_raises_on_indivisible():
+    with pytest.raises(ValueError, match="does not divide"):
+        split_ring_payload(jnp.zeros((2, 9)), 2)
+
+
+def test_direct_a2a_raises_on_indivisible_sub_chunking(ctx1d):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    def local_fn(xl):
+        return direct_all_to_all_compute(
+            lambda f: xl[0], jax.ShapeDtypeStruct((9,), jnp.float32),
+            "model", chunks_per_rank=2, sub_axis=0)
+
+    x = jnp.zeros((8, 9), jnp.float32)
+    with pytest.raises(ValueError, match="does not divide"):
+        jax.jit(shard_map(local_fn, mesh=ctx1d.mesh,
+                          in_specs=(P("model", None),),
+                          out_specs=P("model", None),
+                          check_vma=False))(x)
+
+
+# ---------------------------------------------------------------------------
+# TuneKey skew bucket: keying + persistence
+# ---------------------------------------------------------------------------
+def test_tunekey_skew_separates_decisions(tmp_path):
+    autotune.clear_cache()
+    kw = dict(shape=(8, 8), dtype_bytes=4, n_dev=4, flops=1e6,
+              hbm_bytes=1e3, wire_bytes=1e3, divisor_of=16)
+    q0 = autotune.choose_chunks_per_rank("op_a", skew=0, **kw)
+    autotune.choose_chunks_per_rank("op_a", skew=2, **kw)
+    keys = list(autotune.cache_info())
+    assert {k.skew for k in keys} == {0, 2}
+
+    path = str(tmp_path / "cache.json")
+    autotune.save_cache(path)
+    autotune.clear_cache()
+    assert autotune.load_cache(path) == 2
+    assert {k.skew for k in autotune.cache_info()} == {0, 2}
+    assert autotune.choose_chunks_per_rank("op_a", skew=0, **kw) == q0
+    autotune.clear_cache()
+
+
+def test_load_cache_defaults_skew_for_legacy_entries(tmp_path):
+    import json
+
+    autotune.clear_cache()
+    autotune.choose_chunks_per_rank(
+        "op_b", shape=(4,), dtype_bytes=4, n_dev=4, flops=1e6,
+        hbm_bytes=1e3, wire_bytes=1e3)
+    path = str(tmp_path / "legacy.json")
+    autotune.save_cache(path)
+    with open(path) as f:
+        blob = json.load(f)
+    for e in blob["entries"]:  # a cache written before the skew field
+        del e["key"]["skew"]
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    autotune.clear_cache()
+    assert autotune.load_cache(path) == 1
+    assert all(k.skew == 0 for k in autotune.cache_info())
+    autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# measured calibration pass
+# ---------------------------------------------------------------------------
+def test_measured_calibration_overwrites_hot_keys(ctx, rng):
+    autotune.clear_cache()
+    c2 = ctx.with_fusion(FusionConfig(granularity="auto"))
+    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    jax.eval_shape(lambda: matmul_allreduce(c2, x, w, mode="fused"))
+    hot = list(autotune.cache_info())
+    assert len(hot) == 1
+    rep = measured_calibration_pass(c2, iters=1, warmup=1, max_q=2)
+    (key,) = hot
+    assert key in rep
+    assert rep[key]["model_q"] == autotune.cache_info()[key] or \
+        rep[key]["measured_q"] == autotune.cache_info()[key]
+    assert autotune.cache_info()[key] in autotune.calibration_candidates(key, 2)
+    # the measured winner must itself pass parity
+    y = jax.jit(lambda: matmul_allreduce(c2, x, w, mode="fused"))()
+    ref = jax.jit(lambda: matmul_allreduce(c2, x, w, mode="bulk"))()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+    autotune.clear_cache()
+
+
+def test_calibration_skips_foreign_worlds(ctx):
+    autotune.clear_cache()
+    autotune.choose_chunks_per_rank(
+        "matmul_allreduce", shape=(64, 32, 64), dtype_bytes=4, n_dev=64,
+        flops=1e9, hbm_bytes=1e6, wire_bytes=1e6, divisor_of=64)
+    rep = measured_calibration_pass(ctx, iters=1)
+    assert rep == {}  # 64-rank key cannot run on the 8-device mesh
+    autotune.clear_cache()
+
+
+def test_supervisor_swaps_step_on_bucket_change(tmp_path):
+    from repro.runtime.fault_tolerance import (SupervisorConfig,
+                                               TrainSupervisor)
+
+    est = SkewEstimator({"ring": 8}, link_scales={"ring": LINKS},
+                        alpha=1.0, min_obs=1)
+    ran_with = []
+
+    def build(skew):
+        def step(state, batch):
+            ran_with.append(skew)
+            return state, {"loss": jnp.float32(0.0)}
+        return step
+
+    sched = SkewScheduler(build, est, axis="ring")
+    slow = [1.0] * 8
+    slow[5] = 1.5
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path / "ckpt"),
+                         checkpoint_every=100, async_save=False),
+        step_fn=None, skew_scheduler=sched,
+        per_rank_times=lambda dt: slow)
+    _, step = sup.run({"x": jnp.zeros(())}, iter([{}] * 4), 4)
+    assert step == 4
+    assert sched.bucket != 0
+    assert sched.rebuilds == 2  # bucket 0 at start + one change, no churn
+    # telemetry swapped the supervisor onto the re-jitted schedule
+    assert ran_with[0] == 0 and ran_with[-1] == sched.bucket
+
+
+def test_ring_offsets_skew_executes_what_model_says():
+    # the executed A2A destination order is exactly ring_offsets(...)
+    # (the deeper executed-order property lives in test_property.py)
+    for skew in range(6):
+        offs = ring_offsets(8, "comm_aware", skew)
+        assert sorted(offs) == list(range(8)) and offs[-1] == 0
