@@ -94,7 +94,7 @@ def run(report, smoke=False):
 
     clear_cache()
     out["autotuner_choice_q"] = tune_matmul_allreduce(
-        4096, 14336 // 16, 4096, dtype_bytes=2, n_dev=16, chunk_dim=4096)
+        4096, 14336 // 16, 4096, dtype_bytes=2, n_dev=16, chunk_dim=4096).q
     out["workload"] = {"model": {"flops": MODEL_FLOPS, "hbm": MODEL_HBM,
                                  "wire": MODEL_WIRE},
                        "measured": {"B": B, "S": S, "K": K, "N": N,

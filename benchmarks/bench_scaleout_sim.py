@@ -9,31 +9,48 @@ end-to-end reduction at 128 nodes.
 Per-kernel compute times follow the paper's measured structure: bottom
 MLP (independent, overlappable), embedding pooling (memory-bound),
 All-to-All (exposed in baseline), interaction + top MLP (dependent).
+
+Network + roofline constants come from the shared hierarchical
+:class:`~repro.core.perfmodel.MeshHardwareModel` — the embedding A2A is
+a *world*-ring crossing the inter-node DCN, so its wire time is read off
+the ``node`` axis while compute rooflines come from the intra-node
+device model, keeping this projection consistent with the per-axis
+constants the autotuner plans against.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-LINK_BW = 200e9 / 8          # paper Table II: 200 Gb/s
-LINK_LAT = 700e-9
-PEAK = 197e12
-HBM = 819e9
+from repro.core.perfmodel import HardwareModel, MeshHardwareModel, V5E
+
+# paper Table II network parameters on the inter-node axis; the device
+# roofline (peak flops / HBM) is the accelerator's own.
+HW = MeshHardwareModel.from_mapping(
+    {"node": dataclasses.replace(V5E, ici_bw=200e9 / 8, ici_lat=700e-9)},
+    default=V5E)
 
 
 def dlrm_pass(nodes: int, fused: bool, *, batch_per=2048, tables_per=256,
-              dim=92, pooling=70, mlp=(682, 682, 682), chunks=32):
+              dim=92, pooling=70, mlp=(682, 682, 682), chunks=32,
+              hw: MeshHardwareModel = HW):
     """Returns seconds for one training pass (fwd+bwd) on one node."""
     B = batch_per
+    dev = hw.axis("device")          # intra-node roofline (default class)
+    dcn = hw.axis("node")            # inter-node link class
     # compute times
-    t_embed = tables_per * B * pooling * dim * 4 / HBM        # gather-bound
-    t_bot = 2 * B * 13 * 512 / PEAK
+    t_embed = dev.compute_time(0.0, tables_per * B * pooling * dim * 4)
+    t_bot = 2 * B * 13 * 512 / dev.peak_flops
     n_vec = tables_per + 1
     d_int = n_vec * (n_vec - 1) // 2 + dim
-    t_top = 2 * B * sum(a * b for a, b in zip((d_int,) + mlp, mlp + (1,))) / PEAK
-    # All-to-All bytes (each node keeps 1/nodes of its pooled output)
+    t_top = (2 * B * sum(a * b for a, b in zip((d_int,) + mlp, mlp + (1,)))
+             / dev.peak_flops)
+    # All-to-All bytes (each node keeps 1/nodes of its pooled output):
+    # the exchange crosses the inter-node axis -> DCN bandwidth/latency
     wire = B * tables_per * dim * 4 * (nodes - 1) / nodes
     hops = max(1, int(np.sqrt(nodes)) // 2)                   # 2D torus avg
-    t_wire = wire / LINK_BW + hops * LINK_LAT
+    t_wire = wire / dcn.ici_bw + hops * dcn.ici_lat
 
     if not fused:
         fwd = t_bot + t_embed + t_wire + t_top

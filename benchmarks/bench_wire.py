@@ -1,0 +1,145 @@
+"""Compressed-wire sweep: wire dtype x granularity under a slow-DCN axis.
+
+The wire knob pays where wire time is exposed: this bench sweeps
+``(wire, chunks_per_rank)`` for the row-parallel GEMM+AllReduce workload
+under the hierarchical :class:`~repro.core.perfmodel.MeshHardwareModel`
+(a fast ICI axis and a slow DCN pod axis), *measures* the real XLA-fused
+op on the host mesh at every point (capturing the actual cast overhead),
+and records everything in machine-readable ``BENCH_wire.json``.
+
+The combined metric adds the slow-axis *modeled wire exposure* (the part
+of the fused time the alpha-beta model attributes to the wire, which the
+CPU host mesh cannot reproduce) to the *measured* host time (which the
+model cannot know) — so the acceptance invariant ``bf16 <= f32 on the
+slow axis`` is checked against both worlds at once, and the schema
+validation pins it on every write.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.perfmodel import (DCN, V5E, MeshHardwareModel, model_fused,
+                                  resolve_hw)
+from benchmarks.common import timeit
+
+JSON_PATH = "BENCH_wire.json"
+
+# model workload: v5e, row-parallel GEMM 16384 tokens x (32768/8 -> 16384),
+# f32 activations — wire-heavy on the DCN axis (the regime the knob
+# targets), and big enough that the modeled slow-axis exposure delta
+# dwarfs host-mesh measurement noise (the CPU backend software-emulates
+# bf16, so its cast overhead is an artifact the model workload must not
+# be sensitive to)
+ROWS, K_LOC, NOUT, NDEV, DTYPE_BYTES = 16384, 4096, 16384, 8, 4
+FLOPS = 2.0 * ROWS * K_LOC * NOUT
+HBM = float(K_LOC * NOUT * DTYPE_BYTES)
+WIRE_BYTES = float(ROWS * NOUT * DTYPE_BYTES) * 2.0   # RS carry + AG
+WIRES = ["f32", "bf16", "fp8"]
+WIRE_FACTOR = {"f32": 1.0, "bf16": 0.5, "fp8": 0.25}
+
+MESH_HW = MeshHardwareModel.for_mesh_axes(("pod", "data", "model"),
+                                          ici=V5E, dcn=DCN)
+
+SCHEMA_KEYS = {"modeled", "measured", "combined", "auto_choice",
+               "invariant_bf16_le_f32_slow_axis", "workload"}
+
+
+def _modeled(axis: str, wire: str, chunks: int) -> float:
+    hw = resolve_hw(MESH_HW, axis)
+    return model_fused(FLOPS, HBM, WIRE_BYTES * WIRE_FACTOR[wire], chunks,
+                       hw=hw)
+
+
+def _wire_exposure(axis: str, wire: str, chunks: int) -> float:
+    """The slice of the modeled fused time the wire is responsible for:
+    the same schedule with zero wire bytes subtracted out."""
+    return _modeled(axis, wire, chunks) - model_fused(FLOPS, HBM, 0.0,
+                                                      chunks,
+                                                      hw=resolve_hw(
+                                                          MESH_HW, axis))
+
+
+def _validate(out):
+    missing = SCHEMA_KEYS - set(out)
+    assert not missing, f"BENCH_wire.json schema rot: missing {missing}"
+    for section in ("modeled", "measured", "combined"):
+        assert out[section], f"empty {section} section"
+    # the acceptance invariant: on the slow (DCN) axis, shipping bf16
+    # must not model+measure slower than shipping f32
+    comb = out["combined"]
+    best = {w: min(comb[w].values()) for w in comb}
+    assert best["bf16"] <= best["f32"], (
+        f"bf16 wire regressed on the slow axis: {best}")
+    assert out["invariant_bf16_le_f32_slow_axis"]
+
+
+def run(report, smoke=False):
+    import jax
+
+    from repro.core.autotune import clear_cache, tune_matmul_allreduce
+    from repro.core.matmul_allreduce import matmul_allreduce
+    from repro.launch.mesh import make_host_mesh
+
+    out = {"modeled": {}, "measured": {}, "combined": {}}
+    chunk_ladder = [1, 2, 4, 8] if smoke else [1, 2, 4, 8, 16, 32]
+
+    # ---- modeled: both axes, every wire ---------------------------------
+    for axis, tag in (("model", "ici"), ("pod", "dcn")):
+        for w in WIRES:
+            for c in chunk_ladder:
+                t = _modeled(axis, w, c * NDEV)
+                out["modeled"][f"{tag}_{w}_q{c}"] = t
+            report(f"wire_model_{tag}_{w}",
+                   min(_modeled(axis, w, c * NDEV)
+                       for c in chunk_ladder) * 1e6,
+                   f"axis={tag}")
+
+    # ---- measured: host mesh, real cast overhead ------------------------
+    ctx = make_host_mesh()
+    n = ctx.tp
+    rng = np.random.default_rng(0)
+    B, S, K, N = (4, 16, 32, 32) if smoke else (4, 64, 256, 256)
+    tkw = dict(iters=2, warmup=1) if smoke else {}
+    x = rng.standard_normal((B, S, K)).astype(np.float32)
+    wmat = rng.standard_normal((K, N)).astype(np.float32)
+    rows_local = B * S // ctx.dp
+    qs = [q for q in ([1, 2] if smoke else [1, 2, 4])
+          if rows_local % (n * q) == 0] or [1]
+    for w in WIRES:
+        out["measured"][w] = {}
+        out["combined"][w] = {}
+        for q in qs:
+            fn = jax.jit(lambda x, wm, q=q, w=w: matmul_allreduce(
+                ctx, x, wm, mode="fused", chunks_per_rank=q, wire=w))
+            t = timeit(fn, x, wmat, **tkw)
+            out["measured"][w][f"q{q}"] = t
+            # combined = measured host time + the slow axis's modeled wire
+            # exposure (what the CPU mesh cannot show)
+            out["combined"][w][f"q{q}"] = t + _wire_exposure(
+                "pod", w, q * NDEV)
+            report(f"wire_measured_{w}_q{q}", t * 1e6,
+                   f"combined_us={out['combined'][w][f'q{q}'] * 1e6:.1f}")
+
+    # ---- autotuned joint choice on the slow axis ------------------------
+    clear_cache()
+    dec = tune_matmul_allreduce(ROWS, K_LOC, NOUT, dtype_bytes=DTYPE_BYTES,
+                                n_dev=NDEV, chunk_dim=ROWS, hw=MESH_HW,
+                                axis="pod", wire="auto")
+    out["auto_choice"] = {"q": dec.q, "wire": dec.wire}
+    report("wire_auto_choice_slow_axis", 0.0, f"q={dec.q};wire={dec.wire}")
+    clear_cache()
+
+    best = {w: min(out["combined"][w].values()) for w in WIRES}
+    out["invariant_bf16_le_f32_slow_axis"] = best["bf16"] <= best["f32"]
+    out["workload"] = {"rows": ROWS, "k_local": K_LOC, "n_out": NOUT,
+                       "n_dev": NDEV, "dtype_bytes": DTYPE_BYTES,
+                       "measured": {"B": B, "S": S, "K": K, "N": N,
+                                    "mesh": list(ctx.mesh.shape.values())},
+                       "hw": {"ici_bw": V5E.ici_bw, "dcn_bw": DCN.ici_bw}}
+    _validate(out)
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    report("wire_json", 0.0, JSON_PATH)
+    return out["auto_choice"]

@@ -23,6 +23,7 @@ BENCHES = [
     ("bench_scheduling", "Fig. 14 comm-aware scheduling skew"),
     ("bench_skew", "Fig. 14 measured-skew feedback loop"),
     ("bench_granularity", "Fig. 13 overlap granularity"),
+    ("bench_wire", "compressed-wire rings (bf16/fp8 payloads)"),
     ("bench_scaleout_sim", "Fig. 15 128-node DLRM scale-out sim"),
     ("bench_kernels", "device-initiated kernel comparison"),
 ]

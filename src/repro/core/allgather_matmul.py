@@ -19,10 +19,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.autotune import (resolve_chunks_per_rank,
-                                 tune_allgather_matmul,
+from repro.core.autotune import (resolve_overlap, tune_allgather_matmul,
                                  tune_matmul_allreduce)
-from repro.core.collectives import ring_permute, ring_reduce_scatter_compute
+from repro.core.collectives import (ring_permute,
+                                    ring_reduce_scatter_compute, wire_cast,
+                                    wire_uncast)
 from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -30,7 +31,7 @@ from repro.compat import shard_map
 
 def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
                      chunks_per_rank: int | str | None = None,
-                     skew: int | None = None):
+                     skew: int | None = None, wire: str | None = None):
     """y[b, s, :] = (AG_tp(x) @ w_colshard)[b, s, :].
 
     Fused: the locally-held sequence chunk is multiplied first (it is
@@ -41,7 +42,10 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
     long sequence chunks (paper Fig. 13).  ``skew`` rotates the sub-ring
     service order by the measured straggler bucket (Fig. 14; ``None``
     uses ``ctx.fusion.skew``); results land in disjoint output slices, so
-    the rotation is bit-exact.
+    the rotation is bit-exact.  ``wire`` compresses the forwarded
+    sequence sub-chunks once at their source (one rounding per value no
+    matter how many hops they ride; the local chunk stays exact); ``None``
+    uses ``ctx.fusion.wire``.
     """
     mode = mode or ctx.fusion.resolve("ag_matmul")
     skew = ctx.fusion.skew if skew is None else int(skew)
@@ -50,12 +54,13 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
     nout = w.shape[1]
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
     # the ring payload is the local sequence chunk: only q | s_loc matters
-    q = (1 if mode == "bulk" else resolve_chunks_per_rank(
-        chunks_per_rank, ctx.fusion.granularity,
-        lambda: tune_allgather_matmul(b, s // n, k, nout // n,
-                                      dtype_bytes=x.dtype.itemsize, n_dev=n,
-                                      skew=skew),
+    dec = (None if mode == "bulk" else resolve_overlap(
+        chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+        lambda fq, wr: tune_allgather_matmul(
+            b, s // n, k, nout // n, dtype_bytes=x.dtype.itemsize, n_dev=n,
+            hw=ctx.hw, axis=axis, skew=skew, wire=wr, fixed_q=fq),
         dim=s // n, ring=1))
+    q, wire_dt = (1, "f32") if dec is None else (dec.q, dec.wire)
     order = sub_chunk_service_order(q, skew)
 
     def local_fn(xl, wl):
@@ -71,12 +76,16 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
         for j in range(q):
             out = lax.dynamic_update_slice_in_dim(
                 out, bufs[j] @ wl, d * s_loc + j * sub, axis=1)
+        # the ring payload rounds once at its source; arriving sub-chunks
+        # are consumed from the wire representation at every hop
+        bufs = [wire_cast(bj, wire_dt) for bj in bufs]
         for i in range(1, n):
             src = (d - i) % n
             for j in order:
                 bufs[j] = ring_permute(bufs[j], axis, n)
                 out = lax.dynamic_update_slice_in_dim(
-                    out, bufs[j] @ wl, src * s_loc + j * sub, axis=1)
+                    out, wire_uncast(bufs[j], xl.dtype) @ wl,
+                    src * s_loc + j * sub, axis=1)
         return out
 
     return shard_map(
@@ -91,12 +100,14 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
 def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
                          schedule: str | None = None,
                          chunks_per_rank: int | str | None = None,
-                         skew: int | None = None):
+                         skew: int | None = None, wire: str | None = None):
     """y = ReduceScatter_tp(x @ w_rowshard) scattered over the sequence dim.
 
     ``chunks_per_rank`` sub-chunks each ring step's payload (Fig. 13);
     ``skew`` rotates the sub-chunk service order by the measured straggler
-    bucket (Fig. 14; ``None`` uses ``ctx.fusion.skew``)."""
+    bucket (Fig. 14; ``None`` uses ``ctx.fusion.skew``); ``wire``
+    compresses the ring carry per hop with f32 local accumulation
+    (``None`` uses ``ctx.fusion.wire``)."""
     mode = mode or ctx.fusion.resolve("matmul_rs")
     schedule = schedule or ctx.fusion.schedule
     skew = ctx.fusion.skew if skew is None else int(skew)
@@ -104,13 +115,14 @@ def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
     b, s, k = x.shape
     nout = w.shape[1]
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
-    q = (1 if mode == "bulk" else resolve_chunks_per_rank(
-        chunks_per_rank, ctx.fusion.granularity,
-        lambda: tune_matmul_allreduce(b * s, k // n, nout,
-                                      dtype_bytes=x.dtype.itemsize,
-                                      n_dev=n, chunk_dim=s,
-                                      allgather_phase=False, skew=skew),
+    dec = (None if mode == "bulk" else resolve_overlap(
+        chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+        lambda fq, wr: tune_matmul_allreduce(
+            b * s, k // n, nout, dtype_bytes=x.dtype.itemsize, n_dev=n,
+            chunk_dim=s, allgather_phase=False, hw=ctx.hw, axis=axis,
+            skew=skew, wire=wr, fixed_q=fq),
         dim=s, ring=n))
+    q, wire_dt = (1, "f32") if dec is None else (dec.q, dec.wire)
 
     def local_fn(xl, wl):
         if mode == "bulk":
@@ -125,7 +137,7 @@ def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
 
         return ring_reduce_scatter_compute(partial, axis, schedule=schedule,
                                            chunks_per_rank=q, sub_axis=1,
-                                           skew=skew)
+                                           skew=skew, wire=wire_dt)
 
     return shard_map(
         local_fn,

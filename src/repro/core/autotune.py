@@ -20,21 +20,45 @@ import json
 import time
 from typing import Callable, Mapping, Sequence
 
-from repro.core.collectives import feasible_chunks_per_rank
-from repro.core.perfmodel import V5E, HardwareModel, model_fused
+from typing import NamedTuple
+
+from repro.core.collectives import (WIRE_SETTINGS, feasible_chunks_per_rank,
+                                    wire_itemsize)
+from repro.core.perfmodel import (V5E, HardwareModel, MeshHardwareModel,
+                                  model_fused, resolve_hw)
 
 MAX_CHUNKS_PER_RANK = 16
+
+# A narrower wire dtype must beat the current pick's modeled time by this
+# relative margin to be adopted: compression only pays where wire time is
+# actually exposed, and exactness wins ties (a fast axis with the wire
+# fully hidden keeps "f32").
+WIRE_MARGIN = 0.02
+
+
+class Decision(NamedTuple):
+    """One memoized overlap decision: the sub-chunk factor and the wire
+    dtype the payload travels at (``"f32"`` = uncompressed)."""
+
+    q: int
+    wire: str = "f32"
 
 
 @dataclasses.dataclass(frozen=True)
 class TuneKey:
     """Cache key: op family + every fact that moves the decision — shape,
-    dtype, world size, the divisibility constraint, the hardware model,
-    and the measured skew bucket (two call sites that differ in any of
-    these must not share a cached q).  The alpha-beta model is
-    skew-oblivious, but a *measured* decision is not: a straggler-rotated
-    schedule overlaps differently, so calibrated entries must be keyed by
-    the bucket they were measured under."""
+    dtype, world size, the divisibility constraint, the (per-axis)
+    hardware model, the measured skew bucket, and the wire *request*
+    (two call sites that differ in any of these must not share a cached
+    decision).  The alpha-beta model is skew-oblivious, but a *measured*
+    decision is not: a straggler-rotated schedule overlaps differently,
+    so calibrated entries must be keyed by the bucket they were measured
+    under.  ``wire`` is the caller's request ("f32"/"bf16"/"fp8"/"auto");
+    the resolved dtype lives in the cached :class:`Decision`, so a pinned
+    and an "auto" call site never collide.  ``fixed_q`` is the pinned
+    granularity under a wire-only sweep (``--granularity N --wire auto``)
+    — part of the key for the same reason: a decision made under one pin
+    must not answer for another pin or for the free sweep."""
 
     op: str
     shape: tuple
@@ -44,12 +68,14 @@ class TuneKey:
     divisor_ring: int
     hw: "HardwareModel"
     skew: int = 0
+    wire: str = "f32"
+    fixed_q: int | None = None
 
 
-_GRANULARITY_CACHE: dict[TuneKey, int] = {}
+_GRANULARITY_CACHE: dict[TuneKey, Decision] = {}
 
 
-def cache_info() -> Mapping[TuneKey, int]:
+def cache_info() -> Mapping[TuneKey, Decision]:
     """Read-only view of the memoized decisions (tests/diagnostics)."""
     return dict(_GRANULARITY_CACHE)
 
@@ -58,19 +84,43 @@ def clear_cache() -> None:
     _GRANULARITY_CACHE.clear()
 
 
-def set_decision(key: TuneKey, q: int) -> None:
+def set_decision(key: TuneKey, dec: "Decision | int") -> None:
     """Overwrite one memoized decision — the measured-calibration pass
     replaces model choices with measured winners through this (and only
     this) door, so the overwrite is greppable and testable."""
-    _GRANULARITY_CACHE[key] = int(q)
+    _GRANULARITY_CACHE[key] = _as_decision(dec)
+
+
+def _as_decision(dec) -> Decision:
+    if isinstance(dec, Decision):
+        return dec
+    if isinstance(dec, (tuple, list)):
+        return Decision(int(dec[0]), str(dec[1]))
+    return Decision(int(dec), "f32")
+
+
+def wire_candidates(request: str, hw: HardwareModel) -> list[str]:
+    """Wire dtypes the model may choose from, widest first.  A concrete
+    request pins the choice (an explicit ``fp8`` is honored even off
+    fp8-capable links — the caller's call); ``"auto"`` considers fp8 only
+    where the link model declares support."""
+    if request == "auto":
+        return ["f32", "bf16"] + (["fp8"] if hw.fp8_wire else [])
+    if request not in WIRE_SETTINGS:
+        raise ValueError(f"unknown wire setting {request!r}; expected one "
+                         f"of {WIRE_SETTINGS}")
+    return [request]
 
 
 def calibration_candidates(key: TuneKey,
-                           max_q: int = MAX_CHUNKS_PER_RANK) -> list[int]:
-    """Feasible ``chunks_per_rank`` candidates for one cached key — the
-    same divisor ladder the model sweep scored, for the measured sweep to
-    re-score on real hardware."""
-    return _divisor_candidates(key.divisor_of, key.divisor_ring, max_q)
+                           max_q: int = MAX_CHUNKS_PER_RANK) -> list[Decision]:
+    """Feasible ``(chunks_per_rank, wire)`` candidates for one cached key
+    — the same (divisor ladder x wire dtypes) the model sweep scored, for
+    the measured sweep to re-score on real hardware."""
+    qs = ([int(key.fixed_q)] if key.fixed_q is not None
+          else _divisor_candidates(key.divisor_of, key.divisor_ring, max_q))
+    return [Decision(q, w) for w in wire_candidates(key.wire, key.hw)
+            for q in qs]
 
 
 # ---------------------------------------------------------------------------
@@ -85,9 +135,16 @@ def _key_to_json(key: TuneKey) -> dict:
 
 def _key_from_json(d: Mapping) -> TuneKey:
     d = dict(d)
-    d["hw"] = HardwareModel(**d["hw"])
+    # tolerate both directions of hw-schema drift: a legacy flat dict may
+    # lack fields added since (defaults fill in) and a foreign cache may
+    # carry fields this build does not know (dropped)
+    known = {f.name for f in dataclasses.fields(HardwareModel)}
+    d["hw"] = HardwareModel(**{k: v for k, v in d["hw"].items()
+                               if k in known})
     d["shape"] = tuple(d["shape"])
     d.setdefault("skew", 0)  # caches written before the skew field existed
+    d.setdefault("wire", "f32")  # ... and before the wire field
+    d.setdefault("fixed_q", None)  # ... and before the pinned-q field
     return TuneKey(**d)
 
 
@@ -100,8 +157,9 @@ def save_cache(path: str) -> int:
     truncated cache behind."""
     import os
 
-    entries = [{"key": _key_to_json(k), "chunks_per_rank": q}
-               for k, q in _GRANULARITY_CACHE.items()]
+    entries = [{"key": _key_to_json(k), "chunks_per_rank": dec.q,
+                "wire": dec.wire}
+               for k, dec in _GRANULARITY_CACHE.items()]
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump({"version": 1, "entries": entries}, f, indent=2,
@@ -123,7 +181,10 @@ def load_cache(path: str, *, merge: bool = True) -> int:
     for e in blob["entries"]:
         key = _key_from_json(e["key"])
         if key not in _GRANULARITY_CACHE:
-            _GRANULARITY_CACHE[key] = int(e["chunks_per_rank"])
+            # entries serialized before the wire field default to the
+            # uncompressed wire (the pre-wire behavior)
+            _GRANULARITY_CACHE[key] = Decision(int(e["chunks_per_rank"]),
+                                               str(e.get("wire", "f32")))
             n += 1
     return n
 
@@ -144,7 +205,7 @@ def _divisor_candidates(divisor_of: int | None, ring: int,
     return qs or [1]
 
 
-def choose_chunks_per_rank(
+def choose_overlap(
     op: str,
     *,
     shape: Sequence[int],
@@ -156,41 +217,73 @@ def choose_chunks_per_rank(
     divisor_of: int | None = None,
     divisor_ring: int | None = None,
     max_q: int = MAX_CHUNKS_PER_RANK,
-    hw: HardwareModel = V5E,
+    hw: HardwareModel | MeshHardwareModel = V5E,
+    axis=None,
     skew: int = 0,
-) -> int:
-    """Pick ``chunks_per_rank`` minimizing the modeled fused time.
+    wire: str = "f32",
+    fixed_q: int | None = None,
+) -> Decision:
+    """Pick ``(chunks_per_rank, wire_dtype)`` minimizing the modeled fused
+    time, jointly per (op, mesh axis).
 
-    ``divisor_of`` constrains candidates to factors that evenly split the
-    chunked dimension (``None`` = unconstrained); ``divisor_ring`` is the
-    ring factor that dimension must additionally absorb (defaults to
+    ``divisor_of`` constrains q candidates to factors that evenly split
+    the chunked dimension (``None`` = unconstrained); ``divisor_ring`` is
+    the ring factor that dimension must additionally absorb (defaults to
     ``n_dev`` — the reduce-scatter convention; pass 1 for per-destination
-    payloads).  ``skew`` is the measured schedule rotation the caller is
-    running under — it does not move the alpha-beta model, but keys the
-    decision so a later measured sweep can record per-bucket winners.
-    The decision is memoized under the full constraint key.
+    payloads).  ``hw`` may be a flat :class:`HardwareModel` or a
+    hierarchical :class:`MeshHardwareModel` resolved for ``axis`` — the
+    per-axis link constants are what make a slow DCN axis pick a narrow
+    wire while the fast ICI axis keeps f32.  ``wire`` is the request:
+    a concrete dtype pins the choice, ``"auto"`` sweeps the candidates
+    the link model supports, widest first, adopting a narrower dtype only
+    when it improves modeled time by :data:`WIRE_MARGIN` (compression
+    must pay; exactness wins ties).  ``fixed_q`` pins the granularity
+    (a pinned ``--granularity`` with ``--wire auto``).  ``skew`` is the
+    measured schedule rotation the caller is running under — it does not
+    move the alpha-beta model, but keys the decision so a later measured
+    sweep can record per-bucket winners.  The decision is memoized under
+    the full constraint key.
     """
+    hw = resolve_hw(hw, axis)
     ring = n_dev if divisor_ring is None else divisor_ring
     key = TuneKey(op, tuple(int(s) for s in shape), int(dtype_bytes),
                   int(n_dev), None if divisor_of is None else int(divisor_of),
-                  int(ring), hw, int(skew))
+                  int(ring), hw, int(skew), str(wire),
+                  None if fixed_q is None else int(fixed_q))
     hit = _GRANULARITY_CACHE.get(key)
     if hit is not None:
         return hit
-    best_q, best_t = 1, float("inf")
-    for q in _divisor_candidates(divisor_of, ring, max_q):
-        t = model_fused(flops, hbm_bytes, wire_bytes, n_dev * q, hw=hw)
-        if t < best_t:
-            best_q, best_t = q, t
-    _GRANULARITY_CACHE[key] = best_q
-    return best_q
+    qs = ([int(fixed_q)] if fixed_q is not None
+          else _divisor_candidates(divisor_of, ring, max_q))
+    best: Decision | None = None
+    best_t = float("inf")
+    for w in wire_candidates(wire, hw):
+        factor = wire_itemsize(w, dtype_bytes) / float(dtype_bytes)
+        w_best_q, w_best_t = qs[0], float("inf")
+        for q in qs:
+            t = model_fused(flops, hbm_bytes, wire_bytes * factor,
+                            n_dev * q, hw=hw)
+            if t < w_best_t:
+                w_best_q, w_best_t = q, t
+        if best is None or w_best_t < best_t * (1.0 - WIRE_MARGIN):
+            best, best_t = Decision(w_best_q, w), w_best_t
+    _GRANULARITY_CACHE[key] = best
+    return best
+
+
+def choose_chunks_per_rank(op: str, **kwargs) -> int:
+    """Granularity-only convenience over :func:`choose_overlap` (the
+    pre-wire entry point; decisions share the same cache)."""
+    return choose_overlap(op, **kwargs).q
 
 
 def tune_matmul_allreduce(rows: int, k_local: int, n_out: int, *,
                           dtype_bytes: int, n_dev: int, chunk_dim: int,
                           divisor_ring: int | None = None,
                           allgather_phase: bool = True,
-                          hw: HardwareModel = V5E, skew: int = 0) -> int:
+                          hw: HardwareModel | MeshHardwareModel = V5E,
+                          axis=None, skew: int = 0, wire: str = "f32",
+                          fixed_q: int | None = None) -> Decision:
     """Granularity for the row-parallel GEMM/GEMV + AllReduce family.
 
     ``chunk_dim`` is the dimension being ring-chunked (rows or output
@@ -203,19 +296,21 @@ def tune_matmul_allreduce(rows: int, k_local: int, n_out: int, *,
     flops = 2.0 * rows * k_local * n_out
     hbm = float(k_local * n_out * dtype_bytes)
     # RS carry, plus the final AG for the full AllReduce form
-    wire = float(rows * n_out * dtype_bytes) * (2.0 if allgather_phase
-                                                else 1.0)
-    return choose_chunks_per_rank(
+    wire_b = float(rows * n_out * dtype_bytes) * (2.0 if allgather_phase
+                                                  else 1.0)
+    return choose_overlap(
         "matmul_allreduce" if allgather_phase else "matmul_reducescatter",
         shape=(rows, k_local, n_out),
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops, hbm_bytes=hbm,
-        wire_bytes=wire, divisor_of=chunk_dim, divisor_ring=divisor_ring,
-        hw=hw, skew=skew)
+        wire_bytes=wire_b, divisor_of=chunk_dim, divisor_ring=divisor_ring,
+        hw=hw, axis=axis, skew=skew, wire=wire, fixed_q=fixed_q)
 
 
 def tune_allgather_matmul(b: int, s_loc: int, k: int, n_out_local: int, *,
                           dtype_bytes: int, n_dev: int,
-                          hw: HardwareModel = V5E, skew: int = 0) -> int:
+                          hw: HardwareModel | MeshHardwareModel = V5E,
+                          axis=None, skew: int = 0, wire: str = "f32",
+                          fixed_q: int | None = None) -> Decision:
     """Granularity for the AllGather x matmul family.
 
     Unlike the reduce-scatter ring (which carries *output* chunks), the
@@ -225,34 +320,39 @@ def tune_allgather_matmul(b: int, s_loc: int, k: int, n_out_local: int, *,
     """
     flops = 2.0 * b * s_loc * n_dev * k * n_out_local
     hbm = float(k * n_out_local * dtype_bytes)
-    wire = float(b * s_loc * k * dtype_bytes) * (n_dev - 1)
-    return choose_chunks_per_rank(
+    wire_b = float(b * s_loc * k * dtype_bytes) * (n_dev - 1)
+    return choose_overlap(
         "allgather_matmul", shape=(b, s_loc, k, n_out_local),
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops, hbm_bytes=hbm,
-        wire_bytes=wire, divisor_of=s_loc, divisor_ring=1, hw=hw, skew=skew)
+        wire_bytes=wire_b, divisor_of=s_loc, divisor_ring=1, hw=hw,
+        axis=axis, skew=skew, wire=wire, fixed_q=fixed_q)
 
 
 def tune_all_to_all(chunk_elems: int, flops_per_dest: float, *,
                     dtype_bytes: int, n_dev: int, sub_dim: int,
-                    hw: HardwareModel = V5E, skew: int = 0) -> int:
+                    hw: HardwareModel | MeshHardwareModel = V5E,
+                    axis=None, skew: int = 0, wire: str = "f32",
+                    fixed_q: int | None = None) -> Decision:
     """Granularity for the direct-send compute + All-to-All family.
 
     The payload is per-destination already, so only ``q | sub_dim``
     constrains the sub split (``divisor_ring=1``)."""
-    wire = float(chunk_elems * dtype_bytes) * (n_dev - 1)
-    return choose_chunks_per_rank(
+    wire_b = float(chunk_elems * dtype_bytes) * (n_dev - 1)
+    return choose_overlap(
         "all_to_all", shape=(chunk_elems, int(flops_per_dest)),
         dtype_bytes=dtype_bytes, n_dev=n_dev,
         flops=flops_per_dest * n_dev,
         hbm_bytes=float(chunk_elems * dtype_bytes * n_dev),
-        wire_bytes=wire, divisor_of=sub_dim, divisor_ring=1, hw=hw,
-        skew=skew)
+        wire_bytes=wire_b, divisor_of=sub_dim, divisor_ring=1, hw=hw,
+        axis=axis, skew=skew, wire=wire, fixed_q=fixed_q)
 
 
 def tune_ring_attention(b: int, s_loc: int, n_heads: int, n_kv_heads: int,
                         head_dim: int, *, dtype_bytes: int, n_dev: int,
                         hops: int | None = None,
-                        hw: HardwareModel = V5E, skew: int = 0) -> int:
+                        hw: HardwareModel | MeshHardwareModel = V5E,
+                        axis=None, skew: int = 0, wire: str = "f32",
+                        fixed_q: int | None = None) -> Decision:
     """Granularity for the ring-attention KV ring (fused AG x attention).
 
     The ring forwards the local ``[b, s_loc, Hkv, hd]`` K and V chunks;
@@ -269,18 +369,21 @@ def tune_ring_attention(b: int, s_loc: int, n_heads: int, n_kv_heads: int,
     kv_chunk = float(b * s_loc * n_kv_heads * head_dim * dtype_bytes)
     # hops moves flops AND wire (sliding-window layers bound the ring), so
     # it must be part of the cache key — same shapes, different ratios
-    return choose_chunks_per_rank(
+    return choose_overlap(
         "ring_attention",
         shape=(b, s_loc, n_heads, n_kv_heads, head_dim, hops),
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops,
         hbm_bytes=2.0 * kv_chunk * (hops + 1),
         wire_bytes=2.0 * kv_chunk * hops,
-        divisor_of=s_loc, divisor_ring=1, hw=hw, skew=skew)
+        divisor_of=s_loc, divisor_ring=1, hw=hw, axis=axis, skew=skew,
+        wire=wire, fixed_q=fixed_q)
 
 
 def tune_ce_ring(b: int, s_loc: int, d_model: int, v_loc: int, *,
                  dtype_bytes: int, n_dev: int,
-                 hw: HardwareModel = V5E, skew: int = 0) -> int:
+                 hw: HardwareModel | MeshHardwareModel = V5E,
+                 axis=None, skew: int = 0, wire: str = "f32",
+                 fixed_q: int | None = None) -> Decision:
     """Granularity for the vocab-sharded cross-entropy ring.
 
     The forward stats ring forwards the local ``[b, s_loc, D]`` activation
@@ -292,12 +395,13 @@ def tune_ce_ring(b: int, s_loc: int, d_model: int, v_loc: int, *,
     """
     flops = 2.0 * b * s_loc * n_dev * d_model * v_loc
     x_chunk = float(b * s_loc * d_model * dtype_bytes)
-    return choose_chunks_per_rank(
+    return choose_overlap(
         "ce_ring", shape=(b, s_loc, d_model, v_loc),
         dtype_bytes=dtype_bytes, n_dev=n_dev, flops=flops,
         hbm_bytes=float(v_loc * d_model * dtype_bytes),
         wire_bytes=x_chunk * (n_dev - 1),
-        divisor_of=s_loc, divisor_ring=1, hw=hw, skew=skew)
+        divisor_of=s_loc, divisor_ring=1, hw=hw, axis=axis, skew=skew,
+        wire=wire, fixed_q=fixed_q)
 
 
 # ---------------------------------------------------------------------------
@@ -379,11 +483,11 @@ def feasible_tile(dim: int, requested: int) -> int:
 # ---------------------------------------------------------------------------
 # Optional measured refinement
 # ---------------------------------------------------------------------------
-def measured_best(build_fn: Callable[[int], Callable[[], object]],
-                  candidates: Sequence[int], *, iters: int = 5,
-                  warmup: int = 2,
-                  fallback: int | None = None) -> tuple[int, dict[int, float]]:
-    """Time ``build_fn(q)()`` for each candidate q; return (best, times).
+def measured_best(build_fn: Callable, candidates: Sequence, *,
+                  iters: int = 5, warmup: int = 2,
+                  fallback=None) -> tuple:
+    """Time ``build_fn(cand)()`` for each candidate (an int q or a
+    :class:`Decision`); return (best, times).
 
     ``build_fn`` returns a zero-arg jitted closure for one granularity;
     blocking is the caller's responsibility inside the closure (return a
@@ -398,7 +502,7 @@ def measured_best(build_fn: Callable[[int], Callable[[], object]],
     """
     import jax
 
-    times: dict[int, float] = {}
+    times: dict = {}
     err: Exception | None = None
     for q in candidates:
         try:
@@ -436,14 +540,24 @@ def parse_granularity(value: str):
 
 
 def add_granularity_cli_args(ap) -> None:
-    """Install the shared ``--granularity`` / ``--tune-cache`` flags on an
-    argparse parser (one definition for every launcher)."""
+    """Install the shared ``--granularity`` / ``--wire`` / ``--tune-cache``
+    flags on an argparse parser (one definition for every launcher)."""
     ap.add_argument("--granularity", default=1, type=parse_granularity,
                     help="chunks_per_rank sub-chunk factor for every fused "
                          "ring (matmul/MoE/embedding collectives, the "
                          "KV-ring attention and the CE-loss ring): an int "
                          ">= 1, or 'auto' for the shape-keyed alpha-beta "
                          "autotuner (paper Fig. 13)")
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "bf16", "fp8", "auto"],
+                    help="wire dtype of every ring/A2A payload: f32 keeps "
+                         "the compute dtype on the wire (exact), bf16/fp8 "
+                         "compress the payload on the send side while all "
+                         "local accumulation stays f32 (fp8 ships a "
+                         "per-chunk max-abs scale alongside), and 'auto' "
+                         "lets the per-mesh-axis hardware model choose — "
+                         "narrow wire on a slow DCN axis, exact f32 where "
+                         "the wire hides behind compute")
     ap.add_argument("--tune-cache", default=None,
                     help="path to a persisted autotune cache: loaded (if "
                          "present) at startup, saved on exit — 'auto' "
@@ -491,3 +605,34 @@ def resolve_chunks_per_rank(override, config_granularity,
     gran = config_granularity if override is None else override
     return feasible_chunks_per_rank(dim, ring,
                                     resolve_granularity(gran, pick))
+
+
+def resolve_overlap(override_q, config_q, override_wire, config_wire,
+                    pick: Callable, *, dim: int, ring: int) -> Decision:
+    """Joint ``(chunks_per_rank, wire)`` resolution shared by every
+    fused-op call site.
+
+    Explicit per-call overrides beat the ``FusionConfig`` settings; when
+    either knob is ``"auto"`` the shape-aware ``pick(fixed_q, wire_req)``
+    runs the model sweep (``fixed_q`` pins a concrete granularity while
+    the wire is still auto-chosen, and vice versa).  The granularity is
+    clamped so ``dim`` splits evenly into ``ring * q`` fine chunks.
+    """
+    gran = config_q if override_q is None else override_q
+    wire = config_wire if override_wire is None else override_wire
+    if wire not in WIRE_SETTINGS:
+        raise ValueError(f"wire must be one of {WIRE_SETTINGS}, "
+                         f"got {wire!r}")
+    if gran == "auto" or wire == "auto":
+        fixed_q = None if gran == "auto" else int(gran)
+        if fixed_q is not None and fixed_q < 1:
+            raise ValueError(f"granularity must be >= 1 or 'auto', "
+                             f"got {gran!r}")
+        dec = _as_decision(pick(fixed_q, wire))
+    else:
+        q = int(gran)
+        if q < 1:
+            raise ValueError(f"granularity must be >= 1 or 'auto', "
+                             f"got {gran!r}")
+        dec = Decision(q, wire)
+    return Decision(feasible_chunks_per_rank(dim, ring, dec.q), dec.wire)

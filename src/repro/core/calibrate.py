@@ -53,9 +53,10 @@ def _build_matmul_allreduce(ctx: ParallelContext, key: TuneKey):
     x = rng.standard_normal((rows_local * ctx.dp, k_local * ctx.tp)).astype(dt)
     w = rng.standard_normal((k_local * ctx.tp, n_out)).astype(dt)
 
-    def build(q: int):
+    def build(dec):
         fn = jax.jit(lambda: matmul_allreduce(
-            ctx, x, w, mode="fused", chunks_per_rank=q, skew=key.skew))
+            ctx, x, w, mode="fused", chunks_per_rank=dec.q, wire=dec.wire,
+            skew=key.skew))
         return fn
 
     return build
@@ -74,9 +75,10 @@ def _build_matmul_reducescatter(ctx: ParallelContext, key: TuneKey):
     x = rng.standard_normal((b, s, k_local * ctx.tp)).astype(dt)
     w = rng.standard_normal((k_local * ctx.tp, n_out)).astype(dt)
 
-    def build(q: int):
+    def build(dec):
         return jax.jit(lambda: matmul_reducescatter(
-            ctx, x, w, mode="fused", chunks_per_rank=q, skew=key.skew))
+            ctx, x, w, mode="fused", chunks_per_rank=dec.q, wire=dec.wire,
+            skew=key.skew))
 
     return build
 
@@ -92,9 +94,9 @@ def _build_allgather_matmul(ctx: ParallelContext, key: TuneKey):
     x = rng.standard_normal((b, s_loc * ctx.tp, k)).astype(dt)
     w = rng.standard_normal((k, n_out_local * ctx.tp)).astype(dt)
 
-    def build(q: int):
+    def build(dec):
         return jax.jit(lambda: allgather_matmul(
-            ctx, x, w, mode="fused", chunks_per_rank=q))
+            ctx, x, w, mode="fused", chunks_per_rank=dec.q, wire=dec.wire))
 
     return build
 
@@ -139,7 +141,9 @@ def _build_all_to_all(ctx: ParallelContext, key: TuneKey):
     w_proxy = (rng.standard_normal((k_eq, rows)).astype(dt)
                if k_eq > 0 else None)
 
-    def build(q: int):
+    def build(dec):
+        q = dec.q
+
         def local_fn(xl, wl):
             # xl: [n, sub_dim, k_eq|rows] — one payload per destination
             sub = sub_dim // q
@@ -156,7 +160,8 @@ def _build_all_to_all(ctx: ParallelContext, key: TuneKey):
 
             return direct_all_to_all_compute(
                 produce, jax.ShapeDtypeStruct((sub_dim, rows), xl.dtype),
-                axes, chunks_per_rank=q, sub_axis=0, skew=key.skew)
+                axes, chunks_per_rank=q, sub_axis=0, skew=key.skew,
+                wire=dec.wire)
 
         return jax.jit(lambda: shard_map(
             lambda xl: local_fn(xl, None if w_proxy is None
@@ -183,11 +188,11 @@ def _build_ring_attention(ctx: ParallelContext, key: TuneKey):
     k_ = rng.standard_normal((B, S, hkv, hd)).astype(dt)
     v_ = rng.standard_normal((B, S, hkv, hd)).astype(dt)
 
-    def build(q: int):
+    def build(dec):
         return jax.jit(lambda: context_attention(
             ctx, q_, k_, v_, causal=True, window=window, mode="fused",
             q_block=min(64, s_loc), kv_block=min(64, s_loc),
-            chunks_per_rank=q, skew=key.skew))
+            chunks_per_rank=dec.q, wire=dec.wire, skew=key.skew))
 
     return build
 
@@ -208,9 +213,10 @@ def _build_ce_ring(ctx: ParallelContext, key: TuneKey):
     e = rng.standard_normal((V, d_model)).astype(dt)
     y = rng.integers(0, V, (B, S)).astype(np.int32)
 
-    def build(q: int):
+    def build(dec):
         return jax.jit(lambda: sharded_cross_entropy(
-            ctx, x, e, y, chunks_per_rank=q, skew=key.skew))
+            ctx, x, e, y, chunks_per_rank=dec.q, wire=dec.wire,
+            skew=key.skew))
 
     return build
 
@@ -279,11 +285,17 @@ def measured_calibration_pass(
     """Re-score every hot TuneKey's candidate ladder by measurement and
     overwrite the cached decision with the winner.
 
+    Candidates are joint ``(chunks_per_rank, wire)`` :class:`~repro.core.
+    autotune.Decision` pairs — the measured sweep re-scores the wire
+    dtype together with the granularity, so a cast whose overhead the
+    alpha-beta model underestimates loses on real hardware.
+
     ``keys`` defaults to every currently cached decision (the keys the
     warm-up steps touched).  A key whose op family has no builder, whose
     world does not match the live mesh, or whose every candidate fails to
     build is left on its model decision (``measured_best``'s fallback).
-    Returns a per-key report: ``{"model_q", "measured_q", "times"}``.
+    Returns a per-key report: ``{"model_q", "measured_q", "times"}``
+    (Decision-valued).
     """
     report: dict[TuneKey, dict] = {}
     todo = list(keys) if keys is not None else list(autotune.cache_info())
@@ -308,6 +320,6 @@ def measured_calibration_pass(
         autotune.set_decision(key, best)
         report[key] = {"model_q": model_q, "measured_q": best,
                        "times": times}
-        log.info("calibrate: %s%s model q=%d -> measured q=%d",
-                 key.op, key.shape, model_q, best)
+        log.info("calibrate: %s%s model %s -> measured %s",
+                 key.op, key.shape, tuple(model_q), tuple(best))
     return report

@@ -33,9 +33,93 @@ def ring_permute(x, axis_name: str, n: int, shift: int = 1):
     Without the barrier XLA may hoist a downstream bf16->f32 convert
     through the permute ("convert of permute == permute of convert"),
     silently doubling wire bytes; the barrier keeps the narrow dtype on
-    the wire."""
-    return lax.ppermute(optimization_barrier(x), axis_name,
-                        _ring_perm(n, shift))
+    the wire.  Accepts a pytree payload (the fp8 wire format rides a
+    ``(values, scale)`` pair), barriering and permuting every leaf."""
+    return jax.tree.map(
+        lambda leaf: lax.ppermute(optimization_barrier(leaf), axis_name,
+                                  _ring_perm(n, shift)), x)
+
+
+# ---------------------------------------------------------------------------
+# wire-dtype compression (CoCoNet-style fused precision conversion)
+# ---------------------------------------------------------------------------
+# "f32" is the uncompressed setting: the payload travels at the op's
+# compute dtype, exactly as before the wire knob existed (bit-identical).
+WIRE_DTYPES = ("f32", "bf16", "fp8")
+WIRE_SETTINGS = WIRE_DTYPES + ("auto",)
+FP8_MAX = 448.0  # float8_e4m3fn finite max
+
+
+def wire_itemsize(wire: str, dtype_bytes: int) -> int:
+    """Bytes per element on the wire.  The wire is never *widened*: a
+    bf16 model under ``wire="bf16"`` already travels at 2 bytes."""
+    if wire == "bf16":
+        return min(2, int(dtype_bytes))
+    if wire == "fp8":
+        return min(1, int(dtype_bytes))
+    return int(dtype_bytes)
+
+
+def _passthrough(x, wire: str) -> bool:
+    if wire in (None, "f32"):
+        return True
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return True  # integer payloads (routing ids, ...) stay exact
+    return x.dtype.itemsize <= wire_itemsize(wire, x.dtype.itemsize)
+
+
+def wire_cast(x, wire: str):
+    """Compress one ring/A2A payload chunk for the wire.
+
+    bf16: a plain narrowing cast.  fp8: float8_e4m3fn values with a
+    per-chunk max-abs scale riding alongside as a ``(values, scale)``
+    pair — the scale is a [1] f32 array so it permutes like any payload.
+    ``wire="f32"`` (and any non-narrowing combination) is a passthrough,
+    keeping the pre-wire graphs bit-identical.
+    """
+    if wire not in WIRE_DTYPES and wire is not None:
+        raise ValueError(f"unknown wire dtype {wire!r}; expected one of "
+                         f"{WIRE_DTYPES}")
+    if _passthrough(x, wire):
+        return x
+    if wire == "bf16":
+        return x.astype(jnp.bfloat16)
+    amax = lax.stop_gradient(jnp.max(jnp.abs(x.astype(jnp.float32))))
+    scale = jnp.maximum(amax, 1e-30) / FP8_MAX
+    q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return (q, scale.reshape((1,)))
+
+
+def wire_uncast(payload, dtype):
+    """Decompress a :func:`wire_cast` payload back to ``dtype`` (callers
+    pass f32 where the value feeds a local accumulation)."""
+    if isinstance(payload, tuple):
+        q, scale = payload
+        return (q.astype(jnp.float32) * scale[0]).astype(dtype)
+    return payload.astype(dtype)
+
+
+def all_gather_wire(x, axis_name: str, n: int, *, axis: int = 0,
+                    wire: str = "f32"):
+    """``lax.all_gather(..., tiled=True)`` with the payload compressed to
+    the wire dtype per source chunk (the phase-2 all-gather of the fused
+    AllReduce).  ``wire="f32"`` is the exact pre-wire gather."""
+    if _passthrough(x, wire):
+        return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+    p = wire_cast(x, wire)
+    if isinstance(p, tuple):
+        q, scale = p
+        qg = lax.all_gather(optimization_barrier(q), axis_name, axis=0,
+                            tiled=False)          # [n, ...chunk]
+        sg = lax.all_gather(scale, axis_name, axis=0, tiled=False)  # [n, 1]
+        shape = (n,) + (1,) * q.ndim
+        vals = qg.astype(jnp.float32) * sg.reshape(shape)
+        parts = [lax.index_in_dim(vals, s, axis=0, keepdims=False)
+                 for s in range(n)]
+        return jnp.concatenate(parts, axis=axis).astype(x.dtype)
+    g = lax.all_gather(optimization_barrier(p), axis_name, axis=axis,
+                       tiled=True)
+    return g.astype(x.dtype)
 
 
 def feasible_chunks_per_rank(dim: int, n: int, q: int) -> int:
@@ -77,6 +161,7 @@ def ring_reduce_scatter_compute(
     chunks_per_rank: int = 1,
     sub_axis: int = 0,
     skew: int = 0,
+    wire: str = "f32",
 ):
     """sum_over_ranks(partial_fn(chunk)) -> own rank's reduced chunk.
 
@@ -107,42 +192,66 @@ def ring_reduce_scatter_compute(
     independent sub-chunk rings — putting the straggler-facing sub-ring
     on the wire first.  Each sub-ring's compute chain is untouched, so
     the result is bit-identical under any skew.
+
+    ``wire`` compresses the ring *carry* (bf16, or fp8 with a per-chunk
+    scale riding alongside): the carry is cast on the send side of every
+    hop while all local accumulation runs in f32, so quantization error
+    enters only through the wire — the fused-precision-conversion move of
+    CoCoNet.  ``wire="f32"`` keeps the pre-wire graph bit-identical
+    (payloads travel at the compute dtype, partials accumulate in it).
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     q = chunks_per_rank
     order = sub_chunk_service_order(q, skew)
+    compress = wire not in (None, "f32")
 
-    def merge(accs):
-        return accs[0] if q == 1 else jnp.concatenate(accs, axis=sub_axis)
+    def merge(accs, dtype=None):
+        out = accs[0] if q == 1 else jnp.concatenate(accs, axis=sub_axis)
+        return out if dtype is None else out.astype(dtype)
 
     if n == 1:
         return merge([partial_fn(jnp.int32(s)) for s in range(q)])
 
+    def part(f):
+        p = partial_fn(f)
+        return p.astype(jnp.float32) if compress else p
+
+    def hop(acc):
+        if not compress:
+            return ring_permute(acc, axis_name, n)
+        return wire_uncast(ring_permute(wire_cast(acc, wire), axis_name, n),
+                           jnp.float32)
+
     if schedule == "comm_aware":
         accs: list = [None] * q
+        out_dtype = None
         for s in order:
-            accs[s] = partial_fn(((d - 1) % n) * q + s)
+            p = partial_fn(((d - 1) % n) * q + s)
+            out_dtype = p.dtype
+            accs[s] = p.astype(jnp.float32) if compress else p
         for i in range(1, n):
             c = (d - i - 1) % n
             for s in order:
-                accs[s] = ring_permute(accs[s], axis_name, n)
-                accs[s] = accs[s] + partial_fn(c * q + s)
-        return merge(accs)
+                accs[s] = hop(accs[s]) + part(c * q + s)
+        return merge(accs, out_dtype if compress else None)
 
     if schedule == "oblivious":
         # All compute up front, then a bare ring reduce-scatter.
         parts = [[partial_fn(((d - 1 - i) % n) * q + s) for s in range(q)]
                  for i in reversed(range(n))]
+        out_dtype = parts[0][0].dtype
         # parts[j] is the partial for chunk (d - n + j) mod n; the carry
         # schedule consumes them in reverse creation order so the own
         # chunk was produced first (local-first, the paper's baseline).
-        accs = list(parts[-1])  # chunk (d-1)
+        accs = [p.astype(jnp.float32) if compress else p
+                for p in parts[-1]]  # chunk (d-1)
         for i in range(1, n):
             for s in order:
-                accs[s] = ring_permute(accs[s], axis_name, n)
-                accs[s] = accs[s] + parts[-(i + 1)][s]
-        return merge(accs)
+                nxt = parts[-(i + 1)][s]
+                accs[s] = hop(accs[s]) + (nxt.astype(jnp.float32)
+                                          if compress else nxt)
+        return merge(accs, out_dtype if compress else None)
 
     raise ValueError(f"unknown schedule {schedule!r}")
 
@@ -157,6 +266,7 @@ def ring_all_gather_compute(
     *,
     combine: str = "place",
     out_init=None,
+    wire: str = "f32",
 ):
     """Gather ``x_local`` around the ring, applying ``consume_fn`` to each
     arriving shard immediately (while the next hop is in flight).
@@ -166,14 +276,19 @@ def ring_all_gather_compute(
     combine="place" is a convenience: consume_fn returns (y_src, position
     placer handled by caller through acc).  The local shard is consumed
     first — it is available at t=0, so its compute hides the first hop.
+
+    ``wire`` compresses the forwarded shard *once at its source* (the
+    compressed payload then rings unchanged, so remote shards round
+    exactly once regardless of hop count); the local shard is consumed
+    uncompressed.  ``wire="f32"`` is the exact pre-wire path.
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
     acc = consume_fn(d, x_local, out_init)
-    buf = x_local
+    buf = wire_cast(x_local, wire) if wire not in (None, "f32") else x_local
     for i in range(1, n):
         buf = ring_permute(buf, axis_name, n)
-        acc = consume_fn((d - i) % n, buf, acc)
+        acc = consume_fn((d - i) % n, wire_uncast(buf, x_local.dtype), acc)
     return acc
 
 
@@ -189,6 +304,7 @@ def direct_all_to_all_compute(
     chunks_per_rank: int = 1,
     sub_axis: int = 0,
     skew: int = 0,
+    wire: str = "f32",
 ):
     """Fused compute + All-to-All via per-destination direct sends.
 
@@ -214,6 +330,12 @@ def direct_all_to_all_compute(
     schedule :func:`repro.core.scheduling.sub_chunk_send_events` models;
     per-destination chunks are independent, so the output is bit-identical
     under any skew.
+
+    ``wire`` compresses each remote send (bf16, or fp8 + per-chunk scale)
+    on the producer side; the receiver uncasts into the output dtype.
+    Every payload is a one-shot point-to-point transaction, so each value
+    rounds exactly once.  The locally-consumed chunk never touches the
+    wire and stays exact; ``wire="f32"`` is the exact pre-wire path.
     """
     n = axis_size(axis_name)
     d = lax.axis_index(axis_name)
@@ -240,7 +362,9 @@ def direct_all_to_all_compute(
             if off == 0:
                 recv, src = y, d
             else:
-                recv = ring_permute(y, axis_name, n, shift=off)
+                recv = wire_uncast(
+                    ring_permute(wire_cast(y, wire), axis_name, n,
+                                 shift=off), y.dtype)
                 src = (d - off) % n
             out = place(out, recv, src, s)
     return out

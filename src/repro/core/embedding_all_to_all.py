@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.autotune import resolve_chunks_per_rank, tune_all_to_all
+from repro.core.autotune import resolve_overlap, tune_all_to_all
 from repro.core.collectives import bulk_all_to_all, direct_all_to_all_compute
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -53,6 +53,7 @@ def embedding_all_to_all(
     schedule: str | None = None,
     chunks_per_rank: int | str | None = None,
     skew: int | None = None,
+    wire: str | None = None,
 ):
     """Pooled embeddings exchanged table-parallel -> data-parallel.
 
@@ -68,7 +69,10 @@ def embedding_all_to_all(
     rotates the destination order by the measured straggler bucket
     (Fig. 14).  This op rings over the flattened *world* axis, so
     ``None`` uses ``ctx.fusion.skew_world`` — a tp-ring bucket would be
-    an arbitrary offset on this (larger) ring.
+    an arbitrary offset on this (larger) ring.  ``wire`` compresses each
+    pooled fragment on the send side; the world ring crosses every mesh
+    axis, so ``"auto"`` resolves against the *bottleneck* link class
+    (a multi-pod world ring inherits the DCN constants).
     """
     mode = mode or ctx.fusion.resolve("embed_a2a")
     schedule = schedule or ctx.fusion.schedule
@@ -81,15 +85,18 @@ def embedding_all_to_all(
 
     t_local_g = T // n
     if mode == "bulk":
-        q = 1  # the single A2A does not sub-chunk
+        q, wire_dt = 1, "f32"  # the single A2A does not sub-chunk
     else:
-        q = resolve_chunks_per_rank(
-            chunks_per_rank, ctx.fusion.granularity,
-            lambda: tune_all_to_all((B // n) * t_local_g * D,
-                                    float((B // n) * t_local_g * L * D),
-                                    dtype_bytes=tables.dtype.itemsize,
-                                    n_dev=n, sub_dim=B // n, skew=skew),
+        dec = resolve_overlap(
+            chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+            lambda fq, wr: tune_all_to_all(
+                (B // n) * t_local_g * D,
+                float((B // n) * t_local_g * L * D),
+                dtype_bytes=tables.dtype.itemsize,
+                n_dev=n, sub_dim=B // n, hw=ctx.hw, axis=world_axes,
+                skew=skew, wire=wr, fixed_q=fq),
             dim=B // n, ring=1)
+        q, wire_dt = dec.q, dec.wire
 
     def local_fn(idx_l, tab_l):
         # idx_l: [B, T_local, L] (full batch), tab_l: [T_local, V, D]
@@ -124,6 +131,7 @@ def embedding_all_to_all(
                 chunks_per_rank=q,
                 sub_axis=0,
                 skew=skew,
+                wire=wire_dt,
             )
         # recv: [n_src, b_chunk, T_local, D] -> [b_chunk, T_global, D]
         return jnp.moveaxis(recv, 0, 1).reshape((b_chunk, n * t_local, D))

@@ -16,9 +16,14 @@ from repro.core.collectives import (
     direct_all_to_all_compute,
     attention_partial_merge,
     feasible_chunks_per_rank,
+    all_gather_wire,
+    wire_cast,
+    wire_uncast,
 )
 from repro.core.autotune import (
+    Decision,
     choose_chunks_per_rank,
+    choose_overlap,
     choose_tile_k,
     choose_tile_n,
     load_cache,
@@ -27,6 +32,7 @@ from repro.core.autotune import (
     tune_ce_ring,
     tune_ring_attention,
 )
+from repro.core.perfmodel import DCN, V5E, HardwareModel, MeshHardwareModel
 from repro.core.calibrate import measured_calibration_pass
 from repro.core.scheduling import (
     best_skew_rotation,
@@ -52,9 +58,18 @@ __all__ = [
     "direct_all_to_all_compute",
     "attention_partial_merge",
     "feasible_chunks_per_rank",
+    "all_gather_wire",
+    "wire_cast",
+    "wire_uncast",
+    "Decision",
     "choose_chunks_per_rank",
+    "choose_overlap",
     "choose_tile_k",
     "choose_tile_n",
+    "DCN",
+    "V5E",
+    "HardwareModel",
+    "MeshHardwareModel",
     "load_cache",
     "measured_best",
     "measured_calibration_pass",

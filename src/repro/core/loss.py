@@ -24,8 +24,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.autotune import resolve_chunks_per_rank, tune_ce_ring
-from repro.core.collectives import ring_permute, split_ring_payload
+from repro.core.autotune import resolve_overlap, tune_ce_ring
+from repro.core.collectives import (ring_permute, split_ring_payload,
+                                    wire_cast, wire_uncast)
 from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -53,7 +54,7 @@ def _cap_bwd(lg_raw, cap):
 
 def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
                    logit_softcap, n_world: int, n_sub: int = 1,
-                   skew: int = 0):
+                   skew: int = 0, wire: str = "f32"):
     """Builds the per-rank CE with custom VJP (runs inside shard_map).
 
     ``n_sub`` (= ``chunks_per_rank``, paper Fig. 13) splits the ring
@@ -63,8 +64,15 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
     collective-permute is in flight.  ``skew`` (measured straggler
     rotation, Fig. 14) rotates the sub-ring service order within each
     hop; stats land in disjoint slots, so the forward is bit-identical
-    under any skew."""
+    under any skew.
+
+    ``wire`` compresses the ring payloads: the forwarded x sub-chunks are
+    cast once at their source (one rounding no matter how many hops), and
+    the traveling dx accumulators are cast on every send while the local
+    accumulation stays f32.  ``wire="f32"`` keeps the pre-wire graphs
+    bit-identical (dx then travels in the operand dtype, as before)."""
     order = sub_chunk_service_order(n_sub, skew)
+    compress = wire not in (None, "f32")
 
     @jax.custom_vjp
     def local_ce(xl, el, yl):
@@ -102,6 +110,11 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
             bufs = split_ring_payload(xl, n_sub)
             for i in range(n):
                 src = (d - i) % n
+                if i == 1:
+                    # the ring payload rounds once at its source; every
+                    # later hop forwards the compressed representation
+                    bufs = [wire_cast(b, wire) if compress else b
+                            for b in bufs]
                 for j in (order if i > 0 else range(n_sub)):
                     if i > 0:
                         # forward sub-chunk j the moment sub-chunk j-1's
@@ -109,7 +122,9 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
                         bufs[j] = ring_permute(bufs[j], axis, n)
                     start = src * s_loc + j * sub
                     yc = lax.dynamic_slice_in_dim(yl, start, sub, axis=1)
-                    m, se, lab = _stats_chunk(bufs[j], yc, el, v_off, v_loc)
+                    xc = (wire_uncast(bufs[j], xl.dtype) if i > 0 and compress
+                          else bufs[j])
+                    m, se, lab = _stats_chunk(xc, yc, el, v_off, v_loc)
                     m_all = place(m_all, m, start)
                     se_all = place(se_all, se, start)
                     lab_all = place(lab_all, lab, start)
@@ -177,9 +192,12 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
             return dxc.astype(xl.dtype), dEl.astype(el.dtype), None
 
         # ring replay: each sub-chunk's dx accumulator travels with its
-        # sub-chunk.  The accumulator rides in the operand dtype (bf16
-        # wire for bf16 models — halves ring bytes; f32 models keep f32
-        # exactness).
+        # sub-chunk.  Uncompressed wire: the accumulator rides in the
+        # operand dtype (bf16 for bf16 models — halves ring bytes; f32
+        # models keep f32 exactness).  Compressed wire: the accumulator
+        # is cast on every send (per-chunk fp8 scale riding along) while
+        # the local add stays f32, and the replayed x sub-chunks round
+        # once at their source.
         sub = s_loc // n_sub
         dEl_acc = jnp.zeros(el.shape, jnp.float32)
         xbufs = split_ring_payload(xl, n_sub)
@@ -194,19 +212,33 @@ def _make_local_ce(axis: str, n: int, dp, n_dp: int, seq_sharded: bool,
 
         for j in range(n_sub):
             dxc, dEl = sub_grads(j, d, xbufs[j])
-            dxbufs.append(dxc.astype(xl.dtype))
+            dxbufs.append(dxc if compress else dxc.astype(xl.dtype))
             dEl_acc += dEl
+        if compress:
+            xbufs = [wire_cast(b, wire) for b in xbufs]
         for i in range(1, n):
             src = (d - i) % n
             for j in order:
                 xbufs[j] = ring_permute(xbufs[j], axis, n)
-                dxbufs[j] = ring_permute(dxbufs[j], axis, n)
-                dxc, dEl = sub_grads(j, src, xbufs[j])
-                dxbufs[j] = (dxbufs[j].astype(jnp.float32)
-                             + dxc).astype(xl.dtype)
+                if compress:
+                    dxbufs[j] = wire_uncast(
+                        ring_permute(wire_cast(dxbufs[j], wire), axis, n),
+                        jnp.float32)
+                    dxc, dEl = sub_grads(j, src,
+                                         wire_uncast(xbufs[j], xl.dtype))
+                    dxbufs[j] = dxbufs[j] + dxc
+                else:
+                    dxbufs[j] = ring_permute(dxbufs[j], axis, n)
+                    dxc, dEl = sub_grads(j, src, xbufs[j])
+                    dxbufs[j] = (dxbufs[j].astype(jnp.float32)
+                                 + dxc).astype(xl.dtype)
                 dEl_acc += dEl
         # one final hop returns each sub-chunk's accumulated dx home
-        dxbufs = [ring_permute(s, axis, n) for s in dxbufs]
+        if compress:
+            dxbufs = [wire_uncast(ring_permute(wire_cast(s, wire), axis, n),
+                                  jnp.float32) for s in dxbufs]
+        else:
+            dxbufs = [ring_permute(s, axis, n) for s in dxbufs]
         dxl = dxbufs[0] if n_sub == 1 else jnp.concatenate(dxbufs, axis=1)
         return dxl.astype(xl.dtype), dEl_acc.astype(el.dtype), None
 
@@ -224,6 +256,7 @@ def sharded_cross_entropy(
     logit_softcap: float | None = None,
     chunks_per_rank: int | str | None = None,
     skew: int | None = None,
+    wire: str | None = None,
 ):
     """Mean token cross-entropy; logits stay chunk-local in fwd AND bwd.
 
@@ -232,7 +265,9 @@ def sharded_cross_entropy(
     ``FusionConfig.granularity`` and ``"auto"`` to the shape-keyed
     alpha-beta tuner (:func:`tune_ce_ring`).  ``skew`` rotates the
     sub-ring service order by the measured straggler bucket (Fig. 14;
-    ``None`` uses ``ctx.fusion.skew``).
+    ``None`` uses ``ctx.fusion.skew``).  ``wire`` compresses the fwd
+    x-ring and the bwd traveling dx accumulators (f32 local accumulation;
+    ``None`` uses ``ctx.fusion.wire``).
     """
     axis, n = ctx.tp_axis, ctx.tp
     skew = ctx.fusion.skew if skew is None else int(skew)
@@ -242,21 +277,24 @@ def sharded_cross_entropy(
     n_dp = ctx.dp if dp is not None else 1
     seq_sharded = S % n == 0 and S >= n
 
-    n_sub = 1
+    n_sub, wire_dt = 1, "f32"
     if seq_sharded:
         s_loc = S // n
         b_loc = B // n_dp
         # the ring payload is the local sequence chunk: only q | s_loc
         # matters (the fwd stats ring and the bwd dx ring share the split)
-        n_sub = resolve_chunks_per_rank(
-            chunks_per_rank, ctx.fusion.granularity,
-            lambda: tune_ce_ring(b_loc, s_loc, D, V // n,
-                                 dtype_bytes=x.dtype.itemsize, n_dev=n,
-                                 skew=skew),
+        dec = resolve_overlap(
+            chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+            lambda fq, wr: tune_ce_ring(b_loc, s_loc, D, V // n,
+                                        dtype_bytes=x.dtype.itemsize,
+                                        n_dev=n, hw=ctx.hw, axis=axis,
+                                        skew=skew, wire=wr, fixed_q=fq),
             dim=s_loc, ring=1)
+        n_sub, wire_dt = dec.q, dec.wire
 
     local_ce = _make_local_ce(axis, n, dp, n_dp, seq_sharded, logit_softcap,
-                              ctx.mesh.size, n_sub=n_sub, skew=skew)
+                              ctx.mesh.size, n_sub=n_sub, skew=skew,
+                              wire=wire_dt)
 
     x_spec = P(dp, axis, None) if seq_sharded else P(dp, None, None)
     loss = shard_map(

@@ -32,9 +32,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.autotune import (resolve_chunks_per_rank,
-                                 tune_matmul_allreduce)
-from repro.core.collectives import ring_reduce_scatter_compute
+from repro.core.autotune import resolve_overlap, tune_matmul_allreduce
+from repro.core.collectives import (all_gather_wire,
+                                    ring_reduce_scatter_compute)
 from repro.parallel.sharding import ParallelContext
 from repro.compat import axis_size, shard_map
 
@@ -43,7 +43,7 @@ def _bulk(xl, wl, axis):
     return lax.psum(xl @ wl, axis)
 
 
-def _fused_rows(xl, wl, axis, schedule, q, skew):
+def _fused_rows(xl, wl, axis, schedule, q, skew, wire):
     n = axis_size(axis)
     chunk = xl.shape[0] // (n * q)
 
@@ -53,11 +53,11 @@ def _fused_rows(xl, wl, axis, schedule, q, skew):
 
     mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule,
                                        chunks_per_rank=q, sub_axis=0,
-                                       skew=skew)
-    return lax.all_gather(mine, axis, axis=0, tiled=True)
+                                       skew=skew, wire=wire)
+    return all_gather_wire(mine, axis, n, axis=0, wire=wire)
 
 
-def _fused_cols(xl, wl, axis, schedule, q, skew):
+def _fused_cols(xl, wl, axis, schedule, q, skew, wire):
     n = axis_size(axis)
     chunk = wl.shape[1] // (n * q)
 
@@ -67,8 +67,8 @@ def _fused_cols(xl, wl, axis, schedule, q, skew):
 
     mine = ring_reduce_scatter_compute(partial, axis, schedule=schedule,
                                        chunks_per_rank=q, sub_axis=1,
-                                       skew=skew)
-    return lax.all_gather(mine, axis, axis=1, tiled=True)
+                                       skew=skew, wire=wire)
+    return all_gather_wire(mine, axis, n, axis=1, wire=wire)
 
 
 def matmul_allreduce(
@@ -80,6 +80,7 @@ def matmul_allreduce(
     schedule: str | None = None,
     chunks_per_rank: int | str | None = None,
     skew: int | None = None,
+    wire: str | None = None,
 ):
     """y = AllReduce_tp(x @ w) for row-parallel ``w``.
 
@@ -89,6 +90,9 @@ def matmul_allreduce(
     ``chunks_per_rank``: sub-chunk granularity of the fused ring (int or
     "auto"); ``None`` uses ``ctx.fusion.granularity``.  ``skew``: measured
     straggler rotation (Fig. 14); ``None`` uses ``ctx.fusion.skew``.
+    ``wire``: ring-payload wire dtype ("f32"/"bf16"/"fp8"/"auto" — the RS
+    carry and the phase-2 AG both compress; local accumulation stays f32);
+    ``None`` uses ``ctx.fusion.wire``.
     """
     mode = mode or ctx.fusion.resolve("matmul_rs")
     schedule = schedule or ctx.fusion.schedule
@@ -114,15 +118,19 @@ def matmul_allreduce(
             mode = "fused"
 
     chunk_dim = rows_local if use_rows else nout
-    if mode == "fused":
-        q = resolve_chunks_per_rank(
-            chunks_per_rank, ctx.fusion.granularity,
-            lambda: tune_matmul_allreduce(
+    if mode in ("fused", "kernel"):
+        dec = resolve_overlap(
+            chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+            lambda fq, w: tune_matmul_allreduce(
                 rows_local, k // n, nout, dtype_bytes=x.dtype.itemsize,
-                n_dev=n, chunk_dim=chunk_dim, skew=skew),
+                n_dev=n, chunk_dim=chunk_dim, hw=ctx.hw, axis=axis,
+                skew=skew, wire=w, fixed_q=fq),
             dim=chunk_dim, ring=n)
+        q, wire_dt = dec.q, dec.wire
+        if mode == "kernel":
+            q = 1  # the kernel's granularity is its own tile pipeline
     else:
-        q = 1  # bulk/kernel paths do not ring-chunk at this level
+        q, wire_dt = 1, "f32"  # bulk: one collective at compute dtype
 
     def local_fn(xl, wl):
         if mode == "bulk":
@@ -130,10 +138,10 @@ def matmul_allreduce(
         if mode == "kernel":
             from repro.kernels.fused_gemv_allreduce.ops import fused_matmul_allreduce_shard
 
-            return fused_matmul_allreduce_shard(xl, wl, axis)
+            return fused_matmul_allreduce_shard(xl, wl, axis, wire=wire_dt)
         if use_rows:
-            return _fused_rows(xl, wl, axis, schedule, q, skew)
-        return _fused_cols(xl, wl, axis, schedule, q, skew)
+            return _fused_rows(xl, wl, axis, schedule, q, skew, wire_dt)
+        return _fused_cols(xl, wl, axis, schedule, q, skew, wire_dt)
 
     yf = shard_map(
         local_fn,

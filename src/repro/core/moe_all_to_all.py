@@ -27,29 +27,33 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.autotune import resolve_chunks_per_rank, tune_all_to_all
+from repro.core.autotune import resolve_overlap, tune_all_to_all
 from repro.core.collectives import bulk_all_to_all, direct_all_to_all_compute
 from repro.core.scheduling import ring_offsets
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
 
-def _resolve_q(ctx, chunks_per_rank, *, sub_dim, chunk_elems,
-               flops_per_dest, dtype_bytes, skew=0):
-    """FusionConfig/override -> feasible chunks_per_rank.  Sub-chunks are
-    cut along the capacity axis, so q must divide ``sub_dim`` (= C)."""
-    return resolve_chunks_per_rank(
-        chunks_per_rank, ctx.fusion.granularity,
-        lambda: tune_all_to_all(chunk_elems, flops_per_dest,
-                                dtype_bytes=dtype_bytes, n_dev=ctx.tp,
-                                sub_dim=sub_dim, skew=skew),
+def _resolve(ctx, chunks_per_rank, wire, *, sub_dim, chunk_elems,
+             flops_per_dest, dtype_bytes, skew=0):
+    """FusionConfig/override -> feasible (chunks_per_rank, wire).
+    Sub-chunks are cut along the capacity axis, so q must divide
+    ``sub_dim`` (= C)."""
+    return resolve_overlap(
+        chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+        lambda fq, wr: tune_all_to_all(chunk_elems, flops_per_dest,
+                                       dtype_bytes=dtype_bytes, n_dev=ctx.tp,
+                                       sub_dim=sub_dim, hw=ctx.hw,
+                                       axis=ctx.tp_axis, skew=skew, wire=wr,
+                                       fixed_q=fq),
         dim=sub_dim, ring=1)
 
 
 def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
                             schedule: str | None = None,
                             chunks_per_rank: int | str | None = None,
-                            skew: int | None = None):
+                            skew: int | None = None,
+                            wire: str | None = None):
     """All-to-All of dispatch buffers over the EP axis.
 
     x: [B, n_ep, E_local, C, D] global — dim 1 indexes the destination EP
@@ -61,7 +65,9 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     ``chunks_per_rank`` splits each destination's token block along the
     capacity axis; every sub-block is shipped as soon as it is sliced out
     (paper Fig. 13 granularity knob).  ``skew`` rotates the destination
-    order by the measured straggler bucket (Fig. 14).
+    order by the measured straggler bucket (Fig. 14).  ``wire``
+    compresses each remote send on the producer side (one rounding per
+    token; the locally-consumed block stays exact).
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
     schedule = schedule or ctx.fusion.schedule
@@ -72,11 +78,12 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     e_loc = e_glob // ctx.tp      # expert dim is tp-sharded (in_specs)
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
     b_loc = b // (ctx.dp if dp is not None else 1)
-    q = (1 if mode == "bulk" else
-         _resolve_q(ctx, chunks_per_rank, sub_dim=cap,
+    dec = (None if mode == "bulk" else
+           _resolve(ctx, chunks_per_rank, wire, sub_dim=cap,
                     chunk_elems=b_loc * e_loc * cap * dmodel,
                     flops_per_dest=0.0, dtype_bytes=x.dtype.itemsize,
                     skew=skew))
+    q, wire_dt = (1, "f32") if dec is None else (dec.q, dec.wire)
 
     def local_fn(xl):
         # xl: [B_loc, n_ep, E_local, C, D]; exchange dim 1 across ranks.
@@ -101,6 +108,7 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
                 chunks_per_rank=q,
                 sub_axis=2,
                 skew=skew,
+                wire=wire_dt,
             )
         return jnp.moveaxis(out, 0, 1)
 
@@ -124,6 +132,7 @@ def fused_expert_ffn_combine(
     schedule: str | None = None,
     chunks_per_rank: int | str | None = None,
     skew: int | None = None,
+    wire: str | None = None,
 ):
     """Expert FFN fused with the combine All-to-All (the paper's GEMM+A2A).
 
@@ -163,12 +172,22 @@ def fused_expert_ffn_combine(
         if not fused_gemm_a2a_kernel_available(ctx.mesh):
             mode = "fused"
 
-    q = (1 if mode != "fused" else
-         _resolve_q(ctx, chunks_per_rank, sub_dim=cap,
+    dec = (None if mode != "fused" else
+           _resolve(ctx, chunks_per_rank, wire, sub_dim=cap,
                     chunk_elems=b_loc * e_loc * cap * dmodel,
                     flops_per_dest=2.0 * 3 * b_loc * e_loc * cap * dmodel
                     * d_ff,
                     dtype_bytes=x_dispatched.dtype.itemsize, skew=skew))
+    q, wire_dt = (1, "f32") if dec is None else (dec.q, dec.wire)
+    if mode == "kernel":
+        # the Pallas PUT path stages its tx buffers in the wire dtype
+        # (fp8's per-chunk scale is an XLA-path feature: clamp to bf16)
+        kdec = _resolve(ctx, 1, wire, sub_dim=cap,
+                        chunk_elems=b_loc * e_loc * cap * dmodel,
+                        flops_per_dest=2.0 * 3 * b_loc * e_loc * cap
+                        * dmodel * d_ff,
+                        dtype_bytes=x_dispatched.dtype.itemsize, skew=skew)
+        wire_dt = "bf16" if kdec.wire == "fp8" else kdec.wire
 
     def ffn_block(xb, wu, wg, wd):
         # xb: [B_loc, E_local, C, D] -> same shape
@@ -187,7 +206,8 @@ def fused_expert_ffn_combine(
             from repro.kernels.fused_gemm_a2a.ops import fused_gemm_a2a_shard
 
             out = fused_gemm_a2a_shard(xt, wu, wg, wd, axis, act=act,
-                                       comm_aware=schedule == "comm_aware")
+                                       comm_aware=schedule == "comm_aware",
+                                       wire=wire_dt)
         else:
             sub = cap // q
 
@@ -206,6 +226,7 @@ def fused_expert_ffn_combine(
                 chunks_per_rank=q,
                 sub_axis=2,
                 skew=skew,
+                wire=wire_dt,
             )
         return jnp.moveaxis(out, 0, 1)
 

@@ -17,11 +17,14 @@ Terms:
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
 class HardwareModel:
-    """Alpha-beta constants for one accelerator generation."""
+    """Alpha-beta constants for one accelerator generation — or, under a
+    :class:`MeshHardwareModel`, for one *mesh-axis link class* (the ICI
+    ring inside a pod vs the DCN links between pods)."""
 
     peak_flops: float = 197e12   # bf16 MXU peak
     hbm_bw: float = 819e9        # HBM bytes/s
@@ -30,6 +33,9 @@ class HardwareModel:
     boundary: float = 2e-6       # kernel-boundary sync the fused form removes
     chunk_overhead: float = 2e-7  # per-chunk issue cost (device-initiated
     # comm is cheap — the paper's point; ROC_SHMEM API is ns-scale)
+    fp8_wire: bool = False       # links + DMA engines accept fp8 payloads
+    # (quantized collectives need both endpoints to agree; "auto" wire
+    # selection only considers fp8 where the link model declares support)
 
     def compute_time(self, flops: float, hbm_bytes: float) -> float:
         """Roofline compute time: MXU- or HBM-bound, whichever binds."""
@@ -38,21 +44,94 @@ class HardwareModel:
 
 V5E = HardwareModel()
 
+# Pod-boundary data-center network: ~100 Gb/s per host and 10s-of-us
+# latency — the slow axis of a multi-pod mesh.  Compute-side constants are
+# the device's own (a DCN hop does not change the chip).
+DCN = HardwareModel(ici_bw=12.5e9, ici_lat=25e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshHardwareModel:
+    """Per-mesh-axis hardware models (hierarchical alpha-beta).
+
+    A multi-pod mesh is not one flat link class: the ``model``/``data``
+    axes ride the intra-pod ICI while a ``pod`` axis crosses the DCN.
+    ``axes`` maps axis names to their link model; anything unlisted uses
+    ``default``.  Stored as a tuple of pairs so instances stay hashable
+    (they ride inside ``TuneKey`` indirectly via the resolved per-axis
+    :class:`HardwareModel`).
+    """
+
+    axes: tuple = ()                       # ((axis_name, HardwareModel), ...)
+    default: HardwareModel = V5E
+
+    @classmethod
+    def uniform(cls, hw: HardwareModel = V5E) -> "MeshHardwareModel":
+        return cls(axes=(), default=hw)
+
+    @classmethod
+    def from_mapping(cls, mapping: Mapping[str, HardwareModel],
+                     default: HardwareModel = V5E) -> "MeshHardwareModel":
+        return cls(axes=tuple(sorted(mapping.items())), default=default)
+
+    @classmethod
+    def for_mesh_axes(cls, axis_names: Sequence[str], *,
+                      ici: HardwareModel = V5E,
+                      dcn: HardwareModel = DCN) -> "MeshHardwareModel":
+        """Convention used by the launchers: a ``pod`` axis crosses the
+        DCN, every other axis rides the intra-pod ICI."""
+        return cls(axes=tuple((a, dcn) for a in axis_names if a == "pod"),
+                   default=ici)
+
+    def axis(self, name: str | None) -> HardwareModel:
+        for a, hw in self.axes:
+            if a == name:
+                return hw
+        return self.default
+
+    def for_axes(self, names) -> HardwareModel:
+        """Bottleneck composition for a ring spanning several mesh axes
+        (the flattened-world embedding A2A): the slowest link class the
+        ring crosses governs its wire time, the largest latency its alpha,
+        and fp8 is only available if *every* crossed link class takes it."""
+        if names is None:
+            return self.default
+        if isinstance(names, str):
+            return self.axis(names)
+        hws = [self.axis(n) for n in names] or [self.default]
+        slowest = min(hws, key=lambda h: h.ici_bw)
+        return dataclasses.replace(
+            slowest,
+            ici_lat=max(h.ici_lat for h in hws),
+            fp8_wire=all(h.fp8_wire for h in hws))
+
+
+def resolve_hw(hw, axis=None) -> HardwareModel:
+    """Accept either a flat :class:`HardwareModel` or a hierarchical
+    :class:`MeshHardwareModel` (resolved for ``axis`` — a name, a tuple of
+    names, or None for the default link class)."""
+    if isinstance(hw, MeshHardwareModel):
+        return hw.for_axes(axis)
+    return hw
+
 
 def model_bulk(flops, hbm_bytes, wire_bytes, *, bw=None,
-               hw: HardwareModel = V5E):
+               hw: HardwareModel | MeshHardwareModel = V5E, axis=None):
     """Bulk-synchronous: full compute kernel, boundary sync, collective."""
+    hw = resolve_hw(hw, axis)
     bw = hw.ici_bw if bw is None else bw
     return (hw.compute_time(flops, hbm_bytes) + hw.boundary + hw.ici_lat
             + wire_bytes / bw)
 
 
 def model_fused(flops, hbm_bytes, wire_bytes, chunks, *, bw=None,
-                zero_copy_saving=0.0, hw: HardwareModel = V5E):
+                zero_copy_saving=0.0,
+                hw: HardwareModel | MeshHardwareModel = V5E, axis=None):
     """Fused: chunk i's wire time hides behind chunks i+1..n's compute.
 
     total = first chunk compute + max(rest compute, rest wire) +
             last chunk wire + per-chunk issue overhead - zero-copy saving."""
+    hw = resolve_hw(hw, axis)
     bw = hw.ici_bw if bw is None else bw
     c = hw.compute_time(flops, hbm_bytes)
     w = wire_bytes / bw + hw.ici_lat

@@ -66,9 +66,9 @@ def _weight_schedule(e_loc, kp_d, kp_f):
 
 def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
                      x_slots, x_sems, wu_slots, wu_sems, wg_slots, wg_sems,
-                     wd_slots, wd_sems, tx_ref, send_sem, recv_sem, *,
+                     wd_slots, wd_sems, tx_ref, rx_ref, send_sem, recv_sem, *,
                      n_dev, e_loc, tile_k, tile_f, dm, f, act,
-                     axis_name, id_style):
+                     axis_name, id_style, use_rx):
     my = ids_ref[0]
     i = pl.program_id(0)
     step_off = lambda s: ids_ref[1 + s]
@@ -151,12 +151,18 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
                 ys.append(y.reshape(b, 1, cc, dm).astype(o_ref.dtype))
     block = jnp.concatenate(ys, axis=1)               # [B, E, C, D]
 
+    # receive target: the output ref itself (zero-copy) when the wire
+    # dtype matches the output, a wire-dtype rx staging ref otherwise
+    # (the narrow payload is upcast into the output at the end)
+    recv_ref = rx_ref if use_rx else o_ref
+
     @pl.when(off != 0)
     def _():
-        # finished block: PUT straight into the peer's output slot for
-        # this source rank (zero-copy combine; data lands in final layout)
-        tx_ref[i] = block
-        remote_tile_put(tx_ref.at[i], o_ref.at[my], send_sem, recv_sem,
+        # finished block: PUT straight into the peer's slot for this
+        # source rank, staged at the wire dtype (data lands in final
+        # layout; no receive-side shuffle)
+        tx_ref[i] = block.astype(tx_ref.dtype)
+        remote_tile_put(tx_ref.at[i], recv_ref.at[my], send_sem, recv_sem,
                         dest, axis_name, id_style).start()
 
     @pl.when(off == 0)
@@ -166,22 +172,28 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
     @pl.when(i == n_dev - 1)
     def _():
         def desc():
-            return remote_tile_put(tx_ref.at[0], o_ref.at[0], send_sem,
+            return remote_tile_put(tx_ref.at[0], recv_ref.at[0], send_sem,
                                    recv_sem, my, axis_name, id_style)
 
         drain(desc, n_dev - 1, recv=True)   # peers' blocks landed
         drain(desc, n_dev - 1, recv=False)  # our PUTs drained
+        if use_rx:
+            # upcast the wire-dtype arrivals into the output slots
+            for s in range(n_dev):
+                @pl.when(s != my)
+                def _(s=s):
+                    o_ref[s] = rx_ref[s].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_dev", "act", "comm_aware",
                                     "collective_id", "interpret",
                                     "axis_name", "id_style", "tile_k",
-                                    "tile_f"))
+                                    "tile_f", "wire"))
 def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
                           axis_name, act, comm_aware=True, collective_id=8,
                           interpret=True, id_style=None, tile_k=None,
-                          tile_f=None):
+                          tile_f=None, wire="f32"):
     """Per-shard fused expert FFN + combine All-to-All.
 
     xt: [n_dev, B, E_loc, C, D] dispatched tokens stacked by combine
@@ -194,18 +206,31 @@ def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
     — the final panel of either contraction is ragged).  The weights are
     streamed per (expert, panel) from HBM, so per-expert ``D x F`` and
     the ``E_loc`` multiplier never hit VMEM at once.
+
+    ``wire`` is the combine-PUT payload dtype: ``"bf16"`` stages finished
+    blocks (f32-accumulated in the GEMM pipeline) in bf16 tx buffers and
+    receives them in a bf16 staging ref upcast into the output at the end
+    — the remote DMA moves half the bytes at the cost of the receive-side
+    zero-copy.  Supported: ``{"f32", "bf16"}`` (fp8 per-chunk scaling is
+    an XLA-path feature; callers clamp).
     """
     if id_style is None:
         id_style = "logical" if interpret else "mesh"
+    if wire not in ("f32", "bf16"):
+        raise ValueError(f"kernel wire dtype must be 'f32' or 'bf16', "
+                         f"got {wire!r}")
     nd, b, e, c, d = xt.shape
     f = w_up.shape[2]
     assert nd == n_dev, (nd, n_dev)
     tile_k = d if tile_k is None else max(1, min(int(tile_k), d))
     tile_f = f if tile_f is None else max(1, min(int(tile_f), f))
+    wire_dt = (jnp.bfloat16 if wire == "bf16" and xt.dtype.itemsize > 2
+               else xt.dtype)
+    use_rx = wire_dt != xt.dtype
     kernel = functools.partial(_gemm_a2a_kernel, n_dev=n_dev, e_loc=e,
                                tile_k=tile_k, tile_f=tile_f, dm=d, f=f,
                                act=act, axis_name=axis_name,
-                               id_style=id_style)
+                               id_style=id_style, use_rx=use_rx)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_dev,),
@@ -227,8 +252,11 @@ def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
             pltpu.SemaphoreType.DMA((2,)),
             # tx staging: remote blocks only (own block is written to the
             # output directly and scheduled last, so remote steps are
-            # i < n_dev - 1)
-            pltpu.VMEM((max(n_dev - 1, 1), b, e, c, d), xt.dtype),
+            # i < n_dev - 1); staged at the wire dtype
+            pltpu.VMEM((max(n_dev - 1, 1), b, e, c, d), wire_dt),
+            # rx staging for a narrowed wire (a dummy slot otherwise — the
+            # PUTs then land zero-copy in the output ref)
+            pltpu.VMEM((n_dev, b, e, c, d) if use_rx else (1,) * 5, wire_dt),
             pltpu.SemaphoreType.DMA,                  # send
             pltpu.SemaphoreType.DMA,                  # recv
         ],

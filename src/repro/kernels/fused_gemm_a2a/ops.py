@@ -23,21 +23,27 @@ def fused_gemm_a2a_kernel_available(mesh=None) -> bool:
 
 
 def fused_gemm_a2a_shard(xt, w_up, w_gate, w_down, axis, *, act,
-                         comm_aware=True, tile_k=None, tile_f=None):
+                         comm_aware=True, tile_k=None, tile_f=None,
+                         wire="f32"):
     """Call inside shard_map.  xt: [n, B_loc, E_loc, C, D] stacked by
     combine destination; the PUT ring runs over mesh axis ``axis``.
     ``tile_k`` / ``tile_f`` bound the streamed weight panels of the
-    up/gate and down GEMM contractions (None = whole depth)."""
+    up/gate and down GEMM contractions (None = whole depth).  ``wire``
+    compresses the combine-PUT payload (kernel path supports f32/bf16;
+    fp8 is clamped to bf16 — the per-chunk-scale format is an XLA-path
+    feature)."""
     n_dev = axis_size(axis)
     my = lax.axis_index(axis)
+    wire = "bf16" if wire == "fp8" else wire
     return fused_gemm_a2a_pallas(
         xt, w_up, w_gate, w_down, my, n_dev=n_dev, axis_name=axis, act=act,
         comm_aware=comm_aware, interpret=interpret_mode(), tile_k=tile_k,
-        tile_f=tile_f)
+        tile_f=tile_f, wire=wire)
 
 
 def fused_gemm_a2a(ctx: ParallelContext, x_dispatched, w_up, w_gate, w_down,
-                   *, act, comm_aware=True, tile_k=None, tile_f=None):
+                   *, act, comm_aware=True, tile_k=None, tile_f=None,
+                   wire="f32"):
     """Standalone global-array entry (tests/benchmarks).
 
     x_dispatched: [B, n_ep, E, C, D] global, E sharded over tp — same
@@ -51,7 +57,7 @@ def fused_gemm_a2a(ctx: ParallelContext, x_dispatched, w_up, w_gate, w_down,
         xt = jnp.moveaxis(xl, 1, 0)  # [n_ep, B_loc, E_loc, C, D]
         out = fused_gemm_a2a_shard(xt, wu, wg, wd, ctx.tp_axis, act=act,
                                    comm_aware=comm_aware, tile_k=tile_k,
-                                   tile_f=tile_f)
+                                   tile_f=tile_f, wire=wire)
         return jnp.moveaxis(out, 0, 1)
 
     return shard_map(

@@ -215,12 +215,12 @@ def _fused_kernel(ids_ref, x_ref, w_hbm, o_ref,
                    static_argnames=("n_dev", "comm_aware", "collective_id",
                                     "barrier", "interpret", "axis_name",
                                     "id_style", "tile_n", "tile_k",
-                                    "vmem_budget_bytes"))
+                                    "vmem_budget_bytes", "wire"))
 def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
                                   comm_aware=True, collective_id=7,
                                   barrier=False, interpret=True,
                                   id_style=None, tile_n=None, tile_k=None,
-                                  vmem_budget_bytes=8 << 20):
+                                  vmem_budget_bytes=8 << 20, wire="f32"):
     """Per-shard tile-pipelined fused GEMV/GEMM+AllReduce.
 
     x: [B, K_loc]; w: [K_loc, N]; my_tp: int32 scalar (position on the
@@ -233,13 +233,27 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
     contraction-panel depth: ``None`` sizes it so two ``[tile_k, tile_n]``
     panels plus the fixed buffers fit ``vmem_budget_bytes``; it need not
     divide ``K`` — the final panel is ragged.
+
+    ``wire`` is the phase-1 PUT payload dtype: ``"bf16"`` stages the
+    finished tiles (already f32-accumulated in the K-panel scratch) in
+    bf16 tx/rx buffers so the remote DMA moves half the bytes; the
+    receive-side reduction still runs in f32.  The kernel path supports
+    ``{"f32", "bf16"}`` — the fp8 per-chunk-scale format is an XLA-path
+    feature (callers clamp).  The phase-2 broadcast ships final outputs
+    and stays at the output dtype.
     """
     if id_style is None:
         id_style = "logical" if interpret else "mesh"
+    if wire not in ("f32", "bf16"):
+        raise ValueError(f"kernel wire dtype must be 'f32' or 'bf16', "
+                         f"got {wire!r}")
     b, k = x.shape
     n = w.shape[1]
     assert n % n_dev == 0, (n, n_dev)
     bn = n // n_dev
+    # "f32" = uncompressed: the PUT payload travels at the compute dtype
+    wire_dt = (jnp.bfloat16 if wire == "bf16"
+               and x.dtype.itemsize > 2 else x.dtype)
     if tile_n is None:
         tile_n = choose_tile_n(b, k, n, n_dev=n_dev,
                                dtype_bytes=x.dtype.itemsize,
@@ -275,10 +289,12 @@ def fused_matmul_allreduce_pallas(x, w, my_tp, *, n_dev, axis_name,
             pltpu.SemaphoreType.DMA((2,)),            # panel double buffer
             pltpu.VMEM((b, tile_n), jnp.float32),     # K-panel accumulator
             # tx staging: remote tiles only — the schedule puts the own
-            # (non-staged) tiles last, so remote tiles are t < n_remote
+            # (non-staged) tiles last, so remote tiles are t < n_remote.
+            # Staged (and received) in the wire dtype: the PUT moves
+            # wire-width bytes, the reduction upcasts to f32
             pltpu.VMEM((max((n_dev - 1) * tiles_per_rank, 1), b, tile_n),
-                       x.dtype),
-            pltpu.VMEM((n_dev, b, bn), x.dtype),      # rx slots (per source)
+                       wire_dt),
+            pltpu.VMEM((n_dev, b, bn), wire_dt),      # rx slots (per source)
             pltpu.VMEM((b, bn), jnp.float32),         # reduction accumulator
             pltpu.SemaphoreType.DMA,                  # send
             pltpu.SemaphoreType.DMA,                  # recv

@@ -24,23 +24,26 @@ def fused_matmul_allreduce_kernel_available(mesh=None) -> bool:
 
 def fused_matmul_allreduce_shard(xl, wl, axis, *, comm_aware=True,
                                  tile_n=None, tile_k=None,
-                                 vmem_budget_bytes=8 << 20):
+                                 vmem_budget_bytes=8 << 20, wire="f32"):
     """Call inside shard_map.  xl: [rows_loc, K_loc]; wl: [K_loc, N].
     The PUT ring runs over mesh axis ``axis``.  ``tile_n`` pins the
     pipeline's output-tile width and ``tile_k`` its contraction-panel
     depth (None = autotuned from the VMEM budget; ``tile_k`` may leave a
-    ragged final K panel)."""
+    ragged final K panel).  ``wire`` compresses the phase-1 PUT payload
+    (kernel path supports f32/bf16; fp8 is clamped to bf16 — the
+    per-chunk-scale format is an XLA-path feature)."""
     n_dev = axis_size(axis)
     my = lax.axis_index(axis)
+    wire = "bf16" if wire == "fp8" else wire
     return fused_matmul_allreduce_pallas(
         xl, wl, my, n_dev=n_dev, axis_name=axis, comm_aware=comm_aware,
         interpret=interpret_mode(), tile_n=tile_n, tile_k=tile_k,
-        vmem_budget_bytes=vmem_budget_bytes)
+        vmem_budget_bytes=vmem_budget_bytes, wire=wire)
 
 
 def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True,
                            tile_n=None, tile_k=None,
-                           vmem_budget_bytes=8 << 20):
+                           vmem_budget_bytes=8 << 20, wire="f32"):
     """Standalone global-array entry (tests/benchmarks).
 
     x: [..., K] K sharded over tp; w: [K, N] row-sharded -> [..., N]."""
@@ -52,7 +55,7 @@ def fused_matmul_allreduce(ctx: ParallelContext, x, w, *, comm_aware=True,
     def local_fn(xl, wl):
         return fused_matmul_allreduce_shard(
             xl, wl, ctx.tp_axis, comm_aware=comm_aware, tile_n=tile_n,
-            tile_k=tile_k, vmem_budget_bytes=vmem_budget_bytes)
+            tile_k=tile_k, vmem_budget_bytes=vmem_budget_bytes, wire=wire)
 
     yf = shard_map(
         local_fn, mesh=ctx.mesh,

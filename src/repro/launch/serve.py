@@ -36,7 +36,8 @@ def main():
     args = ap.parse_args()
 
     load_cache_if_exists(args.tune_cache)
-    fusion = FusionConfig(mode=args.fusion, granularity=args.granularity)
+    fusion = FusionConfig(mode=args.fusion, granularity=args.granularity,
+                          wire=args.wire)
     ctx = (make_context(fusion=fusion) if args.production_mesh
            else make_host_mesh(fusion=fusion))
     bundle = get_arch(args.arch)

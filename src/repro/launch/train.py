@@ -91,7 +91,8 @@ def main():
     logging.basicConfig(level=logging.INFO)
 
     load_cache_if_exists(args.tune_cache)
-    fusion = FusionConfig(mode=args.fusion, granularity=args.granularity)
+    fusion = FusionConfig(mode=args.fusion, granularity=args.granularity,
+                          wire=args.wire)
     ctx = (make_context(fusion=fusion) if args.production_mesh
            else make_host_mesh(fusion=fusion))
     bundle = get_arch(args.arch)
@@ -132,7 +133,11 @@ def main():
     sup = TrainSupervisor(
         SupervisorConfig(checkpoint_dir=args.ckpt_dir,
                          checkpoint_every=args.ckpt_every),
-        step_fn, state_shardings=state_sh, skew_scheduler=skew_sched)
+        step_fn, state_shardings=state_sh, skew_scheduler=skew_sched,
+        # multi-host: all-gather the local monitor's EWMA per process so
+        # the estimator sees measured cross-rank times (single-process
+        # runs degrade to the replicated local time — rotation stays 0)
+        per_rank_times="process" if skew_sched is not None else None)
 
     t0 = time.time()
     losses = []

@@ -23,9 +23,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.autotune import resolve_chunks_per_rank, tune_ring_attention
+from repro.core.autotune import resolve_overlap, tune_ring_attention
 from repro.core.collectives import (attention_partial_merge, ring_permute,
-                                    split_ring_payload)
+                                    split_ring_payload, wire_cast,
+                                    wire_uncast)
 from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -180,7 +181,7 @@ def _span_flash_bwd(q5, kc, vc, do5, delta, m, l, qpos, kpos, dq5, *,
 
 def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
                          q_block, kv_block, Hq, Hkv, hd, s_loc, n_world,
-                         n_sub=1, skew=0):
+                         n_sub=1, skew=0, wire="f32"):
     """Ring attention with analytic backward (custom VJP).
 
     Forward: each arriving KV chunk is flash-consumed while the next hop's
@@ -202,10 +203,19 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
     the straggler-facing sub-ring is forwarded first.  The shared
     online-softmax carry then merges sub-chunks in rotated order, which
     is algebraically the same sum (equal within the usual fp tolerance).
+
+    ``wire`` compresses the ring payloads: KV sub-chunks round once at
+    their source (the compressed payload rings unchanged, so remote KV
+    sees one rounding regardless of hop count) and the traveling (dk, dv)
+    accumulators are cast on every send while the flash-backward
+    accumulation stays f32.  ``wire="f32"`` keeps the pre-wire graphs
+    bit-identical (the accumulators then travel at the operand dtype, as
+    before).
     """
     g = Hq // Hkv
     sub = s_loc // n_sub
     order = sub_chunk_service_order(n_sub, skew)
+    compress = wire not in (None, "f32")
     # Without causal/window masking the position arrays are dead code; an
     # unconsumed axis_index leaves a dangling partition-id instruction that
     # the SPMD partitioner refuses, so only trace it when a mask needs it.
@@ -229,15 +239,18 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
         carry = _span_flash(q5, kl, vl, qpos, d * s_loc + jnp.arange(s_loc),
                             carry, causal=causal, window=window, scale=scale,
                             cap=cap, q_block=q_block, kv_block=kv_block)
-        kbufs = split_ring_payload(kl, n_sub)
-        vbufs = split_ring_payload(vl, n_sub)
+        # the KV payloads round once at their source (compressed wire
+        # rings unchanged; every consumer uncasts the same representation)
+        kbufs = [wire_cast(s, wire) for s in split_ring_payload(kl, n_sub)]
+        vbufs = [wire_cast(s, wire) for s in split_ring_payload(vl, n_sub)]
         for i in range(1, hops + 1):
             src = (d - i) % n
             for j in order:
                 kbufs[j] = ring_permute(kbufs[j], axis, n)
                 vbufs[j] = ring_permute(vbufs[j], axis, n)
                 carry = _span_flash(
-                    q5, kbufs[j], vbufs[j], qpos,
+                    q5, wire_uncast(kbufs[j], kl.dtype),
+                    wire_uncast(vbufs[j], vl.dtype), qpos,
                     src * s_loc + j * sub + jnp.arange(sub), carry,
                     causal=causal, window=window, scale=scale,
                     cap=cap, q_block=q_block, kv_block=kv_block)
@@ -268,33 +281,50 @@ def _make_ring_attention(axis, n, hops, causal, window, scale, cap,
             q5, kl, vl, do5, delta, m, l, qpos, kpos0, dq5,
             causal=causal, window=window, scale=scale, cap=cap,
             q_block=q_block, kv_block=kv_block)
-        kbufs = split_ring_payload(kl, n_sub)
-        vbufs = split_ring_payload(vl, n_sub)
-        # traveling (dk, dv) accumulators ride in the operand dtype — bf16
-        # wire for bf16 models (halves ring bytes), f32 kept exact
-        dkbufs = [s.astype(kl.dtype) for s in split_ring_payload(dk, n_sub)]
-        dvbufs = [s.astype(vl.dtype) for s in split_ring_payload(dv, n_sub)]
+        # replayed KV rings round once at their source (as in forward)
+        kbufs = [wire_cast(s, wire) for s in split_ring_payload(kl, n_sub)]
+        vbufs = [wire_cast(s, wire) for s in split_ring_payload(vl, n_sub)]
+
+        def dperm(buf, shift=1):
+            """One traveling-accumulator hop: uncompressed wire rides the
+            operand dtype (pre-wire behavior, bit-identical); compressed
+            wire casts on the send and lands back in f32 for the next
+            flash-backward accumulation."""
+            if not compress:
+                return ring_permute(buf, axis, n, shift=shift)
+            return wire_uncast(
+                ring_permute(wire_cast(buf, wire), axis, n, shift=shift),
+                jnp.float32)
+
+        # traveling (dk, dv) accumulators: local representation is f32
+        # under a compressed wire, operand dtype otherwise
+        def rest(s, ref):
+            return s if compress else s.astype(ref.dtype)
+
+        dkbufs = [rest(s, kl) for s in split_ring_payload(dk, n_sub)]
+        dvbufs = [rest(s, vl) for s in split_ring_payload(dv, n_sub)]
         for i in range(1, hops + 1):
             src = (d - i) % n
             for j in order:
                 kbufs[j] = ring_permute(kbufs[j], axis, n)
                 vbufs[j] = ring_permute(vbufs[j], axis, n)
-                dkbufs[j] = ring_permute(dkbufs[j], axis, n)
-                dvbufs[j] = ring_permute(dvbufs[j], axis, n)
+                dkbufs[j] = dperm(dkbufs[j])
+                dvbufs[j] = dperm(dvbufs[j])
                 dq5, dkf, dvf = _span_flash_bwd(
-                    q5, kbufs[j], vbufs[j], do5, delta, m, l, qpos,
+                    q5, wire_uncast(kbufs[j], kl.dtype),
+                    wire_uncast(vbufs[j], vl.dtype), do5, delta, m, l, qpos,
                     src * s_loc + j * sub + jnp.arange(sub), dq5,
                     causal=causal, window=window, scale=scale, cap=cap,
                     q_block=q_block, kv_block=kv_block,
                     dk0=dkbufs[j].astype(jnp.float32),
                     dv0=dvbufs[j].astype(jnp.float32))
-                dkbufs[j] = dkf.astype(kl.dtype)
-                dvbufs[j] = dvf.astype(vl.dtype)
+                dkbufs[j] = rest(dkf, kl)
+                dvbufs[j] = rest(dvf, vl)
         # deliver accumulated (dk, dv) back to the owning rank: the chunk
         # rests hops ranks ahead of its owner -> one offset permute home
         if hops % n != 0:
-            dkbufs = [ring_permute(s, axis, n, shift=-hops) for s in dkbufs]
-            dvbufs = [ring_permute(s, axis, n, shift=-hops) for s in dvbufs]
+            dkbufs = [dperm(s, shift=-hops) for s in dkbufs]
+            dvbufs = [dperm(s, shift=-hops) for s in dvbufs]
         dkl = dkbufs[0] if n_sub == 1 else jnp.concatenate(dkbufs, axis=1)
         dvl = dvbufs[0] if n_sub == 1 else jnp.concatenate(dvbufs, axis=1)
         dql = dq5.reshape(b, s_loc, Hq, hd).astype(ql.dtype)
@@ -320,12 +350,15 @@ def context_attention(
     kv_block: int = 1024,
     chunks_per_rank: int | str | None = None,
     skew: int | None = None,
+    wire: str | None = None,
 ):
     """``chunks_per_rank`` sub-chunks the KV ring payload (paper Fig. 13);
     ``None`` defers to ``FusionConfig.granularity`` and ``"auto"`` to the
     shape-keyed alpha-beta tuner (:func:`tune_ring_attention`).  ``skew``
     rotates the sub-ring service order by the measured straggler bucket
-    (Fig. 14; ``None`` uses ``ctx.fusion.skew``)."""
+    (Fig. 14; ``None`` uses ``ctx.fusion.skew``).  ``wire`` compresses
+    the KV ring payloads and the traveling (dk, dv) accumulators (f32
+    local accumulation; ``None`` uses ``ctx.fusion.wire``)."""
     mode = mode or ctx.fusion.resolve("kv_ag")
     skew = ctx.fusion.skew if skew is None else int(skew)
     axis, n = ctx.tp_axis, ctx.tp
@@ -344,16 +377,17 @@ def context_attention(
     if mode != "bulk":
         b_loc = B // ctx.dp if dp is not None else B
         # the ring payload is the local KV chunk: only q | s_loc matters
-        n_sub = resolve_chunks_per_rank(
-            chunks_per_rank, ctx.fusion.granularity,
-            lambda: tune_ring_attention(
+        dec = resolve_overlap(
+            chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
+            lambda fq, wr: tune_ring_attention(
                 b_loc, s_loc, Hq, Hkv, hd, dtype_bytes=k.dtype.itemsize,
-                n_dev=n, hops=hops, skew=skew),
+                n_dev=n, hops=hops, hw=ctx.hw, axis=axis, skew=skew,
+                wire=wr, fixed_q=fq),
             dim=s_loc, ring=1)
         ring_attn = _make_ring_attention(
             axis, n, hops, causal, window, scale, softcap_val,
             q_block, kv_block, Hq, Hkv, hd, s_loc, ctx.mesh.size,
-            n_sub=n_sub, skew=skew)
+            n_sub=dec.q, skew=skew, wire=dec.wire)
 
     def local_fn(ql, kl, vl):
         d = lax.axis_index(axis)

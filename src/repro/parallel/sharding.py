@@ -21,6 +21,14 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def _default_mesh_hw():
+    # deferred: repro.core.fused imports this module, so a module-level
+    # import of repro.core.perfmodel would be circular
+    from repro.core.perfmodel import MeshHardwareModel
+
+    return MeshHardwareModel()
+
+
 @dataclasses.dataclass(frozen=True)
 class FusionConfig:
     """Controls how dependent compute+collective pairs execute.
@@ -63,6 +71,15 @@ class FusionConfig:
       deliberately do not inherit the tp-ring ``skew``
       (``SkewEstimator`` reduces per axis; feed each ring its own
       bucket).
+    wire: wire dtype of every ring/A2A payload.  ``"f32"`` keeps the
+      compute dtype on the wire (exact — the pre-wire graphs,
+      bit-identical); ``"bf16"``/``"fp8"`` compress payloads on the send
+      side while all local accumulation stays f32 (fp8 ships a per-chunk
+      max-abs scale alongside the payload); ``"auto"`` defers to the
+      per-mesh-axis alpha-beta model (:class:`~repro.core.perfmodel.
+      MeshHardwareModel` via ``ParallelContext.hw``) jointly with the
+      granularity choice — a slow DCN axis picks a narrow wire, a fast
+      ICI axis whose wire hides behind compute keeps f32.
     """
 
     mode: str = "fused"
@@ -70,6 +87,7 @@ class FusionConfig:
     granularity: int | str = 1
     skew: int = 0
     skew_world: int = 0
+    wire: str = "f32"
     fuse_ag_matmul: bool = True
     fuse_matmul_rs: bool = True
     fuse_moe_a2a: bool = True
@@ -85,19 +103,38 @@ class FusionConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ParallelContext:
-    """Mesh + axis-role assignment threaded through the model zoo."""
+    """Mesh + axis-role assignment threaded through the model zoo.
+
+    ``hw`` is the hierarchical per-mesh-axis hardware model every
+    ``tune_*`` call resolves its link constants from: a multi-pod mesh
+    assigns the ``pod`` axis the DCN link class, so rings over different
+    axes autotune against the bandwidth/latency they actually see."""
 
     mesh: Mesh
     dp_axes: tuple[str, ...] = ("data",)
     tp_axis: str = "model"
     fusion: FusionConfig = dataclasses.field(default_factory=FusionConfig)
+    hw: "MeshHardwareModel" = dataclasses.field(
+        default_factory=_default_mesh_hw)
 
     @classmethod
-    def from_mesh(cls, mesh: Mesh, fusion: FusionConfig | None = None) -> "ParallelContext":
+    def from_mesh(cls, mesh: Mesh, fusion: FusionConfig | None = None,
+                  hw: "MeshHardwareModel | None" = None) -> "ParallelContext":
+        from repro.core.perfmodel import MeshHardwareModel
+
         names = mesh.axis_names
         dp = tuple(n for n in names if n in ("pod", "data", "replica"))
         tp = "model" if "model" in names else names[-1]
-        return cls(mesh=mesh, dp_axes=dp, tp_axis=tp, fusion=fusion or FusionConfig())
+        if hw is None:
+            hw = MeshHardwareModel.for_mesh_axes(names)
+        return cls(mesh=mesh, dp_axes=dp, tp_axis=tp,
+                   fusion=fusion or FusionConfig(), hw=hw)
+
+    def hw_for(self, axis):
+        """Resolved flat :class:`~repro.core.perfmodel.HardwareModel` for
+        one ring axis (or the bottleneck composite for a tuple of axes —
+        the flattened-world embedding A2A)."""
+        return self.hw.for_axes(axis)
 
     # -- sizes -----------------------------------------------------------
     @property

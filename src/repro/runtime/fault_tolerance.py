@@ -34,15 +34,21 @@ class TrainSupervisor:
 
     def __init__(self, cfg: SupervisorConfig, step_fn: Callable,
                  state_shardings=None, skew_scheduler=None,
-                 per_rank_times: Callable | None = None):
+                 per_rank_times: Callable | str | None = None):
         """``skew_scheduler`` (a :class:`~repro.runtime.straggler.
         SkewScheduler`) closes the Fig. 14 loop: each step's wall time is
         fed to it (expanded to a per-rank vector by ``per_rank_times`` —
-        on a multi-host cluster a process all-gather, by default the local
-        time replicated, which keeps the rotation at 0) and on a bucket
-        change the supervisor swaps in the re-jitted step for the new
-        schedule.  When set, it also *owns* the step function —
-        ``step_fn`` is ignored in favor of ``skew_scheduler.fn()``."""
+        by default the local time replicated, which keeps the rotation at
+        0) and on a bucket change the supervisor swaps in the re-jitted
+        step for the new schedule.  When set, it also *owns* the step
+        function — ``step_fn`` is ignored in favor of
+        ``skew_scheduler.fn()``.
+
+        ``per_rank_times="process"`` installs the multi-host provider: a
+        process all-gather of this supervisor's own straggler-monitor
+        EWMA (:class:`~repro.runtime.straggler.ProcessTelemetry`), so the
+        estimator runs on *measured* cross-rank times instead of injected
+        ones."""
         self.cfg = cfg
         self.step_fn = step_fn
         self.state_shardings = state_shardings
@@ -50,6 +56,15 @@ class TrainSupervisor:
                                          async_save=cfg.async_save)
         self.straggler = StragglerMonitor()
         self.skew_scheduler = skew_scheduler
+        if per_rank_times == "process":
+            if skew_scheduler is None:
+                raise ValueError("per_rank_times='process' needs a "
+                                 "skew_scheduler (its estimator defines "
+                                 "the world size)")
+            from repro.runtime.straggler import ProcessTelemetry
+
+            per_rank_times = ProcessTelemetry(
+                self.straggler, skew_scheduler.estimator.world)
         self.per_rank_times = per_rank_times
         if skew_scheduler is not None:
             self.step_fn = skew_scheduler.fn()

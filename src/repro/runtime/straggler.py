@@ -20,10 +20,12 @@ loop at run time:
      changed bucket triggers exactly one re-jit and returning to a
      previously seen bucket costs nothing.
 
-On a multi-host deployment the per-rank times in step 2 come from a
-process-level all-gather (e.g. ``multihost_utils.process_allgather`` of
-the local ``StragglerMonitor`` EWMA); single-process harnesses inject
-them directly (see ``benchmarks/bench_skew.py``).
+On a multi-host deployment the per-rank times in step 2 come from
+:class:`ProcessTelemetry` — a process-level all-gather
+(``multihost_utils.process_allgather``) of the local
+``StragglerMonitor`` EWMA, expanded to the per-device vector the
+estimator wants; single-process harnesses inject times directly (see
+``benchmarks/bench_skew.py``).
 """
 from __future__ import annotations
 
@@ -198,6 +200,54 @@ class SkewEstimator:
         if self.ewma is None:
             return 0.0
         return skew_statistic(self._axis_times(axis))
+
+
+def _default_process_allgather(local: float) -> list[float]:
+    """All-gather one scalar across processes, ordered by process index.
+    Single-process (the CI/laptop case) short-circuits without touching
+    the distributed runtime."""
+    import jax
+
+    if jax.process_count() == 1:
+        return [float(local)]
+    import numpy as np
+    from jax.experimental import multihost_utils
+
+    arr = multihost_utils.process_allgather(np.float32(local))
+    return [float(v) for v in np.asarray(arr).reshape(-1)]
+
+
+class ProcessTelemetry:
+    """Multi-host ``per_rank_times`` provider for :class:`~repro.runtime.
+    fault_tolerance.TrainSupervisor`: all-gathers the local
+    :class:`StragglerMonitor` EWMA across processes and replicates each
+    process's time over its local devices (mesh device order is
+    process-major — ``jax.devices()`` — which is how the launchers build
+    their meshes), yielding the per-rank vector ``SkewEstimator`` reduces.
+
+    The EWMA (not the raw step time) is what travels: it is already
+    jitter-smoothed, so one slow GC pause on a healthy host cannot flip
+    the schedule bucket.  Before the monitor has any sample the current
+    step time stands in.  ``allgather`` is injectable for tests (and for
+    runtimes with their own gather primitive).
+    """
+
+    def __init__(self, monitor: StragglerMonitor, world: int, *,
+                 allgather: Callable[[float], Sequence[float]] | None = None):
+        self.monitor = monitor
+        self.world = int(world)
+        self.allgather = allgather or _default_process_allgather
+
+    def __call__(self, dt: float) -> list[float]:
+        local = self.monitor.ewma if self.monitor.ewma is not None else dt
+        per_proc = [float(t) for t in self.allgather(float(local))]
+        n_proc = len(per_proc)
+        if n_proc == 0 or self.world % n_proc:
+            raise ValueError(
+                f"cannot spread {n_proc} process times over a world of "
+                f"{self.world} devices (world must be a process multiple)")
+        rep = self.world // n_proc
+        return [t for t in per_proc for _ in range(rep)]
 
 
 class SkewScheduler:

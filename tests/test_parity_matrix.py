@@ -23,11 +23,17 @@ from repro.core.fused import (allgather_matmul, embedding_all_to_all,
                               fused_expert_ffn_combine, matmul_allreduce,
                               matmul_reducescatter, moe_dispatch_all_to_all,
                               sharded_cross_entropy)
+from repro.core.perfmodel import DCN, V5E
 from repro.models.attention import context_attention
 from repro.parallel.sharding import FusionConfig
 
 F32, BF16 = np.float32, jnp.bfloat16
 TOL = {"f32": dict(rtol=3e-4, atol=3e-4), "bf16": dict(rtol=3e-2, atol=3e-2)}
+# wire-compression error bounds vs the *f32 reference*: one bf16 rounding
+# per value (plus per-hop carry requantization) stays within bf16's ~2^-8;
+# fp8 e4m3 carries ~2^-4 relative per value, accumulated over ring hops
+WIRE_TOL = {"bf16": dict(rtol=3e-2, atol=3e-2),
+            "fp8": dict(rtol=2e-1, atol=2e-1)}
 
 
 def _dense_ce(x, e, y):
@@ -169,6 +175,102 @@ def test_parity(ctx, rng, op, dtype, ragged, q):
     # scales with the accumulated magnitude — anchor atol to the ref scale
     atol = tol["atol"] * max(1.0, float(np.abs(ref).max()))
     np.testing.assert_allclose(y, ref, rtol=tol["rtol"], atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# wire-dtype axis: wire="f32" is bit-identical to the default path; the
+# compressed wires (bf16, fp8 + per-chunk scale) stay within the bounded
+# relative error of one (bf16) / a few (fp8 ring-carry) roundings
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_wire_f32_bit_identical(ctx, op):
+    """The uncompressed wire setting must not move a single bit: the
+    wire machinery is pure passthrough at wire='f32'."""
+    fused, _ = OPS[op](ctx, np.random.default_rng(0), F32, False)
+    base = np.asarray(jax.jit(lambda: fused(2))(), np.float32)
+    c2 = ctx.with_fusion(FusionConfig(wire="f32"))
+    fused2, _ = OPS[op](c2, np.random.default_rng(0), F32, False)
+    y = np.asarray(jax.jit(lambda: fused2(2))(), np.float32)
+    assert (y == base).all()
+
+
+@pytest.mark.parametrize("q", [1, 2])
+@pytest.mark.parametrize("wire", ["bf16", "fp8"])
+@pytest.mark.parametrize("op", sorted(OPS))
+def test_wire_parity_bounded(ctx, rng, op, wire, q):
+    c2 = ctx.with_fusion(FusionConfig(wire=wire))
+    fused, ref_fn = OPS[op](c2, rng, F32, False)
+    ref = _reference(op, "f32", False, ref_fn)
+    y = np.asarray(jax.jit(lambda: fused(q))(), np.float32)
+    tol = WIRE_TOL[wire]
+    atol = tol["atol"] * max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(y, ref, rtol=tol["rtol"], atol=atol)
+
+
+@pytest.mark.parametrize("wire", ["bf16", "fp8"])
+def test_wire_ring_attention_grad_parity(ctx, rng, wire):
+    B, S, Hq, Hkv, hd = 4, 64, 8, 2, 16
+    qq = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+    kk = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    vv = rng.standard_normal((B, S, Hkv, hd)).astype(np.float32)
+    co = rng.standard_normal((B, S, Hq, hd)).astype(np.float32)
+
+    def loss(mode, w=None):
+        return lambda q_, k_, v_: (context_attention(
+            ctx, q_, k_, v_, causal=True, mode=mode, q_block=16,
+            kv_block=16, chunks_per_rank=2,
+            wire=w).astype(jnp.float32) * co).sum()
+
+    gb = jax.jit(jax.grad(loss("bulk"), argnums=(0, 1, 2)))(qq, kk, vv)
+    gf = jax.jit(jax.grad(loss("fused", wire), argnums=(0, 1, 2)))(qq, kk, vv)
+    tol = WIRE_TOL[wire]
+    for a, b in zip(gf, gb):
+        atol = tol["atol"] * max(1.0, float(np.abs(np.asarray(b)).max()))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol["rtol"], atol=atol)
+
+
+@pytest.mark.parametrize("wire", ["bf16", "fp8"])
+def test_wire_ce_loss_grad_parity(ctx, rng, wire):
+    B, S, D, V = 4, 16, 32, 64
+    x = rng.standard_normal((B, S, D)).astype(np.float32)
+    e = rng.standard_normal((V, D)).astype(np.float32)
+    y = rng.integers(0, V, (B, S)).astype(np.int32)
+    g = jax.jit(jax.grad(lambda x, e: sharded_cross_entropy(
+        ctx, x, e, y, chunks_per_rank=2, wire=wire), argnums=(0, 1)))(x, e)
+    gr = jax.grad(lambda x, e: _dense_ce(x, e, y)[0], argnums=(0, 1))(x, e)
+    tol = WIRE_TOL[wire]
+    for a, b in zip(g, gr):
+        atol = tol["atol"] * max(1e-3, float(np.abs(np.asarray(b)).max()))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol["rtol"], atol=atol)
+
+
+def test_wire_auto_follows_axis_hardware_model():
+    """'auto' resolves per mesh axis: on a fast ICI axis the wire hides
+    behind compute (exactness wins -> f32); on a slow DCN axis the wire
+    is exposed and halving its bytes pays (-> bf16); fp8 joins only when
+    the link model declares support."""
+    import dataclasses
+
+    autotune.clear_cache()
+    kw = dict(dtype_bytes=4, n_dev=8, chunk_dim=4096, wire="auto")
+    fast = autotune.tune_matmul_allreduce(4096, 32768, 4096, **kw, hw=V5E)
+    slow = autotune.tune_matmul_allreduce(4096, 32768, 4096, **kw, hw=DCN)
+    assert fast.wire == "f32"
+    assert slow.wire == "bf16"
+    # once bf16 already hides the (mildly exposed) wire, fp8's extra
+    # halving is under the adoption margin — bf16 sticks even on an
+    # fp8-capable link
+    dcn8 = dataclasses.replace(DCN, fp8_wire=True)
+    slow8 = autotune.tune_matmul_allreduce(4096, 32768, 4096, **kw, hw=dcn8)
+    assert slow8.wire == "bf16"
+    # a wire-dominated workload on the same fp8-capable link does take fp8
+    deep8 = autotune.tune_matmul_allreduce(4096, 1024, 4096, **kw, hw=dcn8)
+    assert deep8.wire == "fp8"
+    # the profiles memoize under different keys (hw is in the TuneKey)
+    assert len({k.hw for k in autotune.cache_info()}) == 3
+    autotune.clear_cache()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,353 @@
+"""Wire-dtype compression: helpers, cache compat, kernels, telemetry.
+
+The cross-op numeric story (bit-identity at wire="f32", bounded error at
+bf16/fp8, per-axis "auto") lives in ``test_parity_matrix.py``; this file
+covers the plumbing around it — the cast helpers, the tune-cache's
+backward compatibility with pre-wire (and pre-``MeshHardwareModel``)
+serializations, the Pallas kernel PUT paths, the joint (q, wire)
+calibration sweep, and the multi-host straggler-telemetry provider.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.autotune import Decision, TuneKey
+from repro.core.collectives import (FP8_MAX, wire_cast, wire_itemsize,
+                                    wire_uncast)
+from repro.core.perfmodel import DCN, V5E, MeshHardwareModel, resolve_hw
+
+
+# ---------------------------------------------------------------------------
+# cast helpers
+# ---------------------------------------------------------------------------
+def test_wire_cast_passthrough_identity():
+    x = jnp.arange(8, dtype=jnp.float32)
+    assert wire_cast(x, "f32") is x
+    xb = x.astype(jnp.bfloat16)
+    # never widen: a bf16 payload under a bf16 wire is untouched
+    assert wire_cast(xb, "bf16") is xb
+    # integer payloads stay exact under any wire
+    xi = jnp.arange(8, dtype=jnp.int32)
+    assert wire_cast(xi, "fp8") is xi
+
+
+def test_wire_cast_bf16_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(64),
+                    jnp.float32)
+    p = wire_cast(x, "bf16")
+    assert p.dtype == jnp.bfloat16
+    y = wire_uncast(p, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=8e-3)
+
+
+def test_wire_cast_fp8_scale_rides_alongside():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(64) * 100,
+                    jnp.float32)
+    p = wire_cast(x, "fp8")
+    assert isinstance(p, tuple)
+    q, scale = p
+    assert q.dtype == jnp.float8_e4m3fn and scale.shape == (1,)
+    # per-chunk max-abs scaling: the largest value maps to the fp8 max
+    np.testing.assert_allclose(float(scale[0]),
+                               float(jnp.abs(x).max()) / FP8_MAX, rtol=1e-6)
+    y = wire_uncast(p, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=0.13,
+                               atol=0.13 * float(jnp.abs(x).max()))
+
+
+def test_wire_cast_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown wire dtype"):
+        wire_cast(jnp.zeros(4), "int4")
+
+
+def test_wire_itemsize_never_widens():
+    assert wire_itemsize("f32", 4) == 4
+    assert wire_itemsize("bf16", 4) == 2
+    assert wire_itemsize("bf16", 2) == 2
+    assert wire_itemsize("fp8", 2) == 1
+    assert wire_itemsize("fp8", 1) == 1
+
+
+# ---------------------------------------------------------------------------
+# hierarchical hardware model
+# ---------------------------------------------------------------------------
+def test_mesh_hardware_model_per_axis_and_bottleneck():
+    hw = MeshHardwareModel.for_mesh_axes(("pod", "data", "model"))
+    assert hw.axis("pod").ici_bw == DCN.ici_bw
+    assert hw.axis("model").ici_bw == V5E.ici_bw
+    assert hw.axis("never_heard_of") == V5E
+    # a world ring crossing every axis is governed by the slowest link
+    world = hw.for_axes(("pod", "data", "model"))
+    assert world.ici_bw == DCN.ici_bw
+    assert world.ici_lat == max(DCN.ici_lat, V5E.ici_lat)
+    # fp8 on the composite requires every crossed link class to take it
+    hw8 = MeshHardwareModel.from_mapping(
+        {"pod": dataclasses.replace(DCN, fp8_wire=True)},
+        default=dataclasses.replace(V5E, fp8_wire=True))
+    assert hw8.for_axes(("pod", "model")).fp8_wire
+    assert not hw.for_axes(("pod", "model")).fp8_wire
+
+
+def test_resolve_hw_accepts_flat_and_hierarchical():
+    assert resolve_hw(V5E, "anything") == V5E
+    hw = MeshHardwareModel.for_mesh_axes(("pod", "model"))
+    assert resolve_hw(hw, "pod") == DCN
+    assert resolve_hw(hw, None) == V5E
+
+
+def test_parallel_context_carries_mesh_hw(ctx):
+    # the (data, model) host mesh has no pod axis: every ring sees ICI
+    assert ctx.hw_for("model") == V5E
+    assert ctx.hw_for(("data", "model")).ici_bw == V5E.ici_bw
+
+
+# ---------------------------------------------------------------------------
+# tune-cache compat: pre-wire and pre-MeshHardwareModel serializations
+# ---------------------------------------------------------------------------
+def test_cache_roundtrip_preserves_wire_decision(tmp_path):
+    autotune.clear_cache()
+    kw = dict(shape=(512, 1024, 2048), dtype_bytes=4, n_dev=8,
+              flops=2e11, hbm_bytes=1e7, wire_bytes=4e8)
+    dec = autotune.choose_overlap("op_w", **kw, hw=DCN, wire="auto")
+    assert dec.wire == "bf16"  # slow axis: compression pays
+    path = str(tmp_path / "cache.json")
+    autotune.save_cache(path)
+    autotune.clear_cache()
+    assert autotune.load_cache(path) == 1
+    (key,) = autotune.cache_info()
+    assert key.wire == "auto"
+    assert autotune.cache_info()[key] == dec
+    # the reloaded entry is served for the same request
+    assert autotune.choose_overlap("op_w", **kw, hw=DCN, wire="auto") == dec
+    autotune.clear_cache()
+
+
+def test_legacy_cache_without_wire_loads_with_defaults(tmp_path):
+    """A cache serialized before TuneKey.wire / the Decision wire field /
+    HardwareModel.fp8_wire existed (the PR 3 'skew' pattern) must load
+    with defaults instead of raising — including a foreign hw field this
+    build does not know."""
+    autotune.clear_cache()
+    q = autotune.choose_chunks_per_rank(
+        "op_legacy", shape=(64, 64), dtype_bytes=4, n_dev=8, flops=1e9,
+        hbm_bytes=1e6, wire_bytes=1e6, divisor_of=64)
+    path = str(tmp_path / "legacy.json")
+    autotune.save_cache(path)
+    with open(path) as f:
+        blob = json.load(f)
+    for e in blob["entries"]:
+        del e["key"]["wire"]          # pre-wire key
+        del e["key"]["fixed_q"]       # pre-wire pinned-q field
+        del e["wire"]                 # pre-wire decision value
+        del e["key"]["hw"]["fp8_wire"]  # flat pre-MeshHardwareModel dict
+        e["key"]["hw"]["nvlink_bw"] = 1e12  # foreign field: dropped
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    autotune.clear_cache()
+    assert autotune.load_cache(path) == 1
+    (key,) = autotune.cache_info()
+    assert key.wire == "f32" and key.hw == V5E
+    assert autotune.cache_info()[key] == Decision(q, "f32")
+    # the defaulted entry is a hit for the pre-wire call signature
+    assert autotune.choose_chunks_per_rank(
+        "op_legacy", shape=(64, 64), dtype_bytes=4, n_dev=8, flops=1e9,
+        hbm_bytes=1e6, wire_bytes=1e6, divisor_of=64) == q
+    autotune.clear_cache()
+
+
+def test_pinned_q_decisions_do_not_collide():
+    """A pinned chunks_per_rank under a wire-only sweep keys its own
+    cache slot: pins of different values (and the free sweep) must not
+    answer for each other (regression: fixed_q used to be absent from
+    TuneKey, so the second pinned call returned the first pin's q)."""
+    autotune.clear_cache()
+    kw = dict(shape=(512, 1024, 2048), dtype_bytes=4, n_dev=8,
+              flops=2e11, hbm_bytes=1e7, wire_bytes=4e8, divisor_of=512,
+              hw=DCN, wire="auto")
+    d2 = autotune.choose_overlap("op_pin", **kw, fixed_q=2)
+    d4 = autotune.choose_overlap("op_pin", **kw, fixed_q=4)
+    free = autotune.choose_overlap("op_pin", **kw)
+    assert d2.q == 2 and d4.q == 4
+    assert free == autotune.choose_overlap("op_pin", **kw)  # own slot
+    # a pinned key's calibration ladder keeps the pin, sweeping only wire
+    key2 = next(k for k in autotune.cache_info() if k.fixed_q == 2)
+    assert {d.q for d in autotune.calibration_candidates(key2)} == {2}
+    autotune.clear_cache()
+
+
+def test_ring_all_gather_compute_wire():
+    """The generic AG-consume combinator honors the wire knob: exact at
+    f32, bounded error at bf16/fp8 (the forwarded shard rounds once)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+    from repro.core.collectives import ring_all_gather_compute
+
+    mesh = make_mesh((8,), ("model",))
+    x = np.random.default_rng(0).standard_normal((8, 4)).astype(np.float32)
+
+    def run(wire):
+        def local(xl):
+            def consume(src, shard, acc):
+                return acc + shard.astype(jnp.float32).sum()
+
+            return ring_all_gather_compute(
+                xl, consume, "model", out_init=jnp.float32(0.0),
+                wire=wire)[None]
+
+        return float(shard_map(local, mesh=mesh, in_specs=(P("model"),),
+                               out_specs=P("model"), check_vma=False)(
+                                   jnp.asarray(x))[0])
+
+    exact = float(x.sum())
+    assert run("f32") == pytest.approx(exact, rel=1e-6)
+    assert run("bf16") == pytest.approx(exact, rel=2e-2, abs=2e-2)
+    assert run("fp8") == pytest.approx(exact, rel=2e-1, abs=2e-1)
+
+
+def test_calibration_candidates_cover_wire_ladder():
+    key = TuneKey("matmul_allreduce", (8, 8, 8), 4, 8, 64, 8,
+                  dataclasses.replace(DCN, fp8_wire=True), 0, "auto")
+    cands = autotune.calibration_candidates(key, 2)
+    assert set(cands) == {Decision(1, "f32"), Decision(2, "f32"),
+                          Decision(1, "bf16"), Decision(2, "bf16"),
+                          Decision(1, "fp8"), Decision(2, "fp8")}
+    pinned = dataclasses.replace(key, wire="bf16")
+    assert set(autotune.calibration_candidates(pinned, 2)) == {
+        Decision(1, "bf16"), Decision(2, "bf16")}
+
+
+def test_measured_calibration_sweeps_wire_jointly(ctx, rng):
+    """A hot key recorded under wire='auto' is re-scored over the joint
+    (q, wire) ladder and the measured winner lands in the cache."""
+    from repro.core.calibrate import measured_calibration_pass
+    from repro.core.matmul_allreduce import matmul_allreduce
+    from repro.parallel.sharding import FusionConfig
+
+    autotune.clear_cache()
+    c2 = ctx.with_fusion(FusionConfig(granularity="auto", wire="auto"))
+    x = rng.standard_normal((4, 16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    jax.eval_shape(lambda: matmul_allreduce(c2, x, w, mode="fused"))
+    hot = list(autotune.cache_info())
+    assert len(hot) == 1 and hot[0].wire == "auto"
+    rep = measured_calibration_pass(c2, iters=1, warmup=1, max_q=2)
+    (key,) = hot
+    assert key in rep
+    winner = autotune.cache_info()[key]
+    assert isinstance(winner, Decision)
+    assert winner in autotune.calibration_candidates(key, 2)
+    # measured times exist for both wire dtypes of the auto ladder
+    assert {d.wire for d in rep[key]["times"]} >= {"f32", "bf16"}
+    autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel PUT paths (interpret mode, 1-D mesh)
+# ---------------------------------------------------------------------------
+def test_gemv_allreduce_kernel_bf16_wire(ctx1d, rng):
+    from repro.kernels.fused_gemv_allreduce.ops import fused_matmul_allreduce
+
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    ref = x @ w
+    y32 = np.asarray(fused_matmul_allreduce(ctx1d, x, w, wire="f32"))
+    yb = np.asarray(fused_matmul_allreduce(ctx1d, x, w, wire="bf16"))
+    np.testing.assert_allclose(y32, ref, rtol=3e-4, atol=3e-4)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(yb, ref, rtol=3e-2, atol=3e-2 * scale)
+    # fp8 is an XLA-path format: the shard wrapper clamps it to bf16
+    y8 = np.asarray(fused_matmul_allreduce(ctx1d, x, w, wire="fp8"))
+    np.testing.assert_allclose(y8, yb)
+
+
+def test_gemm_a2a_kernel_bf16_wire(ctx1d, rng):
+    from repro.core.fused import fused_expert_ffn_combine
+    from repro.kernels.fused_gemm_a2a.ops import fused_gemm_a2a
+
+    B, n_ep, E, C, D, F = 2, 8, 8, 4, 16, 24
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(np.float32)
+    wu = rng.standard_normal((E, D, F)).astype(np.float32)
+    wg = rng.standard_normal((E, D, F)).astype(np.float32)
+    wd = rng.standard_normal((E, F, D)).astype(np.float32)
+    ref = np.asarray(jax.jit(lambda: fused_expert_ffn_combine(
+        ctx1d, xd, wu, wg, wd, act=jax.nn.silu, mode="bulk"))())
+    yb = np.asarray(fused_gemm_a2a(ctx1d, xd, wu, wg, wd, act=jax.nn.silu,
+                                   wire="bf16"))
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(yb, ref, rtol=3e-2, atol=3e-2 * scale)
+
+
+def test_kernel_rejects_fp8_wire():
+    from repro.kernels.fused_gemv_allreduce.kernel import (
+        fused_matmul_allreduce_pallas)
+
+    with pytest.raises(ValueError, match="f32.*bf16|bf16.*f32"):
+        fused_matmul_allreduce_pallas(
+            jnp.zeros((2, 8)), jnp.zeros((8, 8)), jnp.int32(0), n_dev=1,
+            axis_name="model", wire="fp8")
+
+
+# ---------------------------------------------------------------------------
+# multi-host telemetry provider (ROADMAP leftover)
+# ---------------------------------------------------------------------------
+def test_process_telemetry_single_process_replicates_ewma():
+    from repro.runtime.straggler import ProcessTelemetry, StragglerMonitor
+
+    mon = StragglerMonitor()
+    mon.record(0.1)
+    mon.record(0.2)
+    pt = ProcessTelemetry(mon, world=8)
+    times = pt(0.5)
+    assert len(times) == 8 and len(set(times)) == 1
+    assert times[0] == pytest.approx(mon.ewma)
+
+
+def test_process_telemetry_spreads_process_gather_over_devices():
+    from repro.runtime.straggler import ProcessTelemetry, StragglerMonitor
+
+    mon = StragglerMonitor()
+    mon.record(0.1)
+    # injected gather: two processes, the second 2x slower
+    pt = ProcessTelemetry(mon, world=8, allgather=lambda t: [t, 2 * t])
+    times = pt(0.1)
+    assert times == [0.1] * 4 + [0.2] * 4
+    bad = ProcessTelemetry(mon, world=8, allgather=lambda t: [t] * 3)
+    with pytest.raises(ValueError, match="process multiple"):
+        bad(0.1)
+
+
+def test_process_telemetry_falls_back_to_dt_before_first_sample():
+    from repro.runtime.straggler import ProcessTelemetry, StragglerMonitor
+
+    pt = ProcessTelemetry(StragglerMonitor(), world=4)
+    assert pt(0.25) == [0.25] * 4
+
+
+def test_supervisor_process_sentinel_installs_provider(tmp_path):
+    from repro.runtime.fault_tolerance import (SupervisorConfig,
+                                               TrainSupervisor)
+    from repro.runtime.straggler import (ProcessTelemetry, SkewEstimator,
+                                         SkewScheduler)
+
+    est = SkewEstimator({"ring": 8}, link_scales={"ring": [1.0] * 8})
+    sched = SkewScheduler(lambda s: (lambda state, batch: (state, batch)),
+                          est, axis="ring")
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path)),
+        step_fn=None, skew_scheduler=sched, per_rank_times="process")
+    assert isinstance(sup.per_rank_times, ProcessTelemetry)
+    # the provider reads the supervisor's own monitor
+    assert sup.per_rank_times.monitor is sup.straggler
+    assert sup.per_rank_times.world == 8
+    sup.straggler.record(0.125)
+    sup._feed_skew(0.125)
+    assert est.ewma == [0.125] * 8
+    with pytest.raises(ValueError, match="skew_scheduler"):
+        TrainSupervisor(SupervisorConfig(checkpoint_dir=str(tmp_path)),
+                        step_fn=None, per_rank_times="process")
