@@ -24,6 +24,7 @@ BENCHES = [
     ("bench_skew", "Fig. 14 measured-skew feedback loop"),
     ("bench_granularity", "Fig. 13 overlap granularity"),
     ("bench_wire", "compressed-wire rings (bf16/fp8 payloads)"),
+    ("bench_chaos", "chaos recovery + degraded-mode throughput"),
     ("bench_scaleout_sim", "Fig. 15 128-node DLRM scale-out sim"),
     ("bench_kernels", "device-initiated kernel comparison"),
 ]

@@ -1,11 +1,14 @@
 """Checkpoint lifecycle: keep-k GC, latest discovery, resume."""
 from __future__ import annotations
 
+import logging
 import os
 import re
 import shutil
 
 from repro.checkpoint.checkpointer import AsyncCheckpointer, restore_checkpoint
+
+log = logging.getLogger("repro.checkpoint")
 
 _STEP_RE = re.compile(r"step_(\d{8})$")
 
@@ -45,11 +48,22 @@ class CheckpointManager:
             self._async.wait()
 
     def restore_latest(self, target_tree, shardings=None):
+        """Restore the newest readable checkpoint.
+
+        A crash mid-write leaves only a ``.tmp`` dir (the atomic rename
+        never happened), but a finalized checkpoint can still rot on disk
+        (truncated manifest, missing/garbled array file).  Walk newest to
+        oldest and fall back past any step that fails to load, so one bad
+        entry does not brick the run."""
         self.wait()
-        path = self.latest_path()
-        if path is None:
-            return None
-        return restore_checkpoint(path, target_tree, shardings)
+        for step in reversed(self.all_steps()):
+            path = os.path.join(self.directory, f"step_{step:08d}")
+            try:
+                return restore_checkpoint(path, target_tree, shardings)
+            except Exception as e:
+                log.warning("checkpoint %s unreadable (%s); trying previous",
+                            path, e)
+        return None
 
     def _gc(self):
         steps = self.all_steps()

@@ -24,6 +24,7 @@ from repro.core.autotune import (resolve_overlap, tune_allgather_matmul,
 from repro.core.collectives import (ring_permute,
                                     ring_reduce_scatter_compute, wire_cast,
                                     wire_uncast)
+from repro.core.degrade import degrade_mode
 from repro.core.scheduling import sub_chunk_service_order
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -48,6 +49,7 @@ def allgather_matmul(ctx: ParallelContext, x, w, *, mode: str | None = None,
     uses ``ctx.fusion.wire``.
     """
     mode = mode or ctx.fusion.resolve("ag_matmul")
+    mode = degrade_mode("allgather_matmul", x.shape + w.shape, mode)
     skew = ctx.fusion.skew if skew is None else int(skew)
     axis, n = ctx.tp_axis, ctx.tp
     b, s, k = x.shape
@@ -109,6 +111,7 @@ def matmul_reducescatter(ctx: ParallelContext, x, w, *, mode: str | None = None,
     compresses the ring carry per hop with f32 local accumulation
     (``None`` uses ``ctx.fusion.wire``)."""
     mode = mode or ctx.fusion.resolve("matmul_rs")
+    mode = degrade_mode("matmul_reducescatter", x.shape + w.shape, mode)
     schedule = schedule or ctx.fusion.schedule
     skew = ctx.fusion.skew if skew is None else int(skew)
     axis, n = ctx.tp_axis, ctx.tp

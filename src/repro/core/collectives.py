@@ -27,6 +27,31 @@ def _ring_perm(n: int, shift: int = 1):
     return [(j, (j + shift) % n) for j in range(n)]
 
 
+# ---------------------------------------------------------------------------
+# wire-fault injection hook (chaos engineering)
+# ---------------------------------------------------------------------------
+# A trace-time hook applied to every payload leaf as it goes on the wire
+# (ring hops and the phase-2 all-gather).  ``None`` — the default — is a
+# single Python identity check at *trace* time, so the lowered HLO of a
+# clean build is bit-identical whether or not chaos is importable.  The
+# chaos runtime (:mod:`repro.runtime.chaos`) installs a corruptor here to
+# reproduce flipped-link / NaN-payload faults inside the real rings.
+_WIRE_FAULT_HOOK = None
+
+
+def set_wire_fault_hook(hook):
+    """Install (or clear, with ``None``) the wire-fault hook.  Returns the
+    previous hook so scoped injectors can restore it."""
+    global _WIRE_FAULT_HOOK
+    prev = _WIRE_FAULT_HOOK
+    _WIRE_FAULT_HOOK = hook
+    return prev
+
+
+def _wire_fault(leaf):
+    return leaf if _WIRE_FAULT_HOOK is None else _WIRE_FAULT_HOOK(leaf)
+
+
 def ring_permute(x, axis_name: str, n: int, shift: int = 1):
     """ppermute with the payload dtype pinned.
 
@@ -36,8 +61,8 @@ def ring_permute(x, axis_name: str, n: int, shift: int = 1):
     the wire.  Accepts a pytree payload (the fp8 wire format rides a
     ``(values, scale)`` pair), barriering and permuting every leaf."""
     return jax.tree.map(
-        lambda leaf: lax.ppermute(optimization_barrier(leaf), axis_name,
-                                  _ring_perm(n, shift)), x)
+        lambda leaf: lax.ppermute(optimization_barrier(_wire_fault(leaf)),
+                                  axis_name, _ring_perm(n, shift)), x)
 
 
 # ---------------------------------------------------------------------------
@@ -105,11 +130,13 @@ def all_gather_wire(x, axis_name: str, n: int, *, axis: int = 0,
     the wire dtype per source chunk (the phase-2 all-gather of the fused
     AllReduce).  ``wire="f32"`` is the exact pre-wire gather."""
     if _passthrough(x, wire):
-        return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+        return lax.all_gather(_wire_fault(x), axis_name, axis=axis,
+                              tiled=True)
     p = wire_cast(x, wire)
     if isinstance(p, tuple):
         q, scale = p
-        qg = lax.all_gather(optimization_barrier(q), axis_name, axis=0,
+        qg = lax.all_gather(optimization_barrier(_wire_fault(q)), axis_name,
+                            axis=0,
                             tiled=False)          # [n, ...chunk]
         sg = lax.all_gather(scale, axis_name, axis=0, tiled=False)  # [n, 1]
         shape = (n,) + (1,) * q.ndim
@@ -117,8 +144,8 @@ def all_gather_wire(x, axis_name: str, n: int, *, axis: int = 0,
         parts = [lax.index_in_dim(vals, s, axis=0, keepdims=False)
                  for s in range(n)]
         return jnp.concatenate(parts, axis=axis).astype(x.dtype)
-    g = lax.all_gather(optimization_barrier(p), axis_name, axis=axis,
-                       tiled=True)
+    g = lax.all_gather(optimization_barrier(_wire_fault(p)), axis_name,
+                       axis=axis, tiled=True)
     return g.astype(x.dtype)
 
 

@@ -1,0 +1,156 @@
+"""Graceful degradation: quarantine bad fused decisions, fall back to bulk.
+
+A fused kernel/wire combination that keeps failing (collective timeouts,
+NaN losses from a poisoned ring) should cost throughput, not the job.
+This module tracks failures per ``(op, shape)`` decision key — the same
+granularity the autotuner memoizes under — and after ``max_failures``
+strikes *quarantines* the key: every fused-op call site consults
+:func:`degrade_mode` at trace time and a quarantined key resolves to the
+bulk (``psum`` / ``all_to_all``) reference path instead of the fused one.
+
+Quarantine is not forever: after ``cooldown`` healthy steps the key is
+released on probation and the fused path is re-probed; a failure while on
+probation re-quarantines with the cool-down scaled by
+``cooldown_backoff`` (capped), so a persistently bad combo converges to
+rarely-probed bulk execution while a transient blip recovers quickly.
+
+Mode decisions are baked into the lowered HLO, so a policy change only
+takes effect at the next trace — the supervisor watches
+:meth:`DegradationPolicy.consume_dirty` and re-jits (see
+``TrainSupervisor.rebuild_step``).  With no policy installed the hook is
+a module-level ``None`` check at trace time: zero cost, identical HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Sequence
+
+log = logging.getLogger("repro.core.degrade")
+
+DegradeKey = tuple  # (op: str, shape: tuple[int, ...])
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    max_failures: int = 2        # strikes before quarantine
+    cooldown: int = 50           # healthy steps before a re-probe
+    cooldown_backoff: float = 2.0  # growth after a failed re-probe
+    max_cooldown: int = 2000
+
+
+class DegradationPolicy:
+    """Per-(op, shape) failure ledger -> fused/bulk mode decisions."""
+
+    def __init__(self, cfg: DegradeConfig | None = None):
+        self.cfg = cfg or DegradeConfig()
+        self._strikes: dict[DegradeKey, int] = {}
+        self._quarantine: dict[DegradeKey, int] = {}  # key -> steps left
+        self._sentences: dict[DegradeKey, int] = {}   # key -> times jailed
+        self._active: set[DegradeKey] = set()  # keys in the current trace
+        self.demotions = 0       # fused->bulk resolutions served
+        self._dirty = False
+
+    # -- trace-time surface (called from the fused-op call sites) --------
+    def effective_mode(self, op: str, shape: Sequence[int], mode: str) -> str:
+        key = (str(op), tuple(int(s) for s in shape))
+        self._active.add(key)
+        if mode != "bulk" and key in self._quarantine:
+            self.demotions += 1
+            return "bulk"
+        return mode
+
+    # -- runtime surface (called from the supervisor / chaos harness) ----
+    def record_failure(self, key: DegradeKey | None = None) -> list[DegradeKey]:
+        """One strike against ``key`` — or, with ``None``, against every
+        key active in the current trace (a NaN loss cannot name the ring
+        that poisoned it, so all fused decisions in the step are blamed).
+        Returns the keys newly quarantined."""
+        keys = [key] if key is not None else sorted(self._active)
+        jailed = []
+        for k in keys:
+            if k in self._quarantine:
+                continue
+            self._strikes[k] = self._strikes.get(k, 0) + 1
+            if self._strikes[k] < self.cfg.max_failures:
+                continue
+            n = self._sentences.get(k, 0)
+            cd = min(self.cfg.max_cooldown,
+                     int(self.cfg.cooldown * self.cfg.cooldown_backoff ** n))
+            self._quarantine[k] = cd
+            self._sentences[k] = n + 1
+            self._strikes[k] = 0
+            self._dirty = True
+            jailed.append(k)
+            log.warning("quarantining fused decision %s for %d healthy "
+                        "steps (sentence %d); falling back to bulk", k, cd,
+                        n + 1)
+        return jailed
+
+    def record_healthy(self) -> list[DegradeKey]:
+        """One healthy step: cool every quarantined key down, releasing
+        those whose sentence expired (re-probe on the next trace).
+        Returns the released keys."""
+        released = []
+        for k in list(self._quarantine):
+            self._quarantine[k] -= 1
+            if self._quarantine[k] <= 0:
+                del self._quarantine[k]
+                self._dirty = True
+                released.append(k)
+                log.info("releasing %s from quarantine; re-probing the "
+                         "fused path", k)
+        return released
+
+    def quarantined(self, op: str, shape: Sequence[int]) -> bool:
+        return (str(op), tuple(int(s) for s in shape)) in self._quarantine
+
+    def consume_dirty(self) -> bool:
+        """True exactly once after the quarantine set changed — the
+        caller's cue to re-jit so the new mode decisions take effect."""
+        d, self._dirty = self._dirty, False
+        return d
+
+    def begin_trace(self) -> None:
+        """Reset the active-key ledger before a fresh trace (optional —
+        keys accumulate otherwise, which is safe but blames stale ops)."""
+        self._active.clear()
+
+    def summary(self) -> dict:
+        return {
+            "quarantined": {f"{op}{list(shape)}": left
+                            for (op, shape), left in self._quarantine.items()},
+            "strikes": {f"{op}{list(shape)}": n
+                        for (op, shape), n in self._strikes.items() if n},
+            "sentences": sum(self._sentences.values()),
+            "demotions": self.demotions,
+            "active_keys": len(self._active),
+        }
+
+
+# ---------------------------------------------------------------------------
+# module-level installation (mirrors the wire-fault hook in collectives)
+# ---------------------------------------------------------------------------
+_POLICY: DegradationPolicy | None = None
+
+
+def set_degradation_policy(policy: DegradationPolicy | None):
+    """Install (or clear) the process-wide policy.  Returns the previous
+    one so tests can scope their installs."""
+    global _POLICY
+    prev = _POLICY
+    _POLICY = policy
+    return prev
+
+
+def get_degradation_policy() -> DegradationPolicy | None:
+    return _POLICY
+
+
+def degrade_mode(op: str, shape: Sequence[int], mode: str) -> str:
+    """The fused-op call-site hook: demote ``mode`` to ``"bulk"`` when the
+    installed policy has quarantined this (op, shape) decision.  With no
+    policy installed this is a single ``None`` check at trace time."""
+    if _POLICY is None:
+        return mode
+    return _POLICY.effective_mode(op, shape, mode)

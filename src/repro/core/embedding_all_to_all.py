@@ -31,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.autotune import resolve_overlap, tune_all_to_all
 from repro.core.collectives import bulk_all_to_all, direct_all_to_all_compute
+from repro.core.degrade import degrade_mode
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
 
@@ -75,6 +76,7 @@ def embedding_all_to_all(
     (a multi-pod world ring inherits the DCN constants).
     """
     mode = mode or ctx.fusion.resolve("embed_a2a")
+    mode = degrade_mode("embedding_a2a", indices.shape + tables.shape, mode)
     schedule = schedule or ctx.fusion.schedule
     skew = ctx.fusion.skew_world if skew is None else int(skew)
     world_axes = tuple(ctx.dp_axes) + (ctx.tp_axis,)

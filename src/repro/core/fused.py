@@ -32,6 +32,13 @@ from repro.core.autotune import (
     tune_ce_ring,
     tune_ring_attention,
 )
+from repro.core.degrade import (
+    DegradationPolicy,
+    DegradeConfig,
+    degrade_mode,
+    get_degradation_policy,
+    set_degradation_policy,
+)
 from repro.core.perfmodel import DCN, V5E, HardwareModel, MeshHardwareModel
 from repro.core.calibrate import measured_calibration_pass
 from repro.core.scheduling import (
@@ -61,6 +68,11 @@ __all__ = [
     "all_gather_wire",
     "wire_cast",
     "wire_uncast",
+    "DegradationPolicy",
+    "DegradeConfig",
+    "degrade_mode",
+    "get_degradation_policy",
+    "set_degradation_policy",
     "Decision",
     "choose_chunks_per_rank",
     "choose_overlap",

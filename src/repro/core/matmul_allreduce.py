@@ -35,6 +35,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.autotune import resolve_overlap, tune_matmul_allreduce
 from repro.core.collectives import (all_gather_wire,
                                     ring_reduce_scatter_compute)
+from repro.core.degrade import degrade_mode
 from repro.parallel.sharding import ParallelContext
 from repro.compat import axis_size, shard_map
 
@@ -95,6 +96,7 @@ def matmul_allreduce(
     ``None`` uses ``ctx.fusion.wire``.
     """
     mode = mode or ctx.fusion.resolve("matmul_rs")
+    mode = degrade_mode("matmul_allreduce", x.shape[:-1] + w.shape, mode)
     schedule = schedule or ctx.fusion.schedule
     skew = ctx.fusion.skew if skew is None else int(skew)
     axis = ctx.tp_axis

@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.autotune import resolve_overlap, tune_all_to_all
 from repro.core.collectives import bulk_all_to_all, direct_all_to_all_compute
+from repro.core.degrade import degrade_mode
 from repro.core.scheduling import ring_offsets
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -70,6 +71,7 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     token; the locally-consumed block stays exact).
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
+    mode = degrade_mode("moe_dispatch_a2a", x.shape, mode)
     schedule = schedule or ctx.fusion.schedule
     skew = ctx.fusion.skew if skew is None else int(skew)
     axis = ctx.tp_axis
@@ -156,6 +158,8 @@ def fused_expert_ffn_combine(
     output buffers) where the backend supports it; falls back to fused.
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
+    mode = degrade_mode("moe_combine_a2a",
+                        x_dispatched.shape + w_up.shape[-1:], mode)
     schedule = schedule or ctx.fusion.schedule
     skew = ctx.fusion.skew if skew is None else int(skew)
     axis = ctx.tp_axis

@@ -32,3 +32,59 @@ def prefetch(it: Iterator, sharding_tree, depth: int = 2):
     while buf:
         yield buf.popleft()
         enqueue(1)
+
+
+class ReplayBuffer:
+    """Checkpoint-aligned batch replay for restart-on-failure training.
+
+    A restored step must see the *same* batch it saw before the failure —
+    a plain iterator cannot rewind, so restored runs silently skip ahead
+    (different data, different final state).  This wrapper buffers every
+    batch drawn since the last committed checkpoint; :meth:`rewind`
+    re-serves from a restored step and :meth:`commit` (called when a
+    checkpoint lands) drops batches that can never be replayed again, so
+    memory is bounded by ``checkpoint_every`` batches.
+
+    ``base_step`` anchors the first drawn batch to a step index (the
+    supervisor's starting step) — in-process replay only; resuming a
+    *fresh* process from a mid-run checkpoint needs a deterministic
+    iterator re-seeded past the checkpoint, which is the data source's
+    contract, not this buffer's.
+    """
+
+    def __init__(self, it: Iterator, base_step: int = 0):
+        self._it = iter(it)
+        self._buf: list = []        # batches for steps [base, base+len)
+        self._base = int(base_step)
+        self._cursor = 0            # next serve position, relative to base
+
+    @property
+    def step(self) -> int:
+        """Step index the next :meth:`next_batch` call serves."""
+        return self._base + self._cursor
+
+    def next_batch(self):
+        if self._cursor == len(self._buf):
+            self._buf.append(next(self._it))  # StopIteration propagates
+        b = self._buf[self._cursor]
+        self._cursor += 1
+        return b
+
+    def rewind(self, step: int) -> None:
+        """Re-serve from ``step`` (a restored checkpoint step)."""
+        if not self._base <= step <= self._base + len(self._buf):
+            raise ValueError(
+                f"cannot rewind to step {step}: replay window is "
+                f"[{self._base}, {self._base + len(self._buf)}] (batches "
+                f"before the last committed checkpoint are dropped)")
+        self._cursor = step - self._base
+
+    def commit(self, step: int) -> None:
+        """A checkpoint at ``step`` landed: batches for earlier steps can
+        never be replayed again and are dropped."""
+        drop = step - self._base
+        if drop <= 0:
+            return
+        self._buf = self._buf[drop:]
+        self._base = step
+        self._cursor = max(0, self._cursor - drop)

@@ -16,10 +16,13 @@ from repro.core.autotune import (add_granularity_cli_args,
                                  load_cache_if_exists, save_cache)
 from repro.core.calibrate import (add_calibration_cli_args,
                                   warmup_and_calibrate)
+from repro.core.degrade import DegradationPolicy, set_degradation_policy
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
-from repro.serve.engine import DecodeEngine, Request
+from repro.runtime.chaos import add_chaos_cli_args, build_fault_plan
+from repro.runtime.elastic import reshard_tree, shrink_context
+from repro.serve.engine import DecodeEngine, Request, serve_with_chaos
 
 
 def main():
@@ -33,6 +36,7 @@ def main():
     add_granularity_cli_args(ap)
     add_calibration_cli_args(ap)
     ap.add_argument("--production-mesh", action="store_true")
+    add_chaos_cli_args(ap)
     args = ap.parse_args()
 
     load_cache_if_exists(args.tune_cache)
@@ -46,7 +50,7 @@ def main():
     cfg = bundle.config
 
     params_p = bundle.init_params(jax.random.PRNGKey(0))
-    params, _ = split_params(params_p)
+    params, param_specs = split_params(params_p)
     decode = bundle.decode_fn(ctx)
     decode_jit = jax.jit(lambda t, c, pos: decode(params, t, c, pos))
 
@@ -59,14 +63,40 @@ def main():
         # measured decisions are read at trace time: re-jit for steady state
         decode_jit = jax.jit(lambda t, c, pos: decode(params, t, c, pos))
 
+    if args.degrade:
+        set_degradation_policy(DegradationPolicy())
+
     engine = DecodeEngine(decode_jit, bundle.init_cache, args.batch)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(2, 6)).tolist()
         engine.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
 
+    max_steps = getattr(cfg, "max_seq", 512) - 1
+    plan = build_fault_plan(args.chaos, num_steps=max_steps)
+
+    def reshard_fn(eng):
+        # drain-reshard-resume: shrink the mesh, re-jit decode for the
+        # surviving devices, replay in-flight requests through the new
+        # cache (they keep their generated tokens)
+        nonlocal ctx, params
+        ctx = shrink_context(ctx)
+        params, _ = reshard_tree(params, param_specs, ctx)
+        dec = bundle.decode_fn(ctx)
+        new_jit = jax.jit(lambda t, c, pos: dec(params, t, c, pos))
+        n = eng.reshard(new_jit, bundle.init_cache, args.batch)
+        print(f"rank lost: mesh -> {dict(ctx.mesh.shape)}, "
+              f"{n} in-flight requests re-queued")
+
     t0 = time.time()
-    finished = engine.run_until_drained(max_steps=getattr(cfg, "max_seq", 512) - 1)
+    if plan is not None:
+        finished, stats = serve_with_chaos(engine, plan,
+                                           reshard_fn=reshard_fn,
+                                           max_steps=max_steps)
+        print(f"chaos: plan {plan.summary()}; ticks {stats['ticks']}, "
+              f"dropped {stats['dropped']}, reshards {stats['reshards']}")
+    else:
+        finished = engine.run_until_drained(max_steps=max_steps)
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in finished)
     print(f"served {len(finished)} requests, {total_tokens} tokens in "

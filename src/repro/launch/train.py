@@ -22,10 +22,13 @@ from repro.core.autotune import (add_granularity_cli_args,
                                  load_cache_if_exists, save_cache)
 from repro.core.calibrate import (add_calibration_cli_args,
                                   warmup_and_calibrate)
+from repro.core.degrade import DegradationPolicy, set_degradation_policy
 from repro.data.synthetic import DLRMBatches, LMBatches
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
+from repro.runtime.chaos import add_chaos_cli_args, build_fault_plan
+from repro.runtime.elastic import reshard_tree, shrink_context
 from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
 from repro.runtime.straggler import SkewEstimator, SkewScheduler
 from repro.train.optimizer import OptimizerConfig
@@ -87,6 +90,7 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    add_chaos_cli_args(ap)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -130,6 +134,21 @@ def main():
                                    SkewEstimator(dict(ctx.mesh.shape)),
                                    axis=ctx.tp_axis)
 
+    fault_plan = build_fault_plan(args.chaos, num_steps=args.steps)
+    degradation = None
+    if args.degrade:
+        degradation = DegradationPolicy()
+        set_degradation_policy(degradation)
+
+    def on_rank_loss(st, exc):
+        # Elastic shrink: halve the dp axis, keep going on the survivors.
+        nonlocal ctx, state_sh
+        ctx = shrink_context(ctx)
+        st, state_sh = reshard_tree(st, train_state_specs(tc, param_specs),
+                                    ctx)
+        sup.state_shardings = state_sh
+        return st, build_step()
+
     sup = TrainSupervisor(
         SupervisorConfig(checkpoint_dir=args.ckpt_dir,
                          checkpoint_every=args.ckpt_every),
@@ -137,7 +156,9 @@ def main():
         # multi-host: all-gather the local monitor's EWMA per process so
         # the estimator sees measured cross-rank times (single-process
         # runs degrade to the replicated local time — rotation stays 0)
-        per_rank_times="process" if skew_sched is not None else None)
+        per_rank_times="process" if skew_sched is not None else None,
+        fault_plan=fault_plan, degradation=degradation,
+        rebuild_step=build_step, on_rank_loss=on_rank_loss)
 
     t0 = time.time()
     losses = []
@@ -152,8 +173,17 @@ def main():
                   flush=True)
 
     state, step = sup.run(state, batches, args.steps, on_metrics=on_metrics)
-    print(f"done at step {step}; loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+    span = (f"loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses
+            else "no steps run (resumed at or past num_steps)")
+    print(f"done at step {step}; {span}; "
           f"straggler stats {sup.straggler.summary()}")
+    if fault_plan is not None:
+        print(f"chaos: plan {fault_plan.summary()}; injected "
+              f"{sup.faults_injected}, restarts {sup.restarts}, "
+              f"rank losses {sup.rank_losses}, backoffs "
+              f"{[round(b, 3) for b in sup.backoffs]}")
+    if degradation is not None:
+        print(f"degradation: {degradation.summary()}")
     if args.tune_cache:
         save_cache(args.tune_cache)
     return losses

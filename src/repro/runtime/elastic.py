@@ -8,10 +8,51 @@ Divisibility is re-checked; batch sizes rescale to keep per-device load.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 import jax
-from jax.sharding import NamedSharding
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
 
 from repro.parallel.sharding import ParallelContext
+
+
+def shrink_context(ctx: ParallelContext, factor: int = 2,
+                   axis: str | None = None, fusion=None) -> ParallelContext:
+    """A smaller-world ``ParallelContext`` after losing capacity.
+
+    Shrinks one mesh axis by ``factor`` and rebuilds the mesh from the
+    first surviving devices (flattened major-to-minor order — the healthy
+    prefix of the old world).  Prefers a data-parallel axis: dp shrink
+    changes only how many batch shards run concurrently, while tp shrink
+    changes every sharded matmul's decomposition.  Falls back to the tp
+    axis when no dp axis is divisible.  The hardware model carries over
+    (link classes attach to axis *names*, which survive the resize).
+    """
+    if factor < 2:
+        raise ValueError(f"shrink factor must be >= 2, got {factor}")
+    if axis is None:
+        for cand in tuple(ctx.dp_axes) + (ctx.tp_axis,):
+            if ctx.mesh.shape[cand] % factor == 0 and \
+                    ctx.mesh.shape[cand] >= factor:
+                axis = cand
+                break
+        if axis is None:
+            raise ValueError(
+                f"no mesh axis divisible by {factor} in {dict(ctx.mesh.shape)}")
+    elif ctx.mesh.shape[axis] % factor or ctx.mesh.shape[axis] < factor:
+        raise ValueError(f"axis {axis!r} ({ctx.mesh.shape[axis]}) not "
+                         f"divisible by shrink factor {factor}")
+    names = ctx.mesh.axis_names
+    shape = [ctx.mesh.shape[n] // factor if n == axis else ctx.mesh.shape[n]
+             for n in names]
+    keep = int(np.prod(shape))
+    devices = np.asarray(ctx.mesh.devices).reshape(-1)[:keep].reshape(shape)
+    new_mesh = Mesh(devices, names)
+    if fusion is None:
+        fusion = ctx.fusion
+    return dataclasses.replace(ctx, mesh=new_mesh, fusion=fusion)
 
 
 def reshard_tree(tree, logical_specs, new_ctx: ParallelContext):
@@ -28,7 +69,19 @@ def reshard_tree(tree, logical_specs, new_ctx: ParallelContext):
 
 
 def rescale_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
-    """Keep per-device batch constant under world resize."""
+    """Keep per-device batch constant under world resize.
+
+    ``global_batch`` must shard evenly over ``old_dp`` — otherwise "per-
+    device batch" is ill-defined and the round trip does not invert
+    (e.g. batch 4 on dp 8 clamps to 1/device, returning 8 on re-grow).
+    That silent 2x batch change corrupts the learning-rate/batch coupling,
+    so it warns loudly instead of passing unnoticed."""
+    if global_batch % old_dp:
+        warnings.warn(
+            f"global batch {global_batch} does not divide over dp={old_dp}; "
+            f"per-device batch clamps to {max(1, global_batch // old_dp)} "
+            f"and the effective global batch changes under resize",
+            RuntimeWarning, stacklevel=2)
     per_dev = max(1, global_batch // old_dp)
     return per_dev * new_dp
 

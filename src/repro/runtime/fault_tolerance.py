@@ -1,23 +1,54 @@
 """Fault-tolerant training supervisor.
 
 Wraps the step loop with: periodic (async) checkpoints, automatic
-restore-and-retry on failure with bounded restarts, and a straggler
-watchdog.  On a real cluster the inner failure is a lost host /
+restore-and-retry on failure with exponentially backed-off restarts, a
+restart budget that heals after sustained healthy running, batch replay
+so a restored step sees the same data it saw before the failure, and a
+straggler watchdog.  On a real cluster the inner failure is a lost host /
 NCCL-equivalent timeout surfacing as a RuntimeError from the collective;
 here any exception from the step function triggers the same path, which
-is what the chaos tests inject.
+is what the chaos tests inject (:mod:`repro.runtime.chaos`).
+
+Failure taxonomy, mapped to recovery actions:
+
+=============  =======================================  ==================
+fault          surfaces as                              recovery
+=============  =======================================  ==================
+transient      ``CollectiveTimeout`` / any exception    backoff, restore
+               from the step                            latest checkpoint,
+                                                        replay batches
+non-finite     ``NonFiniteLoss`` (NaN/inf loss — e.g.   same as transient;
+loss           a corrupt wire payload)                  the poisoned state
+                                                        is never saved
+permanent      ``RankLost``                             ``on_rank_loss``
+rank loss                                               shrinks the mesh,
+                                                        reshards state,
+                                                        replays the step
+=============  =======================================  ==================
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
+import math
 import time
 from typing import Any, Callable, Iterator
 
+import numpy as np
+
 from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import ReplayBuffer
+from repro.runtime.chaos import CollectiveTimeout, RankLost, wire_faults
 from repro.runtime.straggler import StragglerMonitor
 
 log = logging.getLogger("repro.runtime")
+
+
+class NonFiniteLoss(RuntimeError):
+    """The step produced a NaN/inf loss — treated as a fault, not a result.
+
+    The supervisor restores from the last checkpoint instead of letting a
+    poisoned optimizer state propagate (and never checkpoints it)."""
 
 
 @dataclasses.dataclass
@@ -27,6 +58,17 @@ class SupervisorConfig:
     keep: int = 3
     max_restarts: int = 3
     async_save: bool = True
+    # Restart pacing: sleep min(backoff_max_s, backoff_base_s * 2**(k-1))
+    # * (1 + backoff_jitter * U[0,1)) before the k-th consecutive restart
+    # (jitter decorrelates a fleet of supervisors hammering shared storage).
+    backoff_base_s: float = 0.1
+    backoff_max_s: float = 30.0
+    backoff_jitter: float = 0.25
+    # Budget healing: after this many consecutive healthy steps, forgive
+    # one restart — sporadic transient faults over a long run no longer
+    # exhaust the same budget that guards against crash loops.
+    heal_after: int = 25
+    seed: int = 0
 
 
 class TrainSupervisor:
@@ -34,7 +76,11 @@ class TrainSupervisor:
 
     def __init__(self, cfg: SupervisorConfig, step_fn: Callable,
                  state_shardings=None, skew_scheduler=None,
-                 per_rank_times: Callable | str | None = None):
+                 per_rank_times: Callable | str | None = None,
+                 fault_plan=None, degradation=None,
+                 rebuild_step: Callable[[], Callable] | None = None,
+                 on_rank_loss: Callable | None = None,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         """``skew_scheduler`` (a :class:`~repro.runtime.straggler.
         SkewScheduler`) closes the Fig. 14 loop: each step's wall time is
         fed to it (expanded to a per-rank vector by ``per_rank_times`` —
@@ -48,7 +94,35 @@ class TrainSupervisor:
         process all-gather of this supervisor's own straggler-monitor
         EWMA (:class:`~repro.runtime.straggler.ProcessTelemetry`), so the
         estimator runs on *measured* cross-rank times instead of injected
-        ones."""
+        ones.
+
+        Chaos/degradation wiring (all optional):
+
+        ``fault_plan`` — a :class:`~repro.runtime.chaos.FaultPlan`; its
+        events are injected at the matching step, each exactly once (the
+        replay of a recovered step runs clean, so transient faults
+        terminate).
+
+        ``degradation`` — a :class:`~repro.core.degrade.DegradationPolicy`;
+        failures strike the active op keys and quarantined families run
+        their bulk collective until the cooldown releases them.
+
+        ``rebuild_step`` — zero-arg callable returning a *freshly traced*
+        jitted step (it must wrap the raw function in a new closure each
+        call; re-jitting the same callable object can reuse the cached
+        jaxpr and miss trace-time hooks).  Used to re-jit after a
+        degradation change and to trace NaN-wire injection into a
+        poisoned step.  Without it, degradation changes only apply to
+        future traces and ``nan_wire`` events fall back to synthesizing a
+        NaN loss (the observable effect of a poisoned all-reduce).
+
+        ``on_rank_loss`` — ``(state, RankLost) -> (state, step_fn|None)``
+        elastic handler: shrink the mesh, reshard ``state``, return the
+        re-jitted step for the new topology.  ``None`` re-raises (rank
+        loss is then fatal).
+
+        ``sleep_fn`` — injection point for the backoff clock (tests
+        record delays instead of sleeping)."""
         self.cfg = cfg
         self.step_fn = step_fn
         self.state_shardings = state_shardings
@@ -68,7 +142,18 @@ class TrainSupervisor:
         self.per_rank_times = per_rank_times
         if skew_scheduler is not None:
             self.step_fn = skew_scheduler.fn()
+        self.fault_plan = fault_plan
+        self.degradation = degradation
+        self.rebuild_step = rebuild_step
+        self.on_rank_loss = on_rank_loss
+        self.sleep_fn = sleep_fn
+        self._rng = np.random.default_rng(cfg.seed)
+        self._fired: set = set()   # (step, event) pairs already injected
         self.restarts = 0
+        self.healthy_streak = 0
+        self.backoffs: list[float] = []
+        self.faults_injected = 0
+        self.rank_losses = 0
 
     def _feed_skew(self, dt: float) -> None:
         sched = self.skew_scheduler
@@ -90,35 +175,157 @@ class TrainSupervisor:
         log.info("restored checkpoint at step %d", step)
         return new_state, step
 
+    # -- fault injection -------------------------------------------------
+
+    def _events_for(self, step: int):
+        """This step's not-yet-fired plan events (replay runs clean)."""
+        if self.fault_plan is None:
+            return ()
+        fresh = tuple(ev for ev in self.fault_plan.at(step)
+                      if (step, ev) not in self._fired)
+        for ev in fresh:
+            self._fired.add((step, ev))
+        return fresh
+
+    def _poisoned_step(self, state, batch, ev):
+        """Run one step with a NaN injected into the ``ev.nth_send``-th
+        wire payload.  The injection is a trace-time hook, so the raw
+        step must be re-traced inside the context — a cached jitted step
+        would replay its clean jaxpr."""
+        if self.rebuild_step is None:
+            state, metrics = self.step_fn(state, batch)
+            metrics = dict(metrics)
+            metrics["loss"] = float("nan")
+            return state, metrics
+        with wire_faults(nth_send=ev.nth_send):
+            fn = self.rebuild_step()
+            return fn(state, batch)
+
+    def _run_step(self, state, batch, events):
+        nan_ev = None
+        for ev in events:
+            self.faults_injected += 1
+            if ev.kind == "slow_link":
+                self.sleep_fn(ev.delay_s)
+            elif ev.kind == "rank_loss":
+                raise RankLost(ev.rank)
+            elif ev.kind in ("timeout", "rank_fail"):
+                raise CollectiveTimeout(
+                    f"injected {ev.kind} (rank {ev.rank})")
+            else:  # nan_wire
+                nan_ev = ev
+        if nan_ev is not None:
+            return self._poisoned_step(state, batch, nan_ev)
+        return self.step_fn(state, batch)
+
+    # -- recovery --------------------------------------------------------
+
+    def _maybe_rebuild(self) -> None:
+        """Re-jit after a quarantine-set change: cached traces bake in the
+        mode that was live when they were traced."""
+        if self.degradation is None or not self.degradation.consume_dirty():
+            return
+        if self.skew_scheduler is not None:
+            self.skew_scheduler.invalidate()
+            self.step_fn = self.skew_scheduler.fn()
+        elif self.rebuild_step is not None:
+            self.step_fn = self.rebuild_step()
+        else:
+            log.warning("degradation changed but no rebuild_step/"
+                        "skew_scheduler: cached traces keep the old mode")
+
+    def _backoff(self) -> None:
+        delay = min(self.cfg.backoff_max_s,
+                    self.cfg.backoff_base_s * 2.0 ** (self.restarts - 1))
+        delay *= 1.0 + self.cfg.backoff_jitter * float(self._rng.random())
+        self.backoffs.append(delay)
+        self.sleep_fn(delay)
+
+    def _handle_failure(self, step: int, e: Exception) -> None:
+        self.restarts += 1
+        self.healthy_streak = 0
+        log.error("step %d failed (%s); restart %d/%d", step, e,
+                  self.restarts, self.cfg.max_restarts)
+        if self.degradation is not None:
+            jailed = self.degradation.record_failure()
+            if jailed:
+                log.warning("quarantined to bulk collectives: %s", jailed)
+            self._maybe_rebuild()
+        if self.restarts > self.cfg.max_restarts:
+            raise e
+        self._backoff()
+
+    # -- main loop -------------------------------------------------------
+
     def run(self, state, batches: Iterator, num_steps: int,
             start_step: int = 0, on_metrics: Callable | None = None):
         step = start_step
         state, ckpt_step = self.maybe_restore(state)
         step = max(step, ckpt_step)
-        it = iter(batches)
+        if not self.manager.all_steps():
+            # Failures before the first periodic save need something to
+            # restore onto — and with buffer donation the pre-step state
+            # is unrecoverable in-process once a step has consumed it.
+            self.manager.save(step, state)
+        last_saved = step
+        replay = ReplayBuffer(batches, base_step=step)
         while step < num_steps:
-            batch = next(it)
+            try:
+                batch = replay.next_batch()
+            except StopIteration:
+                log.warning("data exhausted at step %d/%d; saving partial "
+                            "run and draining", step, num_steps)
+                if step != last_saved:
+                    self.manager.save(step, state)
+                break
+            events = self._events_for(step)
             t0 = time.monotonic()
             try:
-                state, metrics = self.step_fn(state, batch)
-                # touching a metric forces dispatch, surfacing async errors
-                _ = float(metrics["loss"])
-            except Exception as e:  # node failure path
-                self.restarts += 1
-                log.error("step %d failed (%s); restart %d/%d", step, e,
-                          self.restarts, self.cfg.max_restarts)
-                if self.restarts > self.cfg.max_restarts:
+                state, metrics = self._run_step(state, batch, events)
+                # touching the loss forces dispatch, surfacing async
+                # errors — and gates on a finite value
+                loss = float(metrics["loss"])
+                if not math.isfinite(loss):
+                    raise NonFiniteLoss(
+                        f"loss={loss!r} at step {step}")
+            except RankLost as e:
+                self.rank_losses += 1
+                if self.on_rank_loss is None:
                     raise
+                log.error("rank %d lost at step %d; shrinking mesh",
+                          e.rank, step)
+                state, new_fn = self.on_rank_loss(state, e)
+                if new_fn is not None:
+                    self.step_fn = new_fn
+                replay.rewind(step)
+                continue
+            except Exception as e:  # node failure path
+                self._handle_failure(step, e)
                 state, ckpt_step = self.maybe_restore(state)
                 step = ckpt_step
+                replay.rewind(step)
                 continue
             dt = time.monotonic() - t0
             self.straggler.record(dt)
             self._feed_skew(dt)
+            self.healthy_streak += 1
+            if self.degradation is not None:
+                released = self.degradation.record_healthy()
+                if released:
+                    log.info("cooldown over; re-probing fused path for %s",
+                             released)
+                self._maybe_rebuild()
+            if self.restarts > 0 and self.healthy_streak >= self.cfg.heal_after:
+                self.restarts -= 1
+                self.healthy_streak = 0
+                log.info("sustained healthy run; restart budget healed "
+                         "to %d/%d", self.restarts, self.cfg.max_restarts)
             step += 1
             if on_metrics is not None:
                 on_metrics(step, metrics)
             if step % self.cfg.checkpoint_every == 0:
                 self.manager.save(step, state)
+                last_saved = step
+                replay.commit(step)
         self.manager.wait()
         return state, step

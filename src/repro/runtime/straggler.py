@@ -276,6 +276,13 @@ class SkewScheduler:
             self.rebuilds += 1
         return self._fns[self.bucket]
 
+    def invalidate(self) -> None:
+        """Drop every memoized build.  Needed when something *outside* the
+        bucket key changes what ``build`` bakes into the trace — e.g. the
+        degradation policy quarantined an op family, so the cached steps
+        still carry the fused path.  The next ``fn()`` re-jits."""
+        self._fns.clear()
+
     def observe(self, per_rank_times: Sequence[float]) -> bool:
         """Feed one all-gathered per-rank step-time vector; returns True
         when the schedule bucket changed (callers swap in ``fn()``)."""

@@ -6,15 +6,28 @@ the jitted ``decode_step`` (whose FFN is the paper's fused
 GEMV+AllReduce), samples greedily via the vocab-sharded argmax, and
 retires finished sequences.  Token-level continuous batching — a slot is
 re-admitted the step after its sequence finishes.
+
+Elastic serving: :meth:`DecodeEngine.reshard` swaps the decode function /
+cache for a different mesh mid-flight.  In-flight requests go back to the
+queue front with their generated tokens intact; on re-admission the
+engine replays prompt + generated tokens through the new cache (the
+token-by-token prefill path) and generation resumes where it stopped —
+requests survive a mesh shrink, they just pay a replay delay.
+:func:`serve_with_chaos` drives the engine under a
+:class:`~repro.runtime.chaos.FaultPlan`.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.chaos import RankLost
 
 
 @dataclasses.dataclass
@@ -24,18 +37,28 @@ class Request:
     max_new: int = 32
     tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # engine-managed: tokens to replay through the cache before sampling
+    # resumes (prompt, plus already-generated tokens after a reshard),
+    # and how many of them have been fed so far.
+    prefix: list = dataclasses.field(default_factory=list)
+    consumed: int = 0
 
 
 class DecodeEngine:
     def __init__(self, decode_fn: Callable, init_cache_fn: Callable,
-                 batch_size: int, eos_id: int = -1):
-        """decode_fn(tokens [B,1], cache, pos) -> (logits [B,1,V], cache)."""
+                 batch_size: int, eos_id: int = -1, bos_id: int = 0):
+        """decode_fn(tokens [B,1], cache, pos) -> (logits [B,1,V], cache).
+
+        ``bos_id`` seeds the first decode step for empty-prompt requests
+        (unconditional generation)."""
         self.decode_fn = decode_fn
+        self.init_cache_fn = init_cache_fn
         self.batch = batch_size
         self.eos = eos_id
+        self.bos = bos_id
         self.cache = init_cache_fn(batch_size)
         self.slots: list[Request | None] = [None] * batch_size
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.cur_tok = np.zeros((batch_size, 1), np.int32)
         self.pos = 0
 
@@ -45,12 +68,18 @@ class DecodeEngine:
     def _admit(self):
         for i in range(self.batch):
             if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.slots[i] = req
-                # prompt is consumed token-by-token (prefill via decode);
+                # prompt (and, after a reshard, the already-generated
+                # tokens) is consumed token-by-token — prefill via decode;
                 # production would run a separate prefill graph.
-                self.cur_tok[i, 0] = req.prompt[0]
-                req._consumed = 1
+                req.prefix = list(req.prompt) + list(req.tokens)
+                if req.prefix:
+                    self.cur_tok[i, 0] = req.prefix[0]
+                    req.consumed = 1
+                else:  # empty prompt: unconditional generation from BOS
+                    self.cur_tok[i, 0] = self.bos
+                    req.consumed = 0
 
     def step(self):
         self._admit()
@@ -62,9 +91,9 @@ class DecodeEngine:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            if req._consumed < len(req.prompt):
-                self.cur_tok[i, 0] = req.prompt[req._consumed]
-                req._consumed += 1
+            if req.consumed < len(req.prefix):
+                self.cur_tok[i, 0] = req.prefix[req.consumed]
+                req.consumed += 1
                 continue
             tok = int(nxt[i])
             req.tokens.append(tok)
@@ -75,6 +104,27 @@ class DecodeEngine:
                 self.slots[i] = None
         return nxt, finished
 
+    def reshard(self, decode_fn: Callable, init_cache_fn: Callable,
+                batch_size: int | None = None) -> int:
+        """Swap in a decode function/cache for a new (smaller) mesh.
+
+        In-flight requests are pushed back to the queue *front* in slot
+        order — they were admitted first, they re-admit first — keeping
+        their generated tokens; re-admission replays them through the
+        fresh cache.  Returns how many requests were re-queued."""
+        inflight = [r for r in self.slots if r is not None]
+        for r in reversed(inflight):
+            self.queue.appendleft(r)
+        if batch_size is not None:
+            self.batch = batch_size
+        self.decode_fn = decode_fn
+        self.init_cache_fn = init_cache_fn
+        self.cache = init_cache_fn(self.batch)
+        self.slots = [None] * self.batch
+        self.cur_tok = np.zeros((self.batch, 1), np.int32)
+        self.pos = 0
+        return len(inflight)
+
     def run_until_drained(self, max_steps: int = 10_000):
         finished = []
         steps = 0
@@ -84,3 +134,45 @@ class DecodeEngine:
             finished.extend(fin)
             steps += 1
         return finished
+
+
+def serve_with_chaos(engine: DecodeEngine, plan, *,
+                     reshard_fn: Callable | None = None,
+                     sleep_fn: Callable[[float], None] = time.sleep,
+                     max_steps: int = 10_000):
+    """Drain the engine under a :class:`~repro.runtime.chaos.FaultPlan`.
+
+    Per tick: ``slow_link`` sleeps its delay before stepping; ``timeout``
+    / ``rank_fail`` / ``nan_wire`` drop the tick entirely (the collective
+    failed, nothing was committed — the same decode step retries next
+    tick); ``rank_loss`` calls ``reshard_fn(engine)`` — the drain-reshard-
+    resume path — or raises :class:`RankLost` if no handler is wired.
+
+    Returns ``(finished, stats)`` where stats counts ticks, dropped
+    ticks, and reshards.
+    """
+    finished = []
+    stats = {"ticks": 0, "dropped": 0, "reshards": 0}
+    tick = 0
+    while (any(s is not None for s in engine.slots) or engine.queue) \
+            and tick < max_steps:
+        events = plan.at(tick) if plan is not None else ()
+        tick += 1
+        stats["ticks"] += 1
+        dropped = False
+        for ev in events:
+            if ev.kind == "slow_link":
+                sleep_fn(ev.delay_s)
+            elif ev.kind == "rank_loss":
+                if reshard_fn is None:
+                    raise RankLost(ev.rank)
+                reshard_fn(engine)
+                stats["reshards"] += 1
+            else:  # timeout / rank_fail / nan_wire: the tick is lost
+                dropped = True
+        if dropped:
+            stats["dropped"] += 1
+            continue
+        _, fin = engine.step()
+        finished.extend(fin)
+    return finished, stats

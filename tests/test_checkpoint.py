@@ -82,6 +82,67 @@ def test_elastic_cross_mesh_restore(tmp_path, rng):
     assert rescale_batch(256, old_dp=16, new_dp=8) == 128
 
 
+def test_restore_latest_falls_back_past_corruption(tmp_path, rng):
+    """A garbled newest checkpoint must not brick the run: restore walks
+    back to the previous keep entry."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    tree = _tree(rng)
+    good = _tree(rng)
+    mgr.save(10, good)
+    mgr.save(20, tree)
+    # truncate the newest manifest mid-write (torn disk state)
+    manifest = tmp_path / "step_00000020" / "manifest.json"
+    manifest.write_text(manifest.read_text()[: 15])
+    restored, step = mgr.restore_latest(tree)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  good["params"]["w"])
+    # a missing array file is the same story
+    mgr.save(30, tree)
+    arrs = [p for p in os.listdir(tmp_path / "step_00000030")
+            if p.endswith(".npy")]
+    os.remove(tmp_path / "step_00000030" / arrs[0])
+    assert mgr.restore_latest(tree)[1] == 10
+    # nothing readable at all -> None, not an exception
+    manifest10 = tmp_path / "step_00000010" / "manifest.json"
+    manifest10.write_text("{")
+    assert mgr.restore_latest(tree) is None
+
+
+def test_rescale_batch_round_trip_and_warning():
+    # clean shrink/grow round trip: per-device batch is preserved
+    assert rescale_batch(256, old_dp=16, new_dp=8) == 128
+    assert rescale_batch(128, old_dp=8, new_dp=16) == 256
+    assert rescale_batch(rescale_batch(256, 16, 8), 8, 16) == 256
+    # global batch smaller than dp: the per-device clamp silently changes
+    # the effective global batch — that must warn, loudly
+    with pytest.warns(RuntimeWarning, match="does not divide"):
+        assert rescale_batch(4, old_dp=8, new_dp=4) == 4
+    with pytest.warns(RuntimeWarning):
+        rescale_batch(100, old_dp=16, new_dp=8)  # non-divisible too
+
+
+def test_shrink_context_halves_dp_axis():
+    from repro.parallel.sharding import ParallelContext
+    from repro.runtime.elastic import shrink_context
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    ctx = ParallelContext.from_mesh(mesh)
+    small = shrink_context(ctx)
+    assert dict(small.mesh.shape) == {"data": 1, "model": 4}
+    assert small.tp == 4 and small.world == 4
+    # survivors are the prefix of the old flattened world
+    assert [d.id for d in np.asarray(small.mesh.devices).reshape(-1)] == \
+        [d.id for d in np.asarray(mesh.devices).reshape(-1)[:4]]
+    # dp exhausted -> falls back to shrinking tp
+    tiny = shrink_context(small)
+    assert dict(tiny.mesh.shape) == {"data": 1, "model": 2}
+    with pytest.raises(ValueError):
+        shrink_context(ctx, factor=3)
+    with pytest.raises(ValueError):
+        shrink_context(ctx, axis="data", factor=4)
+
+
 def test_straggler_monitor():
     from repro.runtime.straggler import StragglerMonitor
 

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.data.pipeline import ReplayBuffer
 from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
 
 
@@ -41,3 +42,142 @@ def test_supervisor_gives_up_after_max_restarts(tmp_path):
     with pytest.raises(RuntimeError):
         sup.run({"w": np.zeros(1)}, iter(lambda: {}, None), num_steps=5)
     assert sup.restarts == 3
+
+
+def _ok_step(state, batch):
+    new = {"w": state["w"] + 1.0}
+    return new, {"loss": jnp.asarray(float(new["w"][0]))}
+
+
+def test_backoff_exponential_with_seeded_jitter(tmp_path):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] <= 4:
+            raise RuntimeError("flaky start")
+        return _ok_step(state, batch)
+
+    sleeps = []
+    cfg = SupervisorConfig(checkpoint_dir=str(tmp_path), checkpoint_every=50,
+                           max_restarts=8, async_save=False,
+                           backoff_base_s=0.1, backoff_max_s=0.25,
+                           backoff_jitter=0.5, seed=42)
+    sup = TrainSupervisor(cfg, step_fn, sleep_fn=sleeps.append)
+    _, step = sup.run({"w": np.zeros(1)}, iter(lambda: {}, None), num_steps=3)
+    assert step == 3
+    assert sup.backoffs == sleeps[:len(sup.backoffs)]
+    # exponential-with-cap envelope: base*2^(k-1) <= delay <= cap*(1+jitter)
+    for k, d in enumerate(sup.backoffs, start=1):
+        lo = min(0.25, 0.1 * 2 ** (k - 1))
+        assert lo <= d <= lo * 1.5
+    assert sup.backoffs[2] <= 0.25 * 1.5  # the cap bit
+    # seeded: a fresh supervisor replays the identical jitter sequence
+    calls["n"] = 0
+    sup2 = TrainSupervisor(cfg, step_fn, sleep_fn=lambda s: None)
+    sup2.run({"w": np.zeros(1)}, iter(lambda: {}, None), num_steps=3)
+    assert sup2.backoffs == sup.backoffs
+
+
+def test_restart_budget_heals_after_sustained_health(tmp_path):
+    """Sporadic transient faults over a long run must not exhaust the
+    budget that guards against crash loops: every 8 healthy steps forgive
+    one restart, so 4 spaced failures survive max_restarts=2."""
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] % 10 == 0 and calls["n"] <= 40:
+            raise RuntimeError("sporadic fault")
+        return _ok_step(state, batch)
+
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path), checkpoint_every=5,
+                         max_restarts=2, heal_after=8, async_save=False,
+                         backoff_base_s=1e-4),
+        step_fn, sleep_fn=lambda s: None)
+    _, step = sup.run({"w": np.zeros(1)}, iter(lambda: {}, None),
+                      num_steps=50)
+    assert step == 50
+    assert sup.restarts <= 2  # healed along the way, never exhausted
+
+
+def test_nan_loss_restores_and_never_checkpoints_poison(tmp_path):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        new = {"w": state["w"] + 1.0}
+        loss = float("nan") if calls["n"] == 5 else float(new["w"][0])
+        return new, {"loss": jnp.asarray(loss)}
+
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                         keep=10, max_restarts=3, async_save=False,
+                         backoff_base_s=1e-4),
+        step_fn, sleep_fn=lambda s: None)
+    final, step = sup.run({"w": np.zeros(1)}, iter(lambda: {}, None),
+                          num_steps=8)
+    assert step == 8 and sup.restarts == 1
+    assert float(final["w"][0]) == 8.0 and np.isfinite(final["w"]).all()
+    # every checkpoint on disk holds a finite (never the poisoned) state
+    from repro.checkpoint.checkpointer import restore_checkpoint
+    import os
+    for s in sup.manager.all_steps():
+        path = os.path.join(str(tmp_path), f"step_{s:08d}")
+        restored, _ = restore_checkpoint(path, {"w": np.zeros(1)})
+        assert np.isfinite(restored["w"]).all(), f"poisoned ckpt at {s}"
+
+
+def test_finite_iterator_drains_with_partial_checkpoint(tmp_path):
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path), checkpoint_every=3,
+                         async_save=False),
+        _ok_step, sleep_fn=lambda s: None)
+    final, step = sup.run({"w": np.zeros(1)}, iter([{}] * 7), num_steps=20)
+    # 7 batches < 20 steps: graceful drain, partial step count returned
+    assert step == 7
+    assert float(final["w"][0]) == 7.0
+    # the partial step was checkpointed on the way out
+    assert sup.manager.all_steps()[-1] == 7
+    restored, s = sup.manager.restore_latest({"w": np.zeros(1)})
+    assert s == 7 and float(restored["w"][0]) == 7.0
+
+
+def test_replay_ledger_reserves_same_batches(tmp_path):
+    seen = []
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        seen.append(batch["id"])
+        if calls["n"] == 6:  # fails at step 5, after ckpt at 3
+            raise RuntimeError("fault")
+        return _ok_step(state, batch)
+
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path), checkpoint_every=3,
+                         async_save=False, backoff_base_s=1e-4),
+        step_fn, sleep_fn=lambda s: None)
+    batches = ({"id": i} for i in range(100))
+    _, step = sup.run({"w": np.zeros(1)}, batches, num_steps=8)
+    assert step == 8
+    # steps 0..4 ran, step 5 failed -> restore at 3, replay 3,4,5,... —
+    # the restored run re-sees ids 3 and 4, never skips ahead
+    assert seen == [0, 1, 2, 3, 4, 5, 3, 4, 5, 6, 7]
+
+
+def test_replay_buffer_unit():
+    rb = ReplayBuffer(iter(range(10)), base_step=2)
+    assert [rb.next_batch() for _ in range(4)] == [0, 1, 2, 3]
+    rb.rewind(3)
+    assert rb.next_batch() == 1  # step 3 re-serves the second batch
+    rb.commit(5)
+    with pytest.raises(ValueError):
+        rb.rewind(4)  # pre-commit batches are gone
+    rb.rewind(5)
+    assert rb.next_batch() == 3
+    short = ReplayBuffer(iter(range(2)))
+    short.next_batch(), short.next_batch()
+    with pytest.raises(StopIteration):
+        short.next_batch()

@@ -38,3 +38,38 @@ def test_engine_greedy_determinism(ctx):
         fin = engine.run_until_drained(max_steps=40)
         outs.append(fin[0].tokens)
     assert outs[0] == outs[1]
+
+
+def _fake_decode(tok, cache, pos):
+    """Deterministic meshless decoder: argmax(logits) == (token+1) % 16."""
+    b = tok.shape[0]
+    logits = jnp.zeros((b, 1, 16))
+    logits = logits.at[jnp.arange(b), 0, (tok[:, 0] + 1) % 16].set(1.0)
+    return logits, cache
+
+
+def test_empty_prompt_request_does_not_crash():
+    """Regression: admission indexed prompt[0] unconditionally, so an
+    empty prompt (unconditional generation) raised IndexError."""
+    engine = DecodeEngine(_fake_decode, lambda b: None, batch_size=2,
+                          bos_id=5)
+    engine.submit(Request(uid=0, prompt=[], max_new=4))
+    engine.submit(Request(uid=1, prompt=[3], max_new=4))
+    fin = engine.run_until_drained(max_steps=30)
+    assert {r.uid for r in fin} == {0, 1}
+    # generation walks from BOS: 5 -> 6, 7, 8, 9
+    assert next(r for r in fin if r.uid == 0).tokens == [6, 7, 8, 9]
+    assert next(r for r in fin if r.uid == 1).tokens == [4, 5, 6, 7]
+
+
+def test_queue_is_fifo_and_consumed_is_request_state():
+    engine = DecodeEngine(_fake_decode, lambda b: None, batch_size=1)
+    reqs = [Request(uid=i, prompt=[i], max_new=2) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    fin = engine.run_until_drained(max_steps=30)
+    # one slot: strictly FIFO completion order
+    assert [r.uid for r in fin] == [0, 1, 2]
+    # prompt replay bookkeeping lives on the dataclass, not an ad-hoc attr
+    assert all(r.consumed == len(r.prefix) for r in fin)
+    assert not hasattr(fin[0], "_consumed")
