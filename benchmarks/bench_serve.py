@@ -1,0 +1,176 @@
+"""SLO serving benchmark: Poisson request stream through the paged engine.
+
+Drives :class:`~repro.serve.engine.PagedDecodeEngine` (chunked prefill +
+paged KV + per-slot positions, the continuous-batching substrate for the
+paper's fused GEMV+AllReduce decode) with open-loop Poisson arrivals at
+increasing request rates and reports the SLO-facing latency tails:
+
+* **TTFT** (time to first token: submission -> first sampled token,
+  includes queueing + chunked prefill) p50/p99 per rate;
+* **per-token latency** (TPOT: inter-token time after the first) p50/p99;
+* throughput (generated tokens / wall second) per rate.
+
+A mixed-length (ragged) workload also compares the paged pool's HBM
+footprint against the dense ``B x S_max`` cache the engine replaced —
+the paged invariant is strictly smaller allocation at equal capacity to
+serve the workload.
+
+Machine-readable output: ``BENCH_serve.json`` (schema-validated on every
+write; CI runs ``--smoke`` and re-validates).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+JSON_PATH = "BENCH_serve.json"
+
+SCHEMA_KEYS = {"rates", "hbm", "workload",
+               "invariant_paged_hbm_lt_dense"}
+RATE_KEYS = {"ttft_ms", "tpot_ms", "throughput_tok_s", "completed",
+             "drained", "offered_rate_req_s"}
+
+
+def _validate(out):
+    missing = SCHEMA_KEYS - set(out)
+    assert not missing, f"BENCH_serve.json schema rot: missing {missing}"
+    assert len(out["rates"]) >= 3, \
+        f"need >= 3 Poisson rates, got {list(out['rates'])}"
+    for key, r in out["rates"].items():
+        rmissing = RATE_KEYS - set(r)
+        assert not rmissing, f"{key} missing {rmissing}"
+        assert r["completed"] > 0, f"no requests completed at {key}"
+        assert r["drained"], f"{key} did not drain"
+        for lat in ("ttft_ms", "tpot_ms"):
+            assert r[lat]["p50"] > 0.0 and r[lat]["p99"] >= r[lat]["p50"], \
+                f"{key} {lat} percentiles inconsistent: {r[lat]}"
+    assert out["hbm"]["paged_bytes"] < out["hbm"]["dense_bytes"], \
+        f"paged pool not smaller than dense cache: {out['hbm']}"
+    assert out["invariant_paged_hbm_lt_dense"]
+
+
+def _percentiles(xs):
+    return {"p50": float(np.percentile(xs, 50)),
+            "p99": float(np.percentile(xs, 99))}
+
+
+def _drive_poisson(engine, requests, arrivals, *, max_steps):
+    """Open-loop driver: submit each request at its arrival time, step
+    the engine whenever it has work, sleep to the next arrival when idle."""
+    t0 = time.monotonic()
+    pending = list(zip(arrivals, requests))
+    finished = []
+    steps = 0
+    while (pending or engine._pending()) and steps < max_steps:
+        now = time.monotonic() - t0
+        while pending and pending[0][0] <= now:
+            engine.submit(pending.pop(0)[1])
+        if engine._pending():
+            _, fin = engine.step()
+            finished.extend(fin)
+            steps += 1
+        elif pending:
+            time.sleep(min(0.05, max(0.0, pending[0][0] - now)))
+    wall = time.monotonic() - t0
+    return finished, wall, not pending and not engine._pending()
+
+
+def run(report, smoke=False):
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.common import split_params
+    from repro.serve.engine import PagedDecodeEngine, Request
+    from repro.serve.kv_cache import dense_cache_hbm_bytes, pool_hbm_bytes
+
+    ctx = make_host_mesh()
+    bundle = get_arch("chatglm3-6b").reduced()
+    cfg = bundle.config
+    params, _ = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+    serve_fn = bundle.serve_step_fn(ctx)
+    serve_jit = jax.jit(
+        lambda t, pl, tb, pos, nn: serve_fn(params, t, pl, tb, pos, nn))
+
+    batch = 4
+    block_size = 8
+    # half the dense B x S_max token budget, tp-aligned — the ragged
+    # workload fits because retired requests return their blocks
+    num_blocks = (batch * cfg.max_seq // 2) // block_size // ctx.tp * ctx.tp
+    chunk = 8
+    n_req = 6 if smoke else 24
+    max_new = 4 if smoke else 8
+    rates = (4.0, 16.0, 64.0)
+
+    def make_engine():
+        return PagedDecodeEngine(
+            serve_jit, bundle.init_paged_pool, batch,
+            num_blocks=num_blocks, block_size=block_size,
+            max_seq=cfg.max_seq, chunk=chunk, n_stripes=ctx.tp)
+
+    # warm both traced graphs (C=chunk prefill, C=1 decode) out of band so
+    # the first measured request does not pay compile time in its TTFT
+    warm = make_engine()
+    warm.submit(Request(uid=-1, prompt=list(range(2 * chunk)), max_new=2))
+    warm.run_until_drained(max_steps=100)
+
+    rng = np.random.default_rng(0)
+    out = {"rates": {}}
+    for rate in rates:
+        engine = make_engine()
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            rng.integers(1, 25)).tolist(),
+                        max_new=int(rng.integers(2, max_new + 1)))
+                for i in range(n_req)]
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_req))
+        finished, wall, drained = _drive_poisson(
+            engine, reqs, arrivals.tolist(), max_steps=50_000)
+        ttft = [(r.t_first - r.t_submit) * 1e3 for r in finished
+                if r.t_first is not None]
+        tpot = [(r.t_done - r.t_first) / max(1, len(r.tokens) - 1) * 1e3
+                for r in finished if r.t_first is not None]
+        toks = sum(len(r.tokens) for r in finished)
+        key = f"rate_{rate}"
+        out["rates"][key] = {
+            "offered_rate_req_s": rate,
+            "completed": len(finished),
+            "drained": bool(drained),
+            "throughput_tok_s": toks / max(wall, 1e-9),
+            "ttft_ms": _percentiles(ttft),
+            "tpot_ms": _percentiles(tpot),
+        }
+        report(f"serve_rate{rate:g}", wall / max(toks, 1) * 1e6,
+               f"p50_ttft_ms={out['rates'][key]['ttft_ms']['p50']:.1f};"
+               f"p99_ttft_ms={out['rates'][key]['ttft_ms']['p99']:.1f};"
+               f"tok_s={out['rates'][key]['throughput_tok_s']:.1f}")
+
+    # ---- paged vs dense HBM for the ragged workload ---------------------
+    paged_bytes = pool_hbm_bytes(make_engine().pool)
+    dense_bytes = dense_cache_hbm_bytes(bundle.init_cache(batch))
+    out["hbm"] = {
+        "paged_bytes": paged_bytes,
+        "dense_bytes": dense_bytes,
+        "num_blocks": num_blocks,
+        "block_size": block_size,
+        "ratio": paged_bytes / dense_bytes,
+    }
+    out["invariant_paged_hbm_lt_dense"] = paged_bytes < dense_bytes
+    report("serve_hbm", 0.0,
+           f"paged={paged_bytes};dense={dense_bytes};"
+           f"ratio={paged_bytes / dense_bytes:.2f}")
+
+    out["workload"] = {
+        "arch": "chatglm3-6b(reduced)", "batch": batch,
+        "num_requests": n_req, "max_new": max_new,
+        "prompt_len_range": [1, 24], "chunk": chunk,
+        "max_seq": cfg.max_seq, "rates": list(rates),
+        "mesh": list(ctx.mesh.shape.values()),
+    }
+    _validate(out)
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    report("serve_json", 0.0, JSON_PATH)
+    return out["rates"]

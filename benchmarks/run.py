@@ -25,6 +25,7 @@ BENCHES = [
     ("bench_granularity", "Fig. 13 overlap granularity"),
     ("bench_wire", "compressed-wire rings (bf16/fp8 payloads)"),
     ("bench_chaos", "chaos recovery + degraded-mode throughput"),
+    ("bench_serve", "SLO serving: Poisson TTFT/TPOT + paged-KV HBM"),
     ("bench_scaleout_sim", "Fig. 15 128-node DLRM scale-out sim"),
     ("bench_kernels", "device-initiated kernel comparison"),
 ]

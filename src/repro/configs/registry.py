@@ -116,6 +116,34 @@ class ArchBundle:
         cfg = self.config
         return lambda p, t, c, pos: fn(ctx, p, cfg, t, c, pos)
 
+    # ---- paged serving (continuous batching) -----------------------------
+    @property
+    def supports_paged(self) -> bool:
+        """Paged/block KV is implemented for GQA transformers; MLA and the
+        recurrent families keep their dense caches/states."""
+        return (self.family == "transformer"
+                and getattr(self.config, "attn_type", None) == "gqa")
+
+    def serve_step_fn(self, ctx: ParallelContext) -> Callable:
+        """Mixed prefill-chunk/decode step over the paged pool:
+        (params, tokens [B,C], pool, tables [B,MB], pos [B], n_new [B])
+        -> (last-valid logits [B,V], new pool)."""
+        from repro.models.transformer import serve_step
+
+        cfg = self.config
+        return lambda p, t, pool, tbl, pos, nn: serve_step(
+            ctx, p, cfg, t, pool, tbl, pos, nn)
+
+    def init_paged_pool(self, num_blocks: int, block_size: int):
+        from repro.models.transformer import init_paged_pool
+
+        return init_paged_pool(self.config, num_blocks, block_size)
+
+    def pool_specs(self, pool):
+        from repro.models.transformer import pool_logical_specs
+
+        return pool_logical_specs(self.config, pool)
+
     # ---- caches ----------------------------------------------------------
     def with_max_seq(self, max_seq: int) -> "ArchBundle":
         if self.family in ("transformer", "zamba2"):

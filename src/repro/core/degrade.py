@@ -112,8 +112,11 @@ class DegradationPolicy:
         return d
 
     def begin_trace(self) -> None:
-        """Reset the active-key ledger before a fresh trace (optional —
-        keys accumulate otherwise, which is safe but blames stale ops)."""
+        """Reset the active-key ledger before a fresh trace.  The
+        supervisor calls this on every rebuild path (degradation re-jit,
+        skew re-jit, poisoned-step retrace, rank-loss reshard) so
+        ``record_failure(None)`` blames only keys live in the current
+        trace, not ops left over from retired ones."""
         self._active.clear()
 
     def summary(self) -> dict:

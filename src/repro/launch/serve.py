@@ -22,7 +22,9 @@ from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
 from repro.runtime.chaos import add_chaos_cli_args, build_fault_plan
 from repro.runtime.elastic import reshard_tree, shrink_context
-from repro.serve.engine import DecodeEngine, Request, serve_with_chaos
+from repro.serve.engine import (DecodeEngine, PagedDecodeEngine, Request,
+                                serve_with_chaos)
+from repro.serve.kv_cache import dense_cache_hbm_bytes, pool_hbm_bytes
 
 
 def main():
@@ -33,6 +35,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
+    ap.add_argument("--paged", action="store_true",
+                    help="paged/block KV cache + chunked prefill "
+                         "(continuous batching over a shared block pool)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged mode)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool blocks; 0 = half the dense B x S_max budget")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill chunk width C (paged mode)")
     add_granularity_cli_args(ap)
     add_calibration_cli_args(ap)
     ap.add_argument("--production-mesh", action="store_true")
@@ -66,25 +77,57 @@ def main():
     if args.degrade:
         set_degradation_policy(DegradationPolicy())
 
-    engine = DecodeEngine(decode_jit, bundle.init_cache, args.batch)
+    if args.paged:
+        if not bundle.supports_paged:
+            raise SystemExit(f"--paged requires a GQA transformer "
+                             f"({args.arch} is {bundle.family}/"
+                             f"{getattr(cfg, 'attn_type', '?')})")
+        num_blocks = args.num_blocks
+        if not num_blocks:
+            # half the dense budget, rounded to a tp-divisible block count
+            num_blocks = max(ctx.tp, (args.batch * cfg.max_seq // 2)
+                             // args.block_size // ctx.tp * ctx.tp)
+        serve_fn = bundle.serve_step_fn(ctx)
+        serve_jit = jax.jit(
+            lambda t, pl, tb, pos, nn: serve_fn(params, t, pl, tb, pos, nn))
+        engine = PagedDecodeEngine(
+            serve_jit, bundle.init_paged_pool, args.batch,
+            num_blocks=num_blocks, block_size=args.block_size,
+            max_seq=cfg.max_seq, chunk=args.chunk, n_stripes=ctx.tp)
+        paged_b = pool_hbm_bytes(engine.pool)
+        dense_b = dense_cache_hbm_bytes(bundle.init_cache(args.batch))
+        print(f"paged pool: {num_blocks} x {args.block_size}-token blocks "
+              f"= {paged_b / 2**20:.1f} MiB vs dense B x S_max "
+              f"{dense_b / 2**20:.1f} MiB")
+    else:
+        engine = DecodeEngine(decode_jit, bundle.init_cache, args.batch,
+                              max_seq=cfg.max_seq)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(2, 6)).tolist()
         engine.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
 
-    max_steps = getattr(cfg, "max_seq", 512) - 1
+    max_steps = args.requests * (getattr(cfg, "max_seq", 512) - 1)
     plan = build_fault_plan(args.chaos, num_steps=max_steps)
 
     def reshard_fn(eng):
-        # drain-reshard-resume: shrink the mesh, re-jit decode for the
-        # surviving devices, replay in-flight requests through the new
-        # cache (they keep their generated tokens)
+        # drain-reshard-resume: shrink the mesh, re-jit for the surviving
+        # devices, replay in-flight requests through the new cache/pool
+        # (they keep their generated tokens; the paged engine rebuilds
+        # their block tables through the chunked-prefill path)
         nonlocal ctx, params
         ctx = shrink_context(ctx)
         params, _ = reshard_tree(params, param_specs, ctx)
-        dec = bundle.decode_fn(ctx)
-        new_jit = jax.jit(lambda t, c, pos: dec(params, t, c, pos))
-        n = eng.reshard(new_jit, bundle.init_cache, args.batch)
+        if args.paged:
+            sfn = bundle.serve_step_fn(ctx)
+            new_jit = jax.jit(
+                lambda t, pl, tb, pos, nn: sfn(params, t, pl, tb, pos, nn))
+            n = eng.reshard(new_jit, bundle.init_paged_pool, args.batch,
+                            n_stripes=ctx.tp)
+        else:
+            dec = bundle.decode_fn(ctx)
+            new_jit = jax.jit(lambda t, c, pos: dec(params, t, c, pos))
+            n = eng.reshard(new_jit, bundle.init_cache, args.batch)
         print(f"rank lost: mesh -> {dict(ctx.mesh.shape)}, "
               f"{n} in-flight requests re-queued")
 
@@ -94,9 +137,13 @@ def main():
                                            reshard_fn=reshard_fn,
                                            max_steps=max_steps)
         print(f"chaos: plan {plan.summary()}; ticks {stats['ticks']}, "
-              f"dropped {stats['dropped']}, reshards {stats['reshards']}")
+              f"dropped {stats['dropped']}, reshards {stats['reshards']}, "
+              f"drained {stats['drained']}")
     else:
         finished = engine.run_until_drained(max_steps=max_steps)
+        if not finished.drained:
+            print(f"WARNING: stopped at max_steps={max_steps} before "
+                  f"draining — results truncated")
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in finished)
     print(f"served {len(finished)} requests, {total_tokens} tokens in "

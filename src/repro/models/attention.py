@@ -38,7 +38,9 @@ def _flash_update(carry, q5, k, v, mask, scale, cap):
     """One flash-attention accumulation step (f32 carries).
 
     carry = (m, l, o): [b,hk,g,sq], [b,hk,g,sq], [b,hk,g,sq,d]
-    q5: [b,sq,hk,g,d]; k,v: [b,sk,hk,d]; mask: [sq,sk] bool.
+    q5: [b,sq,hk,g,d]; k,v: [b,sk,hk,d]; mask: [sq,sk] bool, or
+    [b,sq,sk] when validity is per batch row (the paged-KV path, where
+    each slot masks at its own length/block table).
     """
     m, l, o = carry
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k).astype(jnp.float32) * scale
@@ -46,7 +48,9 @@ def _flash_update(carry, q5, k, v, mask, scale, cap):
         s = jnp.tanh(s / cap) * cap
     # additive 2D mask: broadcasts inside the fusion; a select against the
     # full [b,h,g,q,k] score shape would get materialized + loop-hoisted
-    s = s + jnp.where(mask, 0.0, NEG_INF)[None, None, None]
+    bias = jnp.where(mask, 0.0, NEG_INF)
+    s = s + (bias[:, None, None] if mask.ndim == 3
+             else bias[None, None, None])
     m_new = jnp.maximum(m, s.max(axis=-1))
     p = jnp.exp(s - m_new[..., None])
     corr = jnp.exp(m - m_new)
@@ -421,11 +425,22 @@ def context_attention(
 # ---------------------------------------------------------------------------
 # decode: sequence-sharded KV cache + partial merge
 # ---------------------------------------------------------------------------
+def broadcast_pos(pos, B):
+    """Normalize a decode position to a per-slot vector [B].
+
+    Accepts the legacy scalar (one shared position — every slot at the
+    same offset) or a per-slot ``[B]`` vector; always returns ``[B]``
+    int32.  Continuous batching requires the vector form: a slot reused
+    by a new request restarts at position 0 while its neighbors keep
+    counting."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+
+
 def decode_attention(
     ctx: ParallelContext,
     q,                  # [B, 1, Hq, hd] replicated over tp
     k_cache, v_cache,   # [B, S_max, Hkv, hd] S sharded over tp
-    pos,                # [] int32 current position (kv already written)
+    pos,                # [B] (or scalar) int32 per-slot position (kv written)
     *,
     window: int | None = None,
     scale: float | None = None,
@@ -438,6 +453,7 @@ def decode_attention(
     dp = ctx.batch_axes if B % ctx.dp == 0 else None
     scale = scale if scale is not None else hd ** -0.5
     s_loc = S_max // n
+    pos = broadcast_pos(pos, B)
 
     def local_fn(ql, kl, vl, p):
         d = lax.axis_index(axis)
@@ -447,10 +463,10 @@ def decode_attention(
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, kl).astype(jnp.float32) * scale
         if softcap_val is not None:
             s = jnp.tanh(s / softcap_val) * softcap_val
-        valid = kpos <= p
+        valid = kpos[None, :] <= p[:, None]            # [b, s_loc] per slot
         if window is not None:
-            valid &= p - kpos < window
-        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+            valid &= p[:, None] - kpos[None, :] < window
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
         m = s.max(axis=-1)
         pr = jnp.exp(s - m[..., None])
         l = pr.sum(axis=-1)
@@ -461,7 +477,7 @@ def decode_attention(
     return shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None, None, None), P(dp, axis, None, None),
-                  P(dp, axis, None, None), P()),
+                  P(dp, axis, None, None), P(dp)),
         out_specs=P(dp, None, None, None),
         check_vma=False,
     )(q, k_cache, v_cache, pos).astype(q.dtype)
@@ -469,25 +485,150 @@ def decode_attention(
 
 def cache_update(ctx: ParallelContext, cache, new, pos):
     """Write ``new`` [B, 1, *rest] into a sequence-sharded cache
-    [B, S_max, *rest] at ``pos``; only the owning rank's slice is touched
-    (zero-copy-style: no gather, no staging buffer)."""
+    [B, S_max, *rest], row ``b`` at its own position ``pos[b]``; only the
+    owning rank's slice is touched (zero-copy-style: no gather, no
+    staging buffer).  A position at/past ``S_max`` is dropped — the
+    engine retires a slot *before* it would reach its cache bound
+    (:class:`repro.serve.engine.DecodeEngine`), so an in-graph write past
+    the end must not silently rewrite the last row."""
     axis, n = ctx.tp_axis, ctx.tp
     B, S_max = cache.shape[:2]
     rest = (None,) * (cache.ndim - 2)
     dp = ctx.batch_axes if B % ctx.dp == 0 else None
     s_loc = S_max // n
+    pos = broadcast_pos(pos, B)
 
     def local_fn(cl, nl, p):
         d = lax.axis_index(axis)
-        owner = p // s_loc
-        local_pos = jnp.clip(p - d * s_loc, 0, s_loc - 1)
-        old = lax.dynamic_slice_in_dim(cl, local_pos, 1, axis=1)
-        sel = jnp.where(owner == d, nl.astype(cl.dtype), old)
-        return lax.dynamic_update_slice_in_dim(cl, sel, local_pos, axis=1)
+        local_pos = p - d * s_loc                      # [b]
+        # rows outside this rank's slice (or past the cache bound) index
+        # out of range and are dropped by the scatter
+        rows = jnp.where((local_pos >= 0) & (local_pos < s_loc),
+                         local_pos, s_loc)
+        b = cl.shape[0]
+        return cl.at[jnp.arange(b), rows].set(
+            nl[:, 0].astype(cl.dtype), mode="drop")
 
     return shard_map(
         local_fn, mesh=ctx.mesh,
-        in_specs=(P(dp, axis, *rest), P(dp, None, *rest), P()),
+        in_specs=(P(dp, axis, *rest), P(dp, None, *rest), P(dp)),
         out_specs=P(dp, axis, *rest),
         check_vma=False,
     )(cache, new, pos)
+
+
+# ---------------------------------------------------------------------------
+# paged KV: block pool + per-request block tables (continuous batching)
+# ---------------------------------------------------------------------------
+# The dense decode cache above is [B, S_max, ...] — every slot pays for
+# the longest request it might ever serve.  The paged layout instead
+# shares one pool of fixed-size blocks ([NB, block, ...], blocks sharded
+# over tp) among all in-flight requests; a per-request *block table*
+# [B, MB] maps the request's sequence-block m to the pool block that
+# holds it (allocation/free lives host-side in
+# :class:`repro.serve.kv_cache.PagedKVCache`).  Ragged sequences then
+# cost HBM proportional to their actual lengths, not B x S_max.
+#
+# Sharding: pool blocks are sharded *contiguously* over the tp axis
+# (rank d owns global blocks [d*NB/n, (d+1)*NB/n)); each rank writes and
+# attends only the blocks it owns and the partials merge through the
+# same pmax/psum pair as the dense decode path.  The allocator stripes
+# handouts across ranks so load stays balanced.
+
+def paged_cache_update(ctx: ParallelContext, pool, new, tables, pos, valid):
+    """Scatter a token chunk into the block pool.
+
+    pool: [NB, block, *rest] (blocks sharded over tp); new: [B, C, *rest];
+    tables: [B, MB] global block ids; pos: [B, C] global positions;
+    valid: [B, C] bool (False rows — padding past a slot's ``n_new``, or
+    idle slots — are dropped).  Writes land only on the rank owning the
+    target block; positions whose block index falls outside the table are
+    dropped, never clamped."""
+    axis, n = ctx.tp_axis, ctx.tp
+    NB, block = pool.shape[:2]
+    rest = (None,) * (pool.ndim - 2)
+    B, C = pos.shape
+    MB = tables.shape[1]
+    nb_loc = NB // n
+
+    def local_fn(pl, nl, tbl, p, ok):
+        d = lax.axis_index(axis)
+        blk = p // block                                   # [B, C] seq-block
+        ok = ok & (blk < MB)
+        g = jnp.take_along_axis(tbl, jnp.clip(blk, 0, MB - 1), axis=1)
+        local = g - d * nb_loc
+        rows = jnp.where(ok & (local >= 0) & (local < nb_loc), local, nb_loc)
+        return pl.at[rows.reshape(-1), (p % block).reshape(-1)].set(
+            nl.reshape((B * C,) + nl.shape[2:]).astype(pl.dtype), mode="drop")
+
+    return shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(axis, None, *rest), P(None, None, *rest), P(), P(), P()),
+        out_specs=P(axis, None, *rest),
+        check_vma=False,
+    )(pool, new, tables, pos, valid)
+
+
+def paged_attention(
+    ctx: ParallelContext,
+    q,                  # [B, C, Hq, hd] replicated over tp
+    pool_k, pool_v,     # [NB, block, Hkv, hd] blocks sharded over tp
+    tables,             # [B, MB] int32 global block ids
+    pos,                # [B, C] global position of each query token
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    softcap_val: float | None = None,
+    kv_block: int = 1024,
+):
+    """Flash attention of a token chunk against a paged KV pool.
+
+    Each rank gathers the table blocks it owns, runs the shared
+    flash-update machinery over them span by span (per-slot causal /
+    window masks — the chunk's own KV is already in the pool, so one
+    pass covers both the cache and intra-chunk causality), and the
+    partials merge with the same pmax/psum pair as the dense decode
+    path.  C=1 is the pure-decode fast path; C>1 is a prefill chunk
+    (continuous batching mixes both in one call via the per-slot
+    positions)."""
+    axis, n = ctx.tp_axis, ctx.tp
+    NB, block, Hkv, hd = pool_k.shape
+    B, C, Hq, _ = q.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    MB = tables.shape[1]
+    nb_loc = NB // n
+    span = max(1, min(MB, kv_block // block))   # table blocks per flash span
+
+    def local_fn(ql, pkl, pvl, tbl, p):
+        d = lax.axis_index(axis)
+        b = ql.shape[0]
+        q5 = ql.reshape(b, C, Hkv, g, hd)
+        local = tbl - d * nb_loc                           # [B, MB]
+        own = (local >= 0) & (local < nb_loc)
+        rows = jnp.where(own, local, 0)
+        kg = pkl[rows]                                     # [B, MB, blk, ...]
+        vg = pvl[rows]
+        carry = _init_carry(b, Hkv, g, C, hd)
+        for m0 in range(0, MB, span):
+            me = min(MB, m0 + span)
+            sk = (me - m0) * block
+            ks = kg[:, m0:me].reshape(b, sk, Hkv, hd)
+            vs = vg[:, m0:me].reshape(b, sk, Hkv, hd)
+            kpos = m0 * block + jnp.arange(sk)             # [sk] global pos
+            ownmask = jnp.repeat(own[:, m0:me], block, axis=1)  # [B, sk]
+            mask = ownmask[:, None, :] & (kpos[None, None, :] <= p[:, :, None])
+            if window is not None:
+                mask &= p[:, :, None] - kpos[None, None, :] < window
+            carry = _flash_update(carry, q5, ks, vs, mask, scale, softcap_val)
+        m, l, o = carry
+        o = attention_partial_merge(o, m, l, axis)         # [b,hk,g,C,d]
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, C, Hq, hd)
+
+    return shard_map(
+        local_fn, mesh=ctx.mesh,
+        in_specs=(P(None, None, None, None), P(axis, None, None, None),
+                  P(axis, None, None, None), P(), P()),
+        out_specs=P(None, None, None, None),
+        check_vma=False,
+    )(q, pool_k, pool_v, tables, pos).astype(q.dtype)

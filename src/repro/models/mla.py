@@ -19,7 +19,8 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import attention_partial_merge, ring_permute
-from repro.models.attention import NEG_INF, _span_flash, _init_carry, _finalize
+from repro.models.attention import (NEG_INF, _span_flash, _init_carry,
+                                    _finalize, broadcast_pos)
 from repro.models.common import dense_init, key_iter
 from repro.models.layers import rms_norm
 from repro.models.rope import apply_rope
@@ -149,7 +150,9 @@ def mla_decode_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
 
     x: [B, 1, D] replicated over tp; c_cache: [B, S_max, ckv] and
     kr_cache: [B, S_max, dr], both sequence-sharded (current position
-    already written).  Partials are merged in latent space.
+    already written).  ``pos`` is the per-slot position vector [B] (a
+    scalar broadcasts); each slot applies RoPE and masks at its own
+    length.  Partials are merged in latent space.
     """
     axis, n = ctx.tp_axis, ctx.tp
     B, S_max, ckv = c_cache.shape
@@ -157,12 +160,13 @@ def mla_decode_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
     dp = ctx.batch_axes if B % ctx.dp == 0 else None
     s_loc = S_max // n
     scale = cfg.qk_dim ** -0.5
+    pos = broadcast_pos(pos, B)
 
     def local_fn(xl, cl, krl, p, pl):
         w_uk, w_uv = pl["w_uk"], pl["w_uv"]
         d = lax.axis_index(axis)
         b = xl.shape[0]
-        positions = jnp.broadcast_to(p, (1, 1))
+        positions = p[:, None]                                 # [b, 1]
         q_nope, q_rope, _c_new, _kr_new = _mla_qkv_latent(pl, cfg, xl, positions)
         # absorb W_uk into q: score_h(t) = q_eff_h . c_t + q_rope_h . kr_t
         q_eff = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)     # [b,1,H,ckv]
@@ -170,8 +174,8 @@ def mla_decode_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
         s_lat = jnp.einsum("bqhc,bkc->bhqk", q_eff, cl)
         s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, krl)
         s = (s_lat + s_rope).astype(jnp.float32) * scale       # [b,H,1,k]
-        valid = kpos <= p
-        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = kpos[None, :] <= p[:, None]                    # [b, s_loc]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
         m = s.max(axis=-1)
         pr = jnp.exp(s - m[..., None])
         l = pr.sum(axis=-1)
@@ -184,7 +188,7 @@ def mla_decode_attention(ctx: ParallelContext, params, cfg: MLAConfig, x,
     o = shard_map(
         local_fn, mesh=ctx.mesh,
         in_specs=(P(dp, None, None), P(dp, axis, None), P(dp, axis, None),
-                  P(), param_specs),
+                  P(dp), param_specs),
         out_specs=P(dp, None, None),
         check_vma=False,
     )(x, c_cache, kr_cache, pos, params)

@@ -22,8 +22,9 @@ from jax import lax
 from repro.core.loss import sharded_cross_entropy
 from repro.models import moe as moe_mod
 from repro.models import mla as mla_mod
-from repro.models.attention import (cache_update, context_attention,
-                                    decode_attention)
+from repro.models.attention import (broadcast_pos, cache_update,
+                                    context_attention, decode_attention,
+                                    paged_attention, paged_cache_update)
 from repro.models.common import Param, dense_init, is_param, key_iter
 from repro.models.layers import embedding_init, embedding_lookup, mlp_apply, mlp_init, rms_norm, rms_norm_init
 from repro.models.rope import apply_mrope, apply_rope, apply_rope_2d
@@ -324,11 +325,15 @@ def cache_logical_specs(cfg: TransformerConfig, cache):
 
 
 def _attn_decode(ctx, cfg: TransformerConfig, lp, x, layer_cache, pos, window):
+    """One decode-attention step.  ``pos`` is the per-slot position vector
+    [B] — each batch slot applies RoPE, writes its KV, and masks its
+    attention at its *own* length (continuous batching admits requests
+    into freed slots at position 0 while neighbors keep counting)."""
     B = x.shape[0]
     h = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
     if cfg.attn_type == "mla":
         c_new, kr_new = mla_mod.mla_latents_for_cache(
-            lp["attn"], cfg.mla, h, jnp.broadcast_to(pos, (1, 1)))
+            lp["attn"], cfg.mla, h, pos[:, None])
         cc = cache_update(ctx, layer_cache["c"], c_new, pos)
         kr = cache_update(ctx, layer_cache["kr"], kr_new, pos)
         out = mla_mod.mla_decode_attention(ctx, lp["attn"], cfg.mla, h, cc, kr, pos)
@@ -339,9 +344,9 @@ def _attn_decode(ctx, cfg: TransformerConfig, lp, x, layer_cache, pos, window):
     q = q.reshape(B, 1, Hq, hd)
     k = k.reshape(B, 1, Hkv, hd)
     v = v.reshape(B, 1, Hkv, hd)
-    positions = jnp.broadcast_to(pos, (1, 1))
+    positions = pos[:, None]                         # [B, 1] per-slot
     if cfg.rope_style == "mrope":  # text-phase decode: three equal streams
-        positions = jnp.broadcast_to(pos, (3, 1, 1))
+        positions = jnp.broadcast_to(positions, (3, B, 1))
     q = _apply_rope_any(cfg, q, positions)
     k = _apply_rope_any(cfg, k, positions)
     kc = cache_update(ctx, layer_cache["k"], k, pos)
@@ -369,9 +374,12 @@ def _layer_decode(ctx, cfg, lp, x, layer_cache, pos, window):
 
 def decode_step(ctx: ParallelContext, params, cfg: TransformerConfig,
                 tokens, cache, pos):
-    """One decode step.  tokens: [B, 1]; pos: [] int32 (0-based position of
-    the new token).  Returns (logits [B, 1, V], updated cache)."""
+    """One decode step.  tokens: [B, 1]; pos: [B] int32 (0-based position
+    of each slot's new token; a scalar broadcasts — every slot at the
+    same offset, the pre-continuous-batching behavior).  Returns
+    (logits [B, 1, V], updated cache)."""
     B = tokens.shape[0]
+    pos = broadcast_pos(pos, B)
     scale = cfg.d_model ** 0.5 if cfg.embed_scale else None
     x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False,
                          scale=scale).astype(cfg.cdtype)
@@ -420,3 +428,134 @@ def _lm_logits(ctx, params, cfg, x):
     if cfg.logit_softcap:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return logits
+
+
+# --- paged serving (continuous batching) ---------------------------------
+def init_paged_pool(cfg: TransformerConfig, num_blocks: int, block_size: int):
+    """Zeroed paged KV block pools shared by all in-flight requests.
+
+    Layout: {"scan": {"k": [L, NB, block, Hkv, hd], "v": ...}} (+ "prefix"
+    for dense-prefix layers); blocks are sharded over tp, mapped to
+    requests via host-side block tables (repro.serve.kv_cache).  GQA only
+    — MLA keeps the dense latent cache for now (registry gates on
+    ``supports_paged``)."""
+    if cfg.attn_type != "gqa":
+        raise NotImplementedError(
+            f"paged KV requires attn_type='gqa' ({cfg.name} is {cfg.attn_type})")
+
+    def one(n):
+        shape = (n, num_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.cdtype),
+                "v": jnp.zeros(shape, cfg.cdtype)}
+
+    pool = {"scan": one(cfg.n_layers - cfg.dense_prefix)}
+    if cfg.dense_prefix:
+        pool["prefix"] = one(cfg.dense_prefix)
+    return pool
+
+
+def pool_logical_specs(cfg: TransformerConfig, pool):
+    """Logical sharding specs for a paged pool: [L, NB(blocks/tp), ...]."""
+    def spec(x):
+        return (None, "seq") + (None,) * (x.ndim - 2)
+    return jax.tree.map(spec, pool)
+
+
+def _attn_serve(ctx, cfg: TransformerConfig, lp, x, layer_pool, tables,
+                positions, valid, window):
+    """Chunked attention against the paged pool.  x: [B, C, D]; positions
+    [B, C] are per-slot global offsets (decode: C=1 at pos; prefill: a
+    C-token chunk starting at pos); ``valid`` masks padding/idle rows out
+    of the cache write.  The chunk's own KV lands in the pool *before*
+    attention, so one causal pass covers both the cache and intra-chunk
+    dependencies."""
+    B, C, D = x.shape
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    qkv = h @ lp["attn"]["w_qkv"]
+    q, k, v = jnp.split(qkv, [Hq * hd, (Hq + Hkv) * hd], axis=-1)
+    q = q.reshape(B, C, Hq, hd)
+    k = k.reshape(B, C, Hkv, hd)
+    v = v.reshape(B, C, Hkv, hd)
+    rpos = positions
+    if cfg.rope_style == "mrope":   # text-phase serving: three equal streams
+        rpos = jnp.broadcast_to(positions[None], (3, B, C))
+    q = _apply_rope_any(cfg, q, rpos)
+    k = _apply_rope_any(cfg, k, rpos)
+    kc = paged_cache_update(ctx, layer_pool["k"], k, tables, positions, valid)
+    vc = paged_cache_update(ctx, layer_pool["v"], v, tables, positions, valid)
+    o = paged_attention(ctx, q, kc, vc, tables, positions, window=window,
+                        scale=cfg.query_scale, softcap_val=cfg.attn_softcap)
+    out = o.reshape(B, C, Hq * hd) @ lp["attn"]["w_o"]
+    return out, {"k": kc, "v": vc}
+
+
+def _layer_serve(ctx, cfg, lp, x, layer_pool, tables, positions, valid, window):
+    a, new_pool = _attn_serve(ctx, cfg, lp, x, layer_pool, tables, positions,
+                              valid, window)
+    if cfg.post_norms:
+        a = rms_norm(a, lp["post_ln1"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    if cfg.moe is not None and "router" in lp["ffn"]:
+        f = moe_mod.moe_apply(ctx, lp["ffn"], h, cfg.moe)
+    else:
+        f = mlp_apply(ctx, lp["ffn"], h, act=cfg.act, seq_sharded=False)
+    if cfg.post_norms:
+        f = rms_norm(f, lp["post_ln2"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    return x + f, new_pool
+
+
+def serve_step(ctx: ParallelContext, params, cfg: TransformerConfig,
+               tokens, pool, tables, pos, n_new):
+    """One continuous-batching step mixing prefill chunks and decode.
+
+    tokens: [B, C] (slot i's next n_new[i] tokens, zero-padded); tables:
+    [B, MB] global block ids; pos: [B] first new position per slot;
+    n_new: [B] with 0 = idle slot, 1 = decode step, >1 = prefill chunk.
+    C is static, so jit traces exactly two graphs per engine: the
+    chunked-prefill graph (C = chunk) and the decode fast path (C = 1).
+    Returns (last-valid logits [B, V] f32, updated pool)."""
+    B, C = tokens.shape
+    pos = broadcast_pos(pos, B)
+    n_new = jnp.asarray(n_new, jnp.int32)
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(C)[None, :] < n_new[:, None]
+    scale = cfg.d_model ** 0.5 if cfg.embed_scale else None
+    x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False,
+                         scale=scale).astype(cfg.cdtype)
+
+    new_prefix = []
+    for i, lp in enumerate(params.get("prefix", [])):
+        lc = jax.tree.map(lambda c: c[i], pool["prefix"])
+        x, nc = _layer_serve(ctx, cfg, lp["l0"], x, lc, tables, positions,
+                             valid, cfg.layer_window(0))
+        new_prefix.append(nc)
+
+    def group_body(carry, group_params):
+        h, scan_pool, li = carry
+        for i in range(cfg.pattern_len):
+            lc = jax.tree.map(
+                lambda c: lax.dynamic_index_in_dim(c, li + i, 0, keepdims=False),
+                scan_pool)
+            h, nc = _layer_serve(ctx, cfg, group_params[f"l{i}"], h, lc,
+                                 tables, positions, valid, cfg.layer_window(i))
+            scan_pool = jax.tree.map(
+                lambda c, n: lax.dynamic_update_slice_in_dim(c, n[None], li + i,
+                                                             axis=0),
+                scan_pool, nc)
+        return (h, scan_pool, li + cfg.pattern_len), ()
+
+    (x, new_scan, _), _ = lax.scan(group_body, (x, pool["scan"], jnp.int32(0)),
+                                   params["layers"])
+    new_pool = {"scan": new_scan}
+    if new_prefix:
+        new_pool["prefix"] = jax.tree.map(lambda *xs: jnp.stack(xs), *new_prefix)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    # each slot's logits come from its last *valid* token (prefill chunks
+    # only need the final position; idle slots produce garbage, discarded)
+    idx = jnp.clip(n_new - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # [B,1,D]
+    logits = _lm_logits(ctx, params, cfg, x_last)
+    return logits[:, 0], new_pool

@@ -22,7 +22,8 @@ from jax import lax
 from repro.core.loss import sharded_cross_entropy
 from repro.core.matmul_allreduce import matmul_allreduce
 from repro.models import mamba2 as m2
-from repro.models.attention import cache_update, context_attention, decode_attention
+from repro.models.attention import (broadcast_pos, cache_update,
+                                    context_attention, decode_attention)
 from repro.models.common import dense_init, key_iter
 from repro.models.layers import (embedding_init, embedding_lookup, mlp_apply,
                                  mlp_init, rms_norm, rms_norm_init)
@@ -141,7 +142,7 @@ def _shared_attn(ctx, cfg: Zamba2Config, sp, gp, xcat, *, cache=None, pos=None):
         o = context_attention(ctx, q, k, v, causal=True)
         new_cache = None
     else:
-        positions = jnp.broadcast_to(pos, (1, 1))
+        positions = pos[:, None]                     # [B, 1] per-slot
         q = apply_rope(q, positions, theta=cfg.rope_theta)
         k = apply_rope(k, positions, theta=cfg.rope_theta)
         kc = cache_update(ctx, cache["k"], k, pos)
@@ -267,6 +268,7 @@ def cache_logical_specs(cfg: Zamba2Config, cache):
 
 
 def decode_step(ctx: ParallelContext, params, cfg: Zamba2Config, tokens, cache, pos):
+    pos = broadcast_pos(pos, tokens.shape[0])
     x = embedding_lookup(ctx, params["embed"], tokens, seq_shard=False)
     x = x.astype(cfg.cdtype)
     x0 = x

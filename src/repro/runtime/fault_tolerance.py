@@ -155,6 +155,14 @@ class TrainSupervisor:
         self.faults_injected = 0
         self.rank_losses = 0
 
+    def _begin_trace(self) -> None:
+        """Reset the degradation policy's active-key ledger before any
+        fresh trace: the new trace repopulates it via ``effective_mode``,
+        so a later ``record_failure(None)`` blames only ops that are
+        actually live — not keys left over from retired traces."""
+        if self.degradation is not None:
+            self.degradation.begin_trace()
+
     def _feed_skew(self, dt: float) -> None:
         sched = self.skew_scheduler
         if sched is None:
@@ -165,6 +173,7 @@ class TrainSupervisor:
         if sched.observe(times):
             log.info("skew bucket -> %d (axis %r); re-jitting schedules",
                      sched.bucket, sched.axis)
+            self._begin_trace()
             self.step_fn = sched.fn()
 
     def maybe_restore(self, state):
@@ -198,6 +207,7 @@ class TrainSupervisor:
             metrics["loss"] = float("nan")
             return state, metrics
         with wire_faults(nth_send=ev.nth_send):
+            self._begin_trace()
             fn = self.rebuild_step()
             return fn(state, batch)
 
@@ -226,9 +236,11 @@ class TrainSupervisor:
         if self.degradation is None or not self.degradation.consume_dirty():
             return
         if self.skew_scheduler is not None:
+            self._begin_trace()
             self.skew_scheduler.invalidate()
             self.step_fn = self.skew_scheduler.fn()
         elif self.rebuild_step is not None:
+            self._begin_trace()
             self.step_fn = self.rebuild_step()
         else:
             log.warning("degradation changed but no rebuild_step/"
@@ -296,6 +308,7 @@ class TrainSupervisor:
                           e.rank, step)
                 state, new_fn = self.on_rank_loss(state, e)
                 if new_fn is not None:
+                    self._begin_trace()
                     self.step_fn = new_fn
                 replay.rewind(step)
                 continue

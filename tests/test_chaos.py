@@ -328,3 +328,54 @@ def test_serve_with_chaos_rank_loss_resharded(ctx):
     # greedy decode is deterministic across the shrink (allclose logits
     # -> identical argmax for this model/seed)
     assert {r.uid: r.tokens for r in fin} == want
+
+
+def test_serve_with_chaos_paged_engine_reshard(ctx):
+    """The paged engine survives a rank loss: block tables are host state,
+    but the pool lives on the lost mesh — reshard rebuilds the pool on the
+    shrunk mesh and replays in-flight requests through chunked prefill."""
+    from repro.configs.registry import get_arch
+    from repro.models.common import split_params
+    from repro.serve.engine import PagedDecodeEngine, serve_with_chaos
+
+    bundle = get_arch("chatglm3-6b").reduced()
+    params, specs = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+    serve = bundle.serve_step_fn(ctx)
+    sj = jax.jit(lambda t, pl, tb, p, n: serve(params, t, pl, tb, p, n))
+
+    def make_engine():
+        return PagedDecodeEngine(sj, bundle.init_paged_pool, batch_size=4,
+                                 num_blocks=16, block_size=8,
+                                 max_seq=bundle.config.max_seq, chunk=4,
+                                 n_stripes=ctx.tp)
+
+    base = make_engine()
+    for r in _requests(4):
+        base.submit(r)
+    want = {r.uid: r.tokens for r in base.run_until_drained(max_steps=120)}
+
+    engine = make_engine()
+    for r in _requests(4):
+        engine.submit(r)
+    shrunk = {}
+
+    def reshard_fn(eng):
+        new_ctx = shrink_context(ctx)
+        new_params, _ = reshard_tree(params, specs, new_ctx)
+        sfn = bundle.serve_step_fn(new_ctx)
+        new_jit = jax.jit(
+            lambda t, pl, tb, p, n: sfn(new_params, t, pl, tb, p, n))
+        n = eng.reshard(new_jit, bundle.init_paged_pool,
+                        n_stripes=new_ctx.tp)
+        shrunk["world"], shrunk["requeued"] = new_ctx.world, n
+
+    plan = FaultPlan([FaultEvent(step=2, kind="rank_loss", rank=7)])
+    fin, stats = serve_with_chaos(engine, plan, reshard_fn=reshard_fn,
+                                  sleep_fn=lambda s: None, max_steps=200)
+    assert stats["reshards"] == 1 and stats["drained"]
+    assert shrunk["world"] == ctx.world // 2 and shrunk["requeued"] == 4
+    assert len(fin) == 4
+    # chunked-prefill replay on the new pool resumes the same greedy
+    # continuation the uninterrupted run produced
+    assert {r.uid: r.tokens for r in fin} == want
+    assert engine.kv.used_blocks == 0

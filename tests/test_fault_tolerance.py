@@ -181,3 +181,33 @@ def test_replay_buffer_unit():
     short.next_batch(), short.next_batch()
     with pytest.raises(StopIteration):
         short.next_batch()
+
+
+def test_rebuild_paths_reset_degradation_active_ledger(tmp_path):
+    """Every supervisor rebuild calls begin_trace() first, so a blanket
+    record_failure(None) blames only keys live in the current trace —
+    not fused decisions left over from retired traces."""
+    from repro.core.degrade import DegradationPolicy, DegradeConfig
+
+    pol = DegradationPolicy(DegradeConfig(max_failures=1))
+    pol.effective_mode("stale_op", (1, 2), "fused")   # from an old trace
+
+    def rebuild():
+        # a fresh trace re-registers only the ops actually in it
+        pol.effective_mode("live_op", (3, 4), "fused")
+        return lambda s, b: (s, {"loss": 0.0})
+
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=str(tmp_path / "ck"),
+                         async_save=False),
+        lambda s, b: (s, {"loss": 0.0}),
+        degradation=pol, rebuild_step=rebuild, sleep_fn=lambda s: None)
+
+    # one strike quarantines stale_op -> dirty -> supervisor re-jits
+    pol.record_failure(("stale_op", (1, 2)))
+    sup._maybe_rebuild()
+    assert ("live_op", (3, 4)) in pol._active
+    assert ("stale_op", (1, 2)) not in pol._active
+    # a NaN-loss blanket strike now blames only the live trace's key
+    jailed = pol.record_failure(None)
+    assert jailed == [("live_op", (3, 4))]

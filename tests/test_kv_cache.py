@@ -1,0 +1,70 @@
+"""Paged KV host side: block allocator, tables, striping, rollback."""
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import FREE_BLOCK, OutOfBlocks, PagedKVCache
+
+
+def test_alloc_stripes_round_robin():
+    kv = PagedKVCache(num_blocks=8, block_size=4,
+                      max_blocks_per_request=4, n_stripes=4)
+    kv.ensure(0, 16)   # 4 blocks
+    stripes = sorted(b // 2 for b in kv.blocks_for(0))
+    # one block from each rank stripe: balanced HBM/attention load
+    assert stripes == [0, 1, 2, 3]
+
+
+def test_ensure_is_incremental_and_idempotent():
+    kv = PagedKVCache(16, 4, max_blocks_per_request=8)
+    kv.ensure(1, 3)
+    assert len(kv.blocks_for(1)) == 1 and kv.capacity(1) == 4
+    kv.ensure(1, 4)    # still fits the first block
+    assert len(kv.blocks_for(1)) == 1
+    kv.ensure(1, 5)
+    assert len(kv.blocks_for(1)) == 2
+    assert kv.used_blocks == 2
+
+
+def test_release_returns_blocks_and_reuse():
+    kv = PagedKVCache(4, 4, max_blocks_per_request=4)
+    kv.ensure(1, 16)
+    with pytest.raises(OutOfBlocks):
+        kv.ensure(2, 4)
+    kv.release(1)
+    assert kv.free_blocks == 4
+    kv.ensure(2, 16)   # the freed blocks are immediately reusable
+    assert kv.used_blocks == 4
+    assert kv.peak_blocks == 4
+
+
+def test_failed_ensure_rolls_back_partial_growth():
+    kv = PagedKVCache(4, 4, max_blocks_per_request=4)
+    kv.ensure(1, 12)   # 3 of 4 blocks
+    with pytest.raises(OutOfBlocks):
+        kv.ensure(2, 8)  # needs 2, only 1 free
+    # the one block grabbed before exhaustion went back to the pool
+    assert kv.blocks_for(2) == []
+    assert kv.free_blocks == 1
+    kv.ensure(2, 4)      # single block still fits
+    assert len(kv.blocks_for(2)) == 1
+
+
+def test_table_bound_raises_value_error():
+    kv = PagedKVCache(16, 4, max_blocks_per_request=2)
+    with pytest.raises(ValueError):
+        kv.ensure(0, 9)  # 3 blocks > MB=2
+
+
+def test_tables_for_pads_with_sentinel():
+    kv = PagedKVCache(8, 4, max_blocks_per_request=3)
+    kv.ensure(7, 5)
+    t = kv.tables_for([7, None])
+    assert t.shape == (2, 3)
+    assert (t[1] == FREE_BLOCK).all()          # empty slot: all sentinel
+    assert (t[0][2:] == FREE_BLOCK).all()      # unused tail: sentinel
+    assert sorted(t[0][:2]) == sorted(kv.blocks_for(7))
+
+
+def test_num_blocks_must_divide_stripes():
+    with pytest.raises(ValueError):
+        PagedKVCache(6, 4, max_blocks_per_request=2, n_stripes=4)

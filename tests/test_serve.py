@@ -1,11 +1,14 @@
 """Decode engine: continuous batching drains requests with sane tokens."""
+import dataclasses
+import logging
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
 from repro.models.common import split_params
-from repro.serve.engine import DecodeEngine, Request
+from repro.serve.engine import DecodeEngine, PagedDecodeEngine, Request
 
 
 def test_engine_drains(ctx):
@@ -73,3 +76,162 @@ def test_queue_is_fifo_and_consumed_is_request_state():
     # prompt replay bookkeeping lives on the dataclass, not an ad-hoc attr
     assert all(r.consumed == len(r.prefix) for r in fin)
     assert not hasattr(fin[0], "_consumed")
+
+
+# ---------------------------------------------------------------------------
+# slot-reuse correctness (the cross-request KV contamination regression)
+# ---------------------------------------------------------------------------
+def _pos_aware_decode(tok, cache, pos):
+    """Position-aware fake decoder: a [B, 32] cache of written tokens.
+
+    Each step writes tok at the slot's own position and emits
+    argmax = (sum of the slot's rows 0..pos) % 16 — so attending over a
+    previous occupant's stale rows (the shared-position bug) changes the
+    output.  The old ``_fake_decode`` ignored cache and pos entirely,
+    which is why the contamination slipped through."""
+    b = tok.shape[0]
+    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    cache = cache.at[jnp.arange(b), p].set(tok[:, 0])
+    mask = jnp.arange(cache.shape[1])[None, :] <= p[:, None]
+    nxt = jnp.where(mask, cache, 0).sum(axis=1) % 16
+    logits = jax.nn.one_hot(nxt, 16)[:, None, :]
+    return logits, cache
+
+
+def _pos_cache(b):
+    return jnp.zeros((b, 32), jnp.int32)
+
+
+def test_slot_reuse_same_tokens_as_served_alone():
+    """A request admitted into a freed slot must decode exactly as it
+    does in a fresh engine — per-slot positions reset the causal window
+    to the new request's own rows."""
+    alone = DecodeEngine(_pos_aware_decode, _pos_cache, batch_size=1,
+                         max_seq=32)
+    alone.submit(Request(uid=1, prompt=[7, 2], max_new=5))
+    want = alone.run_until_drained(max_steps=40)[0].tokens
+
+    engine = DecodeEngine(_pos_aware_decode, _pos_cache, batch_size=1,
+                          max_seq=32)
+    # a longer first occupant leaves high-position stale rows behind
+    engine.submit(Request(uid=0, prompt=[9, 9, 9, 9], max_new=6))
+    engine.submit(Request(uid=1, prompt=[7, 2], max_new=5))
+    fin = engine.run_until_drained(max_steps=60)
+    assert [r.uid for r in fin] == [0, 1]
+    assert fin[1].tokens == want
+
+
+def test_slot_reuse_bit_identical_real_model(ctx):
+    """Acceptance regression on the real reduced model: a request served
+    after another retires (reused slot, dirty cache rows) produces
+    bit-identical tokens to the same request in a fresh engine — for the
+    dense engine and the paged engine both."""
+    bundle = get_arch("chatglm3-6b").reduced()
+    cfg = bundle.config
+    params, _ = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+    probe = Request(uid=1, prompt=[11, 3, 5], max_new=6)
+    filler = Request(uid=0, prompt=[400, 401, 402, 403, 404], max_new=8)
+
+    decode = bundle.decode_fn(ctx)
+    dj = jax.jit(lambda t, c, p: decode(params, t, c, p))
+
+    def dense_engine():
+        return DecodeEngine(dj, bundle.init_cache, batch_size=1,
+                            max_seq=cfg.max_seq)
+
+    alone = dense_engine()
+    alone.submit(dataclasses.replace(probe, tokens=[], prefix=[]))
+    want = alone.run_until_drained(max_steps=100)[0].tokens
+
+    reused = dense_engine()
+    reused.submit(dataclasses.replace(filler, tokens=[], prefix=[]))
+    reused.submit(dataclasses.replace(probe, tokens=[], prefix=[]))
+    fin = reused.run_until_drained(max_steps=100)
+    assert fin[1].tokens == want, "dense slot reuse changed the decode"
+
+    serve = bundle.serve_step_fn(ctx)
+    sj = jax.jit(lambda t, pl, tb, p, n: serve(params, t, pl, tb, p, n))
+
+    def paged_engine():
+        return PagedDecodeEngine(sj, bundle.init_paged_pool, batch_size=1,
+                                 num_blocks=8, block_size=8,
+                                 max_seq=cfg.max_seq, chunk=4,
+                                 n_stripes=ctx.tp)
+
+    p_alone = paged_engine()
+    p_alone.submit(dataclasses.replace(probe, tokens=[], prefix=[]))
+    assert p_alone.run_until_drained(max_steps=100)[0].tokens == want
+
+    p_reused = paged_engine()
+    p_reused.submit(dataclasses.replace(filler, tokens=[], prefix=[]))
+    p_reused.submit(dataclasses.replace(probe, tokens=[], prefix=[]))
+    p_fin = p_reused.run_until_drained(max_steps=100)
+    assert p_fin[1].tokens == want, "paged slot reuse changed the decode"
+
+
+# ---------------------------------------------------------------------------
+# satellites: zero-budget requests, cache bound, drain truncation
+# ---------------------------------------------------------------------------
+def test_max_new_zero_retires_with_no_tokens():
+    """A zero-budget request finishes with zero generated tokens (the old
+    engine decoded one token before checking the budget)."""
+    engine = DecodeEngine(_fake_decode, lambda b: None, batch_size=2)
+    engine.submit(Request(uid=0, prompt=[3], max_new=0))
+    engine.submit(Request(uid=1, prompt=[3], max_new=2))
+    fin = engine.run_until_drained(max_steps=20)
+    z = next(r for r in fin if r.uid == 0)
+    assert z.done and z.tokens == []
+    assert next(r for r in fin if r.uid == 1).tokens == [4, 5]
+
+
+def test_cache_bound_retires_truncated_not_overwrites():
+    """A slot reaching max_seq retires with truncated=True instead of
+    silently rewriting the last cache row forever."""
+    engine = DecodeEngine(_pos_aware_decode, _pos_cache, batch_size=1,
+                          max_seq=8)
+    engine.submit(Request(uid=0, prompt=[1], max_new=100))
+    fin = engine.run_until_drained(max_steps=50)
+    assert len(fin) == 1 and fin[0].truncated
+    # 8 cache writes fit (prompt at 0, generated tokens at 1..7); the
+    # final step's logits still yield one more sampled token, so 8 tokens
+    # come out and the 9th — which would need a 9th write — never does
+    assert len(fin[0].tokens) == 8
+
+
+def test_run_until_drained_surfaces_truncation(caplog):
+    engine = DecodeEngine(_fake_decode, lambda b: None, batch_size=1)
+    for i in range(4):
+        engine.submit(Request(uid=i, prompt=[1, 2], max_new=4))
+    with caplog.at_level(logging.WARNING, logger="repro.serve"):
+        fin = engine.run_until_drained(max_steps=3)
+    assert not fin.drained
+    assert any("TRUNCATED" in r.message for r in caplog.records)
+    # and a clean drain reports drained=True with no warning
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.serve"):
+        rest = engine.run_until_drained(max_steps=200)
+    assert rest.drained
+    assert not any("TRUNCATED" in r.message for r in caplog.records)
+
+
+def test_paged_engine_ttft_timestamps_and_block_recycling(ctx):
+    bundle = get_arch("chatglm3-6b").reduced()
+    params, _ = split_params(bundle.init_params(jax.random.PRNGKey(0)))
+    serve = bundle.serve_step_fn(ctx)
+    sj = jax.jit(lambda t, pl, tb, p, n: serve(params, t, pl, tb, p, n))
+    engine = PagedDecodeEngine(sj, bundle.init_paged_pool, batch_size=2,
+                               num_blocks=8, block_size=8,
+                               max_seq=bundle.config.max_seq, chunk=4,
+                               n_stripes=ctx.tp)
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        engine.submit(Request(uid=i, prompt=rng.integers(0, 64, 3).tolist(),
+                              max_new=4))
+    fin = engine.run_until_drained(max_steps=200)
+    assert fin.drained and len(fin) == 5
+    for r in fin:
+        assert r.t_submit is not None and r.t_first is not None
+        assert r.t_submit <= r.t_first <= r.t_done
+    # every retired request returned its blocks
+    assert engine.kv.used_blocks == 0
+    assert 0 < engine.kv.peak_blocks <= engine.kv.num_blocks
