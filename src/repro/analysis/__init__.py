@@ -1,0 +1,29 @@
+"""Static comm-graph analysis over jaxprs (CoCoNet/Inductor-style pass).
+
+Three layers:
+
+  :mod:`repro.analysis.commgraph` — walk a traced ``ClosedJaxpr`` and
+  classify every collective (inside and outside ``shard_map`` bodies)
+  into the repo's fused-op pattern families.
+
+  :mod:`repro.analysis.rewrite` — score each match bulk-vs-fused with the
+  alpha-beta model (per-axis hardware, autotune cache, degradation
+  quarantines) and return a rewritten callable that routes profitable
+  matches through the existing fused ops (``--auto-fuse``).
+
+  :mod:`repro.analysis.lint` — report-only explain mode plus the static
+  schedule verifier shared with the property-test suite
+  (``--explain-comm`` / ``scripts/lint_comm.py``).
+"""
+from repro.analysis.commgraph import (CollectiveSite, CommGraph,
+                                      build_comm_graph)
+from repro.analysis.rewrite import FusionPlan, SiteReport, auto_fuse, plan_rewrites
+from repro.analysis.lint import (explain_comm, render_report,
+                                 schedule_violations, verify_schedules)
+
+__all__ = [
+    "CollectiveSite", "CommGraph", "build_comm_graph",
+    "FusionPlan", "SiteReport", "auto_fuse", "plan_rewrites",
+    "explain_comm", "render_report", "schedule_violations",
+    "verify_schedules",
+]

@@ -1,0 +1,140 @@
+"""Collective lint: the ``--explain-comm`` report and the static schedule
+verifier.
+
+The report is report-only by design: it traces the user's step function
+(shapes only — ``jax.ShapeDtypeStruct`` args work), runs the same
+classification and scoring the ``--auto-fuse`` pass uses, and prints one
+line per collective site — family, location, shapes, the modeled
+bulk→fused times, and a concrete reason whenever a site is not fusible
+(indivisible shape, unsupported axis, quarantined key, wire constraint,
+opaque container, no modeled win).
+
+The schedule verifier proves, before anything is traced, that the static
+send schedule of the direct-A2A family is a permutation: for every
+``skew ∈ [0, world)`` and sub-chunk factor ``q``, each rank's
+``sub_chunk_send_events`` covers every (destination, fine-chunk) pair
+exactly once, and ``sub_chunk_service_order`` is a permutation of the
+sub-rings.  The expected cover comes from
+:func:`repro.core.scheduling.expected_send_cover` — the same single
+definition the hypothesis property suite checks against, so the lint lane
+and the tests cannot drift.  ``events_fn``/``order_fn`` are injectable so
+a unit test can prove the verifier actually rejects a corrupted schedule
+(the PR-3 dropped-skew bug class).
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Callable, Iterable, Sequence
+
+import jax
+
+from repro.core.scheduling import (expected_send_cover, sub_chunk_send_events,
+                                   sub_chunk_service_order)
+from repro.parallel.sharding import ParallelContext
+
+
+# ---------------------------------------------------------------------------
+# static schedule verification
+# ---------------------------------------------------------------------------
+def schedule_violations(world: int, chunks_per_rank: int,
+                        schedule: str = "comm_aware", skew: int = 0, *,
+                        events_fn: Callable | None = None,
+                        order_fn: Callable | None = None) -> list[str]:
+    """Check one (world, q, schedule, skew) point; return violation
+    messages (empty = the schedule is a valid exact cover)."""
+    events_fn = events_fn or sub_chunk_send_events
+    order_fn = order_fn or sub_chunk_service_order
+    q = chunks_per_rank
+    tag = f"world={world} q={q} {schedule} skew={skew}"
+    want = expected_send_cover(world, q)
+    msgs: list[str] = []
+    events = events_fn(world, q, schedule, skew)
+    if len(events) != world:
+        return [f"{tag}: {len(events)} per-rank schedules for {world} ranks"]
+    for r, sends in enumerate(events):
+        seen = Counter(tuple(ev) for ev in sends)
+        for pair, cnt in sorted(seen.items()):
+            if cnt > 1:
+                msgs.append(f"{tag} rank {r}: (dest,fine)={pair} sent "
+                            f"{cnt} times")
+            if pair not in want:
+                msgs.append(f"{tag} rank {r}: spurious send {pair} "
+                            "(fine chunk does not belong to dest)")
+        missing = sorted(want - set(seen))
+        for pair in missing:
+            msgs.append(f"{tag} rank {r}: (dest,fine)={pair} never sent")
+    order = order_fn(q, skew)
+    if sorted(order) != list(range(max(q, 1))):
+        msgs.append(f"{tag}: service order {order} is not a permutation "
+                    f"of {max(q, 1)} sub-rings")
+    return msgs
+
+
+def verify_schedules(worlds: Iterable[int] = (2, 4, 8),
+                     qs: Iterable[int] = (1, 2, 4),
+                     schedules: Iterable[str] = ("comm_aware", "oblivious"),
+                     *, events_fn: Callable | None = None,
+                     order_fn: Callable | None = None) -> list[str]:
+    """Sweep every skew rotation of every (world, q, schedule) candidate
+    — the full space a launch could configure — and return all
+    violations."""
+    msgs: list[str] = []
+    for world in worlds:
+        for q in qs:
+            for sched in schedules:
+                for skew in range(world):
+                    msgs.extend(schedule_violations(
+                        world, q, sched, skew,
+                        events_fn=events_fn, order_fn=order_fn))
+    return msgs
+
+
+# ---------------------------------------------------------------------------
+# report rendering
+# ---------------------------------------------------------------------------
+def _fmt_shapes(shapes: Sequence) -> str:
+    return " ".join("x".join(str(d) for d in s) if s else "scalar"
+                    for s in shapes)
+
+
+def render_report(reports, ctx: ParallelContext) -> str:
+    """Human-readable comm-graph report from ``plan_rewrites`` output."""
+    mesh = dict(ctx.mesh.shape)
+    fam = Counter(r.family for r in reports)
+    lines = [f"comm-graph report: {len(reports)} collective site(s) on mesh "
+             f"{mesh}, fusion mode {ctx.fusion.mode!r}",
+             "families: " + (", ".join(f"{k} x{v}"
+                                       for k, v in sorted(fam.items()))
+                             or "none")]
+    for i, r in enumerate(reports):
+        lines.append(f"[{i}] {r.family}  at {r.path}  "
+                     f"axes={','.join(r.axes) or '-'}  "
+                     f"shapes {_fmt_shapes(r.shapes)}")
+        if r.bulk_us is not None:
+            dec = f"q={r.q} wire={r.wire}"
+            sav = (f"  ({r.savings_pct:+.1f}%)"
+                   if r.savings_pct is not None else "")
+            lines.append(f"    modeled bulk {r.bulk_us:.2f}us -> fused "
+                         f"{r.fused_us:.2f}us{sav}  [{dec}]")
+        if r.rewritten:
+            lines.append("    fusible: yes — rewritten to the fused op")
+        elif r.fusible:
+            lines.append("    fusible: yes")
+        else:
+            lines.append(f"    fusible: no — {r.reason}")
+    n_rw = sum(1 for r in reports if r.rewritten)
+    lines.append(f"{n_rw}/{len(reports)} site(s) rewritten")
+    return "\n".join(lines)
+
+
+def explain_comm(ctx: ParallelContext, fn, *args) -> str:
+    """Trace ``fn(*args)`` (arrays or ShapeDtypeStructs), classify and
+    score every collective, and render the report.  Report-only: nothing
+    is rewritten or executed."""
+    from repro.analysis.commgraph import build_comm_graph
+    from repro.analysis.rewrite import plan_rewrites
+
+    closed = jax.make_jaxpr(fn)(*args)
+    graph = build_comm_graph(closed, ctx)
+    plan = plan_rewrites(graph, ctx)
+    return render_report(plan.reports, ctx)

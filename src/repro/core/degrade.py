@@ -105,6 +105,11 @@ class DegradationPolicy:
     def quarantined(self, op: str, shape: Sequence[int]) -> bool:
         return (str(op), tuple(int(s) for s in shape)) in self._quarantine
 
+    def quarantined_keys(self) -> tuple[DegradeKey, ...]:
+        """Snapshot of the jailed keys (the comm-graph analyzer lists
+        these in its report; order is deterministic for test output)."""
+        return tuple(sorted(self._quarantine))
+
     def consume_dirty(self) -> bool:
         """True exactly once after the quarantine set changed — the
         caller's cue to re-jit so the new mode decisions take effect."""
@@ -148,6 +153,13 @@ def set_degradation_policy(policy: DegradationPolicy | None):
 
 def get_degradation_policy() -> DegradationPolicy | None:
     return _POLICY
+
+
+def is_quarantined(op: str, shape: Sequence[int]) -> bool:
+    """Read-only quarantine probe (no active-key bookkeeping): the static
+    analyzer asks this before planning a rewrite, without registering the
+    key as live in the current trace the way ``degrade_mode`` does."""
+    return _POLICY is not None and _POLICY.quarantined(op, shape)
 
 
 def degrade_mode(op: str, shape: Sequence[int], mode: str) -> str:

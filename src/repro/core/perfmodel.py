@@ -140,5 +140,17 @@ def model_fused(flops, hbm_bytes, wire_bytes, chunks, *, bw=None,
     return max(overlapped + chunks * hw.chunk_overhead - zero_copy_saving, 0.0)
 
 
+def model_pair(flops, hbm_bytes, wire_bytes, chunks, *, wire_factor=1.0,
+               hw: HardwareModel | MeshHardwareModel = V5E, axis=None):
+    """(bulk, fused) modeled seconds for one site under one decision —
+    the side-by-side comparison the comm-graph analyzer reports and gates
+    rewrites on.  ``wire_factor`` scales the fused wire bytes for a
+    compressed payload (the bulk baseline always ships the compute
+    dtype)."""
+    return (model_bulk(flops, hbm_bytes, wire_bytes, hw=hw, axis=axis),
+            model_fused(flops, hbm_bytes, wire_bytes * wire_factor, chunks,
+                        hw=hw, axis=axis))
+
+
 def pct_reduction(bulk: float, fused: float) -> float:
     return 100.0 * (bulk - fused) / bulk

@@ -66,6 +66,17 @@ def sub_chunk_send_events(world: int, chunks_per_rank: int,
     return events
 
 
+def expected_send_cover(world: int, chunks_per_rank: int) -> set:
+    """The (destination, fine-chunk) pairs every rank's send schedule must
+    emit exactly once: fine chunk ``dest * q + s`` for each destination's
+    ``q`` sub-slices.  This is the ground truth both the static schedule
+    verifier (:mod:`repro.analysis.lint`) and the hypothesis property
+    suite check :func:`sub_chunk_send_events` against — one definition, so
+    the lint and the tests can never drift apart."""
+    q = chunks_per_rank
+    return {(d, d * q + s) for d in range(world) for s in range(q)}
+
+
 def sub_chunk_service_order(n_sub: int, skew: int = 0) -> list[int]:
     """Service order of the ``n_sub`` independent sub-chunk rings inside a
     ring-carry op (reduce-scatter / KV / CE rings).

@@ -34,7 +34,16 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
+    ap.add_argument("--fusion", default="fused",
+                    choices=["fused", "bulk", "kernel", "auto"])
+    ap.add_argument("--auto-fuse", action="store_true",
+                    help="trace decode with bulk collectives and let the "
+                         "jaxpr comm-graph analyzer rewrite profitable "
+                         "matches to the fused ops (same as --fusion auto)")
+    ap.add_argument("--explain-comm", action="store_true",
+                    help="report-only: print every collective in one decode "
+                         "step with its family, modeled savings and "
+                         "not-fusible reasons, then exit without serving")
     ap.add_argument("--paged", action="store_true",
                     help="paged/block KV cache + chunked prefill "
                          "(continuous batching over a shared block pool)")
@@ -49,6 +58,8 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     add_chaos_cli_args(ap)
     args = ap.parse_args()
+    if args.auto_fuse:
+        args.fusion = "auto"
 
     load_cache_if_exists(args.tune_cache)
     fusion = FusionConfig(mode=args.fusion, granularity=args.granularity,
@@ -63,6 +74,21 @@ def main():
     params_p = bundle.init_params(jax.random.PRNGKey(0))
     params, param_specs = split_params(params_p)
     decode = bundle.decode_fn(ctx)
+
+    if args.explain_comm:
+        import dataclasses
+
+        from repro.analysis import explain_comm
+        # analyze the bulk-traced decode graph, whatever --fusion says
+        ectx = ctx.with_fusion(dataclasses.replace(fusion, mode="auto"))
+        tok0 = np.zeros((args.batch, 1), np.int32)
+        print(explain_comm(ectx, bundle.decode_fn(ectx), params, tok0,
+                           bundle.init_cache(args.batch), 0))
+        return []
+
+    if args.fusion == "auto":
+        from repro.analysis import auto_fuse
+        decode = auto_fuse(ctx, decode)
     decode_jit = jax.jit(lambda t, c, pos: decode(params, t, c, pos))
 
     if args.calibrate:
@@ -126,6 +152,9 @@ def main():
                             n_stripes=ctx.tp)
         else:
             dec = bundle.decode_fn(ctx)
+            if args.fusion == "auto":
+                from repro.analysis import auto_fuse
+                dec = auto_fuse(ctx, dec)
             new_jit = jax.jit(lambda t, c, pos: dec(params, t, c, pos))
             n = eng.reshard(new_jit, bundle.init_cache, args.batch)
         print(f"rank lost: mesh -> {dict(ctx.mesh.shape)}, "

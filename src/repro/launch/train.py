@@ -76,7 +76,17 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--fusion", default="fused", choices=["fused", "bulk", "kernel"])
+    ap.add_argument("--fusion", default="fused",
+                    choices=["fused", "bulk", "kernel", "auto"])
+    ap.add_argument("--auto-fuse", action="store_true",
+                    help="trace the model with bulk collectives and let the "
+                         "jaxpr comm-graph analyzer rewrite profitable "
+                         "matches to the fused ops (same as --fusion auto)")
+    ap.add_argument("--explain-comm", action="store_true",
+                    help="report-only: print every collective in the step, "
+                         "its fused-op family, the modeled bulk->fused "
+                         "savings and the reason when not fusible, then "
+                         "exit without training")
     add_granularity_cli_args(ap)
     add_calibration_cli_args(ap)
     ap.add_argument("--skew-schedule", action="store_true",
@@ -93,6 +103,8 @@ def main():
     add_chaos_cli_args(ap)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+    if args.auto_fuse:
+        args.fusion = "auto"
 
     load_cache_if_exists(args.tune_cache)
     fusion = FusionConfig(mode=args.fusion, granularity=args.granularity,
@@ -113,9 +125,24 @@ def main():
     state_sh = _shardings(ctx, train_state_specs(tc, param_specs))
     state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, state_sh)
 
+    if args.explain_comm:
+        from repro.analysis import explain_comm
+        import jax.numpy as jnp
+        # the report always analyzes the bulk-traced graph ("auto"): that
+        # is the form the rewrite pass sees, whatever --fusion says
+        ectx = ctx.with_fusion(dataclasses.replace(fusion, mode="auto"))
+        batch0 = jax.tree.map(
+            jnp.asarray, next(iter(make_batches(bundle, args.batch, args.seq))))
+        print(explain_comm(ectx, bundle.loss_fn(ectx), params, batch0))
+        return []
+
     def build_step(skew: int = 0):
         c = ctx.with_fusion(dataclasses.replace(fusion, skew=skew))
-        return jax.jit(build_train_step(bundle.loss_fn(c), tc),
+        loss = bundle.loss_fn(c)
+        if fusion.mode == "auto":
+            from repro.analysis import auto_fuse
+            loss = auto_fuse(c, loss)
+        return jax.jit(build_train_step(loss, tc),
                        donate_argnums=(0,))
 
     step_fn = build_step()

@@ -42,6 +42,11 @@ class FusionConfig:
                  overlaps wire time with the remaining chunks' compute.
       "kernel" - Pallas device-initiated kernels (remote DMA) where
                  available; falls back to "fused" elsewhere.
+      "auto"   - trace-time graph mode: every call site emits the bulk
+                 reference collectives, and the jaxpr comm-graph analyzer
+                 (:mod:`repro.analysis`) rewrites the profitable matches
+                 to the fused ops afterwards (``--auto-fuse`` on the
+                 launchers).  Model code needs no fused-op calls at all.
     schedule:
       "comm_aware"  - remote-destined chunks are computed first, the
                       locally-consumed chunk last (paper Fig. 6b / 7b).
@@ -96,7 +101,8 @@ class FusionConfig:
 
     def resolve(self, which: str) -> str:
         """Effective mode for one of the fused-op families."""
-        if self.mode == "bulk" or not getattr(self, f"fuse_{which}"):
+        if self.mode in ("bulk", "auto") or not getattr(self, f"fuse_{which}"):
+            # "auto": trace bulk; the comm-graph analyzer rewrites after
             return "bulk"
         return self.mode
 

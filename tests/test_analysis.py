@@ -1,0 +1,229 @@
+"""Comm-graph analyzer: classification, lint reasons, schedule verifier.
+
+Everything here is static — models are traced on ``ShapeDtypeStruct``
+leaves (no arrays allocated, no collectives executed).  The executed
+rewrite path is covered by ``test_auto_fuse.py``.
+"""
+import jax
+import numpy as np
+
+from repro.analysis import (build_comm_graph, explain_comm, plan_rewrites,
+                            schedule_violations, verify_schedules)
+from repro.analysis import commgraph as cg
+from repro.configs.registry import get_arch
+from repro.core.degrade import (DegradationPolicy, DegradeConfig,
+                                set_degradation_policy)
+from repro.core.scheduling import expected_send_cover, sub_chunk_send_events
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import make_batches
+from repro.models.common import split_params
+from repro.parallel.sharding import FusionConfig
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+        tree)
+
+
+def _trace(arch, mode="auto", batch=8, seq=16):
+    ctx = make_host_mesh(fusion=FusionConfig(mode=mode))
+    bundle = get_arch(arch).reduced()
+    params = jax.eval_shape(
+        lambda k: split_params(bundle.init_params(k))[0],
+        jax.random.PRNGKey(0))
+    batch0 = _sds(next(iter(make_batches(bundle, batch, seq))))
+    closed = jax.make_jaxpr(bundle.loss_fn(ctx))(params, batch0)
+    return ctx, bundle, params, batch0, closed
+
+
+# ---------------------------------------------------------------------------
+# classification
+# ---------------------------------------------------------------------------
+def test_detects_four_fused_families_across_registry():
+    """The acceptance sweep: over three registry configs the analyzer
+    must classify and rewrite at least four distinct fused-op families."""
+    rewritten = set()
+    for arch in ("chatglm3-6b", "dbrx-132b", "dlrm"):
+        ctx, _, _, _, closed = _trace(arch)
+        plan = plan_rewrites(build_comm_graph(closed, ctx), ctx)
+        rewritten.update(r.family for r in plan.reports if r.rewritten)
+    assert {cg.ALLGATHER_MATMUL, cg.MATMUL_REDUCESCATTER,
+            cg.MOE_DISPATCH_COMBINE, cg.EMBEDDING_A2A} <= rewritten
+    assert len(rewritten) >= 4
+
+
+def test_transformer_sites_and_paths():
+    ctx, _, _, _, closed = _trace("chatglm3-6b")
+    graph = build_comm_graph(closed, ctx)
+    fam = graph.families()
+    assert fam[cg.ALLGATHER_MATMUL] == 2          # qkv + FFN up
+    assert fam[cg.MATMUL_REDUCESCATTER] == 1      # FFN down
+    assert fam[cg.KV_ALLGATHER] == 1
+    # the per-layer sites live under the layer-stacked scan + remat
+    layer = [s for s in graph.sites if s.family == cg.ALLGATHER_MATMUL][0]
+    assert layer.pathstr == "scan/remat2"
+    assert layer.rewritable
+
+
+def test_moe_and_embedding_detection():
+    ctx, _, _, _, closed = _trace("dbrx-132b")
+    graph = build_comm_graph(closed, ctx)
+    assert graph.families()[cg.MOE_DISPATCH_COMBINE] == 1
+    site = [s for s in graph.sites
+            if s.family == cg.MOE_DISPATCH_COMBINE][0]
+    assert site.detail["axis"] == ctx.tp_axis
+
+    ctx, _, _, _, closed = _trace("dlrm")
+    graph = build_comm_graph(closed, ctx)
+    assert graph.families()[cg.EMBEDDING_A2A] == 1
+    site = [s for s in graph.sites if s.family == cg.EMBEDDING_A2A][0]
+    # flattened-world ring: multi-axis collective
+    assert len(site.axes) > 1
+
+
+def test_already_fused_sites_are_left_alone():
+    """Hand-fused ppermute rings (CE loss, embedding rings) must be
+    recognized and never rewritten."""
+    ctx, _, _, _, closed = _trace("chatglm3-6b")
+    plan = plan_rewrites(build_comm_graph(closed, ctx), ctx)
+    fused = [r for r in plan.reports if r.family == cg.ALREADY_FUSED]
+    assert fused and all(not r.rewritten for r in fused)
+    assert all("already fused" in r.reason for r in fused)
+
+
+# ---------------------------------------------------------------------------
+# lint reasons
+# ---------------------------------------------------------------------------
+def test_kv_allgather_reports_reassociation_reason():
+    ctx, _, _, _, closed = _trace("chatglm3-6b")
+    plan = plan_rewrites(build_comm_graph(closed, ctx), ctx)
+    kv = [r for r in plan.reports if r.family == cg.KV_ALLGATHER]
+    assert kv and not kv[0].rewritten
+    assert "not value-preserving" in kv[0].reason
+
+
+def test_quarantined_key_is_not_rewritten():
+    """A key jailed by the degradation policy must stay bulk — the
+    analyzer consults the same ledger as the hand-fused call sites."""
+    ctx, _, _, _, closed = _trace("chatglm3-6b")
+    plan = plan_rewrites(build_comm_graph(closed, ctx), ctx)
+    target = [r for r in plan.reports
+              if r.family == cg.ALLGATHER_MATMUL and r.rewritten][0]
+    key = ("allgather_matmul",
+           tuple(target.shapes[0]) + tuple(target.shapes[1]))
+    pol = DegradationPolicy(DegradeConfig(max_failures=1))
+    prev = set_degradation_policy(pol)
+    try:
+        assert pol.record_failure(key) == [key]
+        assert pol.quarantined_keys() == (key,)
+        plan2 = plan_rewrites(build_comm_graph(closed, ctx), ctx)
+        jailed = [r for r in plan2.reports
+                  if r.family == cg.ALLGATHER_MATMUL
+                  and tuple(r.shapes[0]) + tuple(r.shapes[1]) == key[1]]
+        assert jailed and all(not r.rewritten for r in jailed)
+        assert all("quarantined" in r.reason for r in jailed)
+        # the other families are unaffected
+        assert any(r.rewritten for r in plan2.reports
+                   if r.family == cg.MATMUL_REDUCESCATTER)
+    finally:
+        set_degradation_policy(prev)
+
+
+def test_disabled_flag_reports_reason():
+    ctx, _, _, _, closed = _trace("chatglm3-6b")
+    ctx_off = ctx.with_fusion(FusionConfig(mode="auto",
+                                           fuse_ag_matmul=False))
+    plan = plan_rewrites(build_comm_graph(closed, ctx_off), ctx_off)
+    ag = [r for r in plan.reports if r.family == cg.ALLGATHER_MATMUL]
+    assert ag and all(not r.rewritten for r in ag)
+    assert all("fuse_ag_matmul" in r.reason for r in ag)
+
+
+def test_report_renders_families_and_savings():
+    ctx, bundle, params, batch0, _ = _trace("chatglm3-6b")
+    text = explain_comm(ctx, bundle.loss_fn(ctx), params, batch0)
+    assert "comm-graph report" in text
+    assert cg.ALLGATHER_MATMUL in text
+    assert "modeled bulk" in text and "fusible: yes" in text
+    assert "fusible: no" in text
+    assert "site(s) rewritten" in text
+
+
+def test_auto_mode_resolves_to_bulk_at_trace_time():
+    f = FusionConfig(mode="auto")
+    for fam in ("ag_matmul", "matmul_rs", "moe_a2a", "embed_a2a", "kv_ag"):
+        assert f.resolve(fam) == "bulk"
+
+
+# ---------------------------------------------------------------------------
+# static schedule verifier
+# ---------------------------------------------------------------------------
+def test_schedule_sweep_is_clean():
+    assert verify_schedules() == []
+
+
+def test_expected_cover_matches_events():
+    for world, q in ((4, 1), (8, 2), (8, 4)):
+        want = expected_send_cover(world, q)
+        for sends in sub_chunk_send_events(world, q):
+            assert set(sends) == want
+
+
+def test_verifier_rejects_dropped_send():
+    """A schedule that silently drops one send event — the PR-3 bug
+    class — must be flagged with the missing (dest, fine) pair."""
+    def dropped(world, q, schedule, skew):
+        ev = sub_chunk_send_events(world, q, schedule, skew)
+        ev[1] = ev[1][:-1]
+        return ev
+
+    msgs = schedule_violations(8, 2, "comm_aware", 3, events_fn=dropped)
+    assert msgs and any("never sent" in m for m in msgs)
+
+
+def test_verifier_rejects_duplicate_and_misrouted_send():
+    def duped(world, q, schedule, skew):
+        ev = sub_chunk_send_events(world, q, schedule, skew)
+        ev[0] = ev[0] + [ev[0][0]]          # duplicate
+        return ev
+
+    msgs = schedule_violations(4, 2, events_fn=duped)
+    assert any("sent 2 times" in m for m in msgs)
+
+    def misrouted(world, q, schedule, skew):
+        ev = sub_chunk_send_events(world, q, schedule, skew)
+        (d, f) = ev[2][0]
+        ev[2] = [((d + 1) % world, f)] + ev[2][1:]   # wrong destination
+        return ev
+
+    msgs = schedule_violations(4, 1, events_fn=misrouted)
+    assert any("spurious send" in m for m in msgs)
+
+
+def test_verifier_rejects_bad_service_order():
+    def bad_order(q, skew):
+        return [0] * max(q, 1)
+
+    msgs = schedule_violations(4, 4, order_fn=bad_order)
+    assert any("not a permutation" in m for m in msgs)
+
+
+def test_verifier_catches_skew_only_corruption():
+    """A corruption that only manifests under nonzero skew is caught by
+    the sweep (the exact dropped-skew regression shape)."""
+    def skew_blind(world, q, schedule, skew):
+        return sub_chunk_send_events(world, q, schedule, 0)
+
+    # every individual point is a valid cover, so per-point checks pass…
+    assert schedule_violations(8, 2, "comm_aware", 5,
+                               events_fn=skew_blind) == []
+    # …but a skew-dependent *order* corruption is caught: serve order
+    def skew_blind_order(q, skew):
+        from repro.core.scheduling import sub_chunk_service_order
+        order = sub_chunk_service_order(q, 0)
+        return order[:-1] + [order[0]] if skew else order
+
+    msgs = verify_schedules(worlds=(4,), qs=(4,),
+                            order_fn=skew_blind_order)
+    assert any("not a permutation" in m for m in msgs)

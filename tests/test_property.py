@@ -7,8 +7,11 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.scheduling import (reduce_ring_chunk_order, ring_offsets,
-                                   sub_chunk_send_events)
+from repro.analysis.lint import schedule_violations
+from repro.core.scheduling import (expected_send_cover,
+                                   reduce_ring_chunk_order, ring_offsets,
+                                   sub_chunk_send_events,
+                                   sub_chunk_service_order)
 from repro.train.grad_compression import _dequantize_int8, _quantize_int8
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -24,21 +27,25 @@ def test_ring_offsets_cover_all_peers(world):
     assert ring_offsets(world, "comm_aware")[-1] == 0
 
 
-@given(st.integers(2, 32), st.integers(1, 8), st.integers(0, 1000))
+@given(st.integers(2, 32), st.sampled_from([1, 2, 4]), st.integers(0, 1000))
 @settings(**SETTINGS)
 def test_sub_chunk_schedule_is_permutation(world, q, skew):
     """Sub-chunk ring scheduling is a permutation: for arbitrary
     (n_dev, chunks_per_rank, skew), every (rank, fine chunk) payload is
-    sent exactly once and lands at the owning destination."""
+    sent exactly once and lands at the owning destination.
+
+    The exact-cover checks go through the same
+    ``schedule_violations`` / ``expected_send_cover`` pair the static
+    lint lane runs (``scripts/lint_comm.py``) — one implementation, so
+    the property suite and the lint verifier can never drift apart."""
     for schedule in ["comm_aware", "oblivious"]:
+        assert schedule_violations(world, q, schedule, skew) == []
         events = sub_chunk_send_events(world, q, schedule, skew)
-        assert len(events) == world
+        want = expected_send_cover(world, q)
         for r, sends in enumerate(events):
-            fines = [f for _, f in sends]
-            # each rank emits every fine chunk exactly once ...
-            assert sorted(fines) == list(range(world * q))
-            # ... addressed to the rank that owns it
-            assert all(dest == f // q for dest, f in sends)
+            # the exact-cover invariant, stated directly against the
+            # shared ground-truth definition
+            assert set(sends) == want and len(sends) == len(want)
             # sub-chunks of one destination payload are issued in order,
             # back to back (each forwarded as soon as the previous one is
             # consumed — never interleaved across destinations)
@@ -50,6 +57,19 @@ def test_sub_chunk_schedule_is_permutation(world, q, skew):
     aware = sub_chunk_send_events(world, q, "comm_aware", skew)
     for r, sends in enumerate(aware):
         assert all(dest == r for dest, _ in sends[-q:])
+
+
+@given(st.sampled_from([1, 2, 4]), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_sub_chunk_service_order_is_permutation(q, skew):
+    """The ring-carry sub-ring service order is a permutation of the
+    sub-rings under any skew rotation (the other half of what the static
+    schedule verifier proves)."""
+    order = sub_chunk_service_order(q, skew)
+    assert sorted(order) == list(range(q))
+    # rotation only: relative cyclic order of the sub-rings is preserved
+    r = skew % q
+    assert order == list(range(r, q)) + list(range(r))
 
 
 @given(st.integers(2, 32), st.integers(1, 31))
