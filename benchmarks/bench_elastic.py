@@ -1,0 +1,157 @@
+"""Elastic recovery across a *real* process boundary: MTTR + throughput.
+
+Spawns coordinator-wired jax.distributed CPU worker processes through
+:class:`~repro.runtime.multiprocess.MultiprocessDriver` (the same
+harness as ``pytest -m multiprocess``) and runs two sections:
+
+* **ring** — measured cross-process all-reduce times on the data axis,
+  fitted to the alpha-beta model and compared against the stock DCN
+  constants of :class:`~repro.core.hardware.MeshHardwareModel` (the
+  ``--calibrate`` path's cost model, now fed by measurement);
+* **recovery** — a short supervised run where one worker is SIGKILLed
+  mid-training; survivors detect the loss through the heartbeat
+  watchdog (RankLost from *liveness*, no fault injection), respawn on
+  the shrunk world, restore from checkpoint, and finish.  Reports MTTR
+  (wall time from the kill to the first recovered step) and per-step
+  times before/after the shrink.
+
+Machine-readable output: ``BENCH_elastic.json`` (schema-validated on
+every write).  Pinned invariants: the recovery drill completes, and the
+survivor generation makes positive throughput.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import tempfile
+
+import numpy as np
+
+JSON_PATH = "BENCH_elastic.json"
+
+SCHEMA_KEYS = {"workload", "worlds", "ring", "recovery",
+               "invariant_recovery_completed",
+               "invariant_survivor_throughput_positive"}
+
+_WORKERS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "multiprocess", "workers")
+
+
+def _validate(out):
+    missing = SCHEMA_KEYS - out.keys()
+    assert not missing, f"BENCH_elastic.json schema rot: missing {missing}"
+    assert out["invariant_recovery_completed"], \
+        "elastic recovery drill did not complete"
+    assert out["invariant_survivor_throughput_positive"], \
+        "survivor generation made no progress"
+
+
+def _read(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _ring_section(world, workdir, timeout_s):
+    from repro.runtime.multiprocess import EXIT_OK, MultiprocessDriver
+
+    res_dir = os.path.join(workdir, "ring_res")
+    d = MultiprocessDriver([os.path.join(_WORKERS, "ring_worker.py")],
+                           world, devices_per_proc=max(1, 8 // world),
+                           workdir=os.path.join(workdir, "ring"),
+                           extra={"result_dir": res_dir}, hang_grace_s=10.0)
+    d.launch_generation(0, world)
+    result = d.wait_generation(timeout_s)
+    assert all(c == EXIT_OK for c in result.codes.values()), result.codes
+    out = _read(os.path.join(res_dir, "ring.json"))
+    return {"world": world, "sizes_bytes": out["sizes"],
+            "times_s": out["times_s"], "alpha_s": out["alpha_s"],
+            "beta_s_per_byte": out["beta_s_per_byte"],
+            "measured_bw_gbps": out["measured_bw"] / 1e9,
+            "measured_pred_s": out["measured_pred_s"],
+            "dcn_pred_s": out["dcn_pred_s"]}
+
+
+def _recovery_section(world, steps, kill_step, workdir, timeout_s):
+    from repro.runtime.multiprocess import (EXIT_OK, EXIT_RESHARD,
+                                            MultiprocessDriver)
+
+    res_dir = os.path.join(workdir, "res")
+    extra = {"steps": steps, "batch": 8, "seq": 32, "ckpt_every": 3,
+             "stall_after": 2.0, "ckpt_dir": os.path.join(workdir, "ckpt"),
+             "result_dir": res_dir}
+    d = MultiprocessDriver([os.path.join(_WORKERS, "train_worker.py")],
+                           world, devices_per_proc=max(1, 8 // world),
+                           workdir=os.path.join(workdir, "train"),
+                           extra=extra, hang_grace_s=10.0)
+    victim = world - 1          # never rank 0: it hosts the coordinator
+    report = d.run_elastic(
+        max_generations=3, gen_timeout_s=timeout_s,
+        faults={0: lambda drv: drv.kill_at_step(victim, kill_step)})
+
+    assert report.completed, [g.codes for g in report.generations]
+    g0, g1 = report.generations[0], report.generations[1]
+    assert g0.codes[victim] == -signal.SIGKILL
+    assert g0.codes[0] == EXIT_RESHARD
+
+    kill_t = report.events("kill")[-1][2]
+    r0 = _read(os.path.join(res_dir, "result_g0_r0.json"))
+    r1 = _read(os.path.join(res_dir, "result_g1_r0.json"))
+    assert r1["completed"] and r1["start_step"] > 0
+
+    def step_s(rec):
+        ts = [s["t"] for s in rec["steps"]]
+        return float(np.median(np.diff(ts))) if len(ts) > 1 else 0.0
+
+    first_recovered_t = r1["steps"][0]["t"]
+    mttr_s = first_recovered_t - kill_t
+    g1_step = step_s(r1)
+    return {"world": world, "survivor_world": g1.world,
+            "kill_step": kill_step, "mttr_s": mttr_s,
+            "gen0_step_s": step_s(r0), "gen1_step_s": g1_step,
+            "survivor_throughput_steps_per_s":
+                (1.0 / g1_step) if g1_step > 0 else 0.0,
+            "restored_step": r1["start_step"],
+            "completed": bool(r1["completed"]),
+            "generations": len(report.generations),
+            "final_codes": {str(k): v for k, v in g1.codes.items()}}
+
+
+def run(report, smoke=False):
+    worlds = [2] if smoke else [2, 4]
+    steps = 10 if smoke else 20
+    kill_step = 4 if smoke else 8
+    timeout_s = 420.0
+
+    out = {"workload": "train_worker chatglm3-6b(reduced) b8 s32 + "
+                       "SIGKILL mid-run; ring_worker alpha-beta fit",
+           "worlds": worlds, "ring": [], "recovery": []}
+
+    root = tempfile.mkdtemp(prefix="bench_elastic_")
+    try:
+        for world in worlds:
+            wdir = os.path.join(root, f"w{world}")
+            os.makedirs(wdir, exist_ok=True)
+            ring = _ring_section(world, wdir, timeout_s)
+            out["ring"].append(ring)
+            report(f"ring_allreduce_w{world}_max",
+                   ring["times_s"][-1] * 1e6,
+                   f"bw={ring['measured_bw_gbps']:.2f}GB/s")
+
+            rec = _recovery_section(world, steps, kill_step, wdir, timeout_s)
+            out["recovery"].append(rec)
+            report(f"elastic_mttr_w{world}", rec["mttr_s"] * 1e6,
+                   f"step={rec['gen1_step_s'] * 1e3:.0f}ms "
+                   f"world->{rec['survivor_world']}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    out["invariant_recovery_completed"] = all(
+        r["completed"] for r in out["recovery"])
+    out["invariant_survivor_throughput_positive"] = all(
+        r["survivor_throughput_steps_per_s"] > 0 for r in out["recovery"])
+    _validate(out)
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    report("elastic_json", 0.0, JSON_PATH)

@@ -28,6 +28,7 @@ BENCHES = [
     ("bench_serve", "SLO serving: Poisson TTFT/TPOT + paged-KV HBM"),
     ("bench_scaleout_sim", "Fig. 15 128-node DLRM scale-out sim"),
     ("bench_kernels", "device-initiated kernel comparison"),
+    ("bench_elastic", "multi-process elastic recovery: MTTR + ring fit"),
 ]
 
 

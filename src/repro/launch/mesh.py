@@ -15,9 +15,37 @@ from repro.parallel.sharding import FusionConfig, ParallelContext
 from repro.compat import make_mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+# Topology registry: name -> (shape, axis names).  ``assert_production_
+# topology`` and the dry-run launchers size themselves from here, so a
+# new slice shape is one registry entry instead of scattered constants.
+PRODUCTION_TOPOLOGIES = {
+    "v5e-256": ((16, 16), ("data", "model")),
+    "v5e-2pod-512": ((2, 16, 16), ("pod", "data", "model")),
+}
+DEFAULT_TOPOLOGY = "v5e-256"
+DEFAULT_MULTI_POD_TOPOLOGY = "v5e-2pod-512"
+
+
+def production_topology(*, multi_pod: bool = False,
+                        topology: str | None = None):
+    """(shape, axes) for a registered production topology."""
+    if topology is None:
+        topology = DEFAULT_MULTI_POD_TOPOLOGY if multi_pod else DEFAULT_TOPOLOGY
+    try:
+        return PRODUCTION_TOPOLOGIES[topology]
+    except KeyError:
+        raise KeyError(f"unknown topology {topology!r}; registered: "
+                       f"{sorted(PRODUCTION_TOPOLOGIES)}") from None
+
+
+def production_mesh_shape(*, multi_pod: bool = False,
+                          topology: str | None = None):
+    return production_topology(multi_pod=multi_pod, topology=topology)[0]
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         topology: str | None = None):
+    shape, axes = production_topology(multi_pod=multi_pod, topology=topology)
     return make_mesh(shape, axes)
 
 

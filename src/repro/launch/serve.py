@@ -6,6 +6,8 @@
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -17,12 +19,17 @@ from repro.core.autotune import (add_granularity_cli_args,
 from repro.core.calibrate import (add_calibration_cli_args,
                                   warmup_and_calibrate)
 from repro.core.degrade import DegradationPolicy, set_degradation_policy
+from repro.launch.distributed import (add_distributed_cli_args,
+                                      build_liveness_from_args,
+                                      init_distributed_from_args)
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
-from repro.runtime.chaos import add_chaos_cli_args, build_fault_plan
+from repro.runtime.chaos import (CollectiveTimeout, RankLost,
+                                 add_chaos_cli_args, build_fault_plan)
 from repro.runtime.elastic import reshard_tree, shrink_context
 from repro.serve.engine import (DecodeEngine, PagedDecodeEngine, Request,
+                                request_journal, resubmit_journal,
                                 serve_with_chaos)
 from repro.serve.kv_cache import dense_cache_hbm_bytes, pool_hbm_bytes
 
@@ -56,10 +63,19 @@ def main():
     add_granularity_cli_args(ap)
     add_calibration_cli_args(ap)
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--journal", default=None,
+                    help="request-journal path: unfinished requests are "
+                         "persisted here on a liveness failure and "
+                         "resubmitted (tokens intact) on the next launch "
+                         "— the cross-process drain-reshard-resume story")
+    add_distributed_cli_args(ap)
     add_chaos_cli_args(ap)
     args = ap.parse_args()
     if args.auto_fuse:
         args.fusion = "auto"
+
+    init_distributed_from_args(args)
+    hb_writer, liveness = build_liveness_from_args(args)
 
     load_cache_if_exists(args.tune_cache)
     fusion = FusionConfig(mode=args.fusion, granularity=args.granularity,
@@ -128,10 +144,18 @@ def main():
     else:
         engine = DecodeEngine(decode_jit, bundle.init_cache, args.batch,
                               max_seq=cfg.max_seq)
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, size=rng.integers(2, 6)).tolist()
-        engine.submit(Request(uid=i, prompt=prompt, max_new=args.max_new))
+    if args.journal and os.path.exists(args.journal):
+        with open(args.journal) as f:
+            n = resubmit_journal(engine, json.load(f))
+        print(f"journal: resubmitted {n} unfinished requests "
+              f"(tokens intact) from {args.journal}")
+    else:
+        rng = np.random.default_rng(0)
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab,
+                                  size=rng.integers(2, 6)).tolist()
+            engine.submit(Request(uid=i, prompt=prompt,
+                                  max_new=args.max_new))
 
     max_steps = args.requests * (getattr(cfg, "max_seq", 512) - 1)
     plan = build_fault_plan(args.chaos, num_steps=max_steps)
@@ -161,18 +185,43 @@ def main():
               f"{n} in-flight requests re-queued")
 
     t0 = time.time()
-    if plan is not None:
-        finished, stats = serve_with_chaos(engine, plan,
-                                           reshard_fn=reshard_fn,
-                                           max_steps=max_steps)
-        print(f"chaos: plan {plan.summary()}; ticks {stats['ticks']}, "
-              f"dropped {stats['dropped']}, reshards {stats['reshards']}, "
-              f"drained {stats['drained']}")
-    else:
-        finished = engine.run_until_drained(max_steps=max_steps)
-        if not finished.drained:
-            print(f"WARNING: stopped at max_steps={max_steps} before "
-                  f"draining — results truncated")
+    if liveness is not None:
+        liveness.enabled = True   # serving has no compile-length steps
+    try:
+        if plan is not None:
+            finished, stats = serve_with_chaos(engine, plan,
+                                               reshard_fn=reshard_fn,
+                                               max_steps=max_steps)
+            print(f"chaos: plan {plan.summary()}; ticks {stats['ticks']}, "
+                  f"dropped {stats['dropped']}, reshards "
+                  f"{stats['reshards']}, drained {stats['drained']}")
+        else:
+            finished = engine.run_until_drained(max_steps=max_steps,
+                                                liveness=liveness)
+            if not finished.drained:
+                print(f"WARNING: stopped at max_steps={max_steps} before "
+                      f"draining — results truncated")
+        if hb_writer is not None:
+            hb_writer.stop()
+    except (RankLost, CollectiveTimeout) as e:
+        if liveness is None:
+            raise
+        # Real liveness failure mid-drain: journal the unfinished
+        # requests (tokens intact) and leave with the respawn protocol
+        # code — the relaunched engine resubmits them and every request
+        # still drains to completion.
+        from repro.runtime.multiprocess import EXIT_RESHARD, EXIT_RESTART
+
+        if args.journal:
+            with open(args.journal, "w") as f:
+                json.dump(request_journal(engine), f)
+            print(f"journal: persisted {len(request_journal(engine))} "
+                  f"unfinished requests to {args.journal}")
+        code = EXIT_RESHARD if isinstance(e, RankLost) else EXIT_RESTART
+        print(f"liveness failure: {e}; exiting with respawn code {code}",
+              flush=True)
+        hb_writer.stop()
+        os._exit(code)
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in finished)
     print(f"served {len(finished)} requests, {total_tokens} tokens in "

@@ -12,10 +12,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import logging
+import os
 import time
 
 import jax
 import numpy as np
+
+from repro.runtime.chaos import CollectiveTimeout, RankLost
 
 from repro.configs.registry import get_arch
 from repro.core.autotune import (add_granularity_cli_args,
@@ -24,6 +27,9 @@ from repro.core.calibrate import (add_calibration_cli_args,
                                   warmup_and_calibrate)
 from repro.core.degrade import DegradationPolicy, set_degradation_policy
 from repro.data.synthetic import DLRMBatches, LMBatches
+from repro.launch.distributed import (add_distributed_cli_args,
+                                      build_liveness_from_args,
+                                      init_distributed_from_args)
 from repro.launch.mesh import make_context, make_host_mesh
 from repro.models.common import split_params
 from repro.parallel.sharding import FusionConfig
@@ -100,11 +106,15 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    add_distributed_cli_args(ap)
     add_chaos_cli_args(ap)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     if args.auto_fuse:
         args.fusion = "auto"
+
+    init_distributed_from_args(args)
+    hb_writer, liveness = build_liveness_from_args(args)
 
     load_cache_if_exists(args.tune_cache)
     fusion = FusionConfig(mode=args.fusion, granularity=args.granularity,
@@ -185,13 +195,20 @@ def main():
         # runs degrade to the replicated local time — rotation stays 0)
         per_rank_times="process" if skew_sched is not None else None,
         fault_plan=fault_plan, degradation=degradation,
-        rebuild_step=build_step, on_rank_loss=on_rank_loss)
+        rebuild_step=build_step, liveness=liveness,
+        # With real liveness the in-process shrink cannot survive a dead
+        # gloo world: RankLost must propagate so this process can exit
+        # with the elastic-respawn protocol code for its driver.
+        on_rank_loss=None if liveness is not None else on_rank_loss)
 
     t0 = time.time()
     losses = []
 
     def on_metrics(step, metrics):
         losses.append(float(metrics["loss"]))
+        if liveness is not None:
+            hb_writer.beat(step=step)
+            liveness.enabled = True   # armed once the first step lands
         if step % args.log_every == 0:
             print(f"step {step:5d} loss {losses[-1]:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
@@ -199,7 +216,25 @@ def main():
                   f"({(time.time() - t0) / max(step, 1):.2f}s/step)",
                   flush=True)
 
-    state, step = sup.run(state, batches, args.steps, on_metrics=on_metrics)
+    try:
+        state, step = sup.run(state, batches, args.steps,
+                              on_metrics=on_metrics)
+        if hb_writer is not None:
+            hb_writer.stop()
+    except (RankLost, CollectiveTimeout) as e:
+        if liveness is None:
+            raise
+        # Elastic respawn protocol: a real peer death/stall was detected
+        # by the heartbeat watchdog.  Leave with the protocol exit code
+        # so the driver relaunches the survivors (shrunk or same-size
+        # world); training resumes from --ckpt-dir.
+        from repro.runtime.multiprocess import EXIT_RESHARD, EXIT_RESTART
+
+        code = EXIT_RESHARD if isinstance(e, RankLost) else EXIT_RESTART
+        print(f"liveness failure: {e}; exiting with respawn code {code}",
+              flush=True)
+        hb_writer.stop()
+        os._exit(code)
     span = (f"loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses
             else "no steps run (resumed at or past num_steps)")
     print(f"done at step {step}; {span}; "

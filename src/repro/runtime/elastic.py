@@ -19,7 +19,8 @@ from repro.parallel.sharding import ParallelContext
 
 
 def shrink_context(ctx: ParallelContext, factor: int = 2,
-                   axis: str | None = None, fusion=None) -> ParallelContext:
+                   axis: str | None = None, fusion=None,
+                   lost=None) -> ParallelContext:
     """A smaller-world ``ParallelContext`` after losing capacity.
 
     Shrinks one mesh axis by ``factor`` and rebuilds the mesh from the
@@ -29,6 +30,13 @@ def shrink_context(ctx: ParallelContext, factor: int = 2,
     changes every sharded matmul's decomposition.  Falls back to the tp
     axis when no dp axis is divisible.  The hardware model carries over
     (link classes attach to axis *names*, which survive the resize).
+
+    ``lost`` names the dead devices as flat indices into the flattened
+    old world (e.g. ``range(0, 4)`` when the process owning the *first*
+    four devices died — a non-prefix survivor set).  The new mesh is
+    then built from the first ``keep`` devices that are **not** lost,
+    instead of blindly taking the prefix — taking the prefix after
+    losing device 0 would rebuild the mesh around dead hardware.
     """
     if factor < 2:
         raise ValueError(f"shrink factor must be >= 2, got {factor}")
@@ -48,7 +56,20 @@ def shrink_context(ctx: ParallelContext, factor: int = 2,
     shape = [ctx.mesh.shape[n] // factor if n == axis else ctx.mesh.shape[n]
              for n in names]
     keep = int(np.prod(shape))
-    devices = np.asarray(ctx.mesh.devices).reshape(-1)[:keep].reshape(shape)
+    flat = np.asarray(ctx.mesh.devices).reshape(-1)
+    if lost is not None:
+        dead = {int(i) for i in lost}
+        bad = dead - set(range(flat.size))
+        if bad:
+            raise ValueError(f"lost indices {sorted(bad)} outside the "
+                             f"flattened world of {flat.size} devices")
+        flat = np.asarray([d for i, d in enumerate(flat) if i not in dead])
+        if flat.size < keep:
+            raise ValueError(
+                f"only {flat.size} devices survive ({len(dead)} lost) but "
+                f"the shrunk mesh {dict(zip(names, shape))} needs {keep}; "
+                f"shrink by a larger factor")
+    devices = flat[:keep].reshape(shape)
     new_mesh = Mesh(devices, names)
     if fusion is None:
         fusion = ctx.fusion
@@ -68,14 +89,23 @@ def reshard_tree(tree, logical_specs, new_ctx: ParallelContext):
     return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings), shardings
 
 
-def rescale_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
+def rescale_batch(global_batch: int, old_dp: int, new_dp: int,
+                  microbatches: int = 1) -> int:
     """Keep per-device batch constant under world resize.
 
     ``global_batch`` must shard evenly over ``old_dp`` — otherwise "per-
     device batch" is ill-defined and the round trip does not invert
     (e.g. batch 4 on dp 8 clamps to 1/device, returning 8 on re-grow).
     That silent 2x batch change corrupts the learning-rate/batch coupling,
-    so it warns loudly instead of passing unnoticed."""
+    so it warns loudly instead of passing unnoticed.
+
+    ``microbatches`` is the per-step grad-accumulation split: when a dp
+    shrink drops the rescaled batch below (or off a multiple of) the
+    microbatch count, some microbatches would be empty and the split
+    no longer divides — the new batch is rounded **up** to the next
+    multiple so accumulation stays well-formed, again with a loud
+    warning (the effective batch grew; the LR schedule may need a
+    touch)."""
     if global_batch % old_dp:
         warnings.warn(
             f"global batch {global_batch} does not divide over dp={old_dp}; "
@@ -83,7 +113,16 @@ def rescale_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
             f"and the effective global batch changes under resize",
             RuntimeWarning, stacklevel=2)
     per_dev = max(1, global_batch // old_dp)
-    return per_dev * new_dp
+    new_batch = per_dev * new_dp
+    if microbatches > 1 and new_batch % microbatches:
+        rounded = -(-new_batch // microbatches) * microbatches
+        warnings.warn(
+            f"rescaled batch {new_batch} (dp {old_dp} -> {new_dp}) no "
+            f"longer divides into {microbatches} microbatches; rounding up "
+            f"to {rounded} — the effective global batch changes under "
+            f"resize", RuntimeWarning, stacklevel=2)
+        new_batch = rounded
+    return new_batch
 
 
 def check_divisibility(ctx: ParallelContext, d_ff: int, vocab: int, seq: int):

@@ -34,6 +34,7 @@ import math
 import time
 from typing import Any, Callable, Iterator
 
+import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
@@ -80,6 +81,7 @@ class TrainSupervisor:
                  fault_plan=None, degradation=None,
                  rebuild_step: Callable[[], Callable] | None = None,
                  on_rank_loss: Callable | None = None,
+                 liveness=None,
                  sleep_fn: Callable[[float], None] = time.sleep):
         """``skew_scheduler`` (a :class:`~repro.runtime.straggler.
         SkewScheduler`) closes the Fig. 14 loop: each step's wall time is
@@ -121,6 +123,21 @@ class TrainSupervisor:
         re-jitted step for the new topology.  ``None`` re-raises (rank
         loss is then fatal).
 
+        ``liveness`` — a :class:`~repro.runtime.watchdog.LivenessMonitor`
+        wired to *real* process heartbeats.  When set, every step first
+        checks peer liveness and then runs under ``liveness.guarded`` —
+        a genuine peer death or stall mid-collective surfaces as the
+        same :class:`RankLost` / :class:`CollectiveTimeout` the chaos
+        injector produces, through the same recovery paths.  In the
+        multi-process deployment ``on_rank_loss`` is normally *not* set
+        alongside this: an in-process shrink cannot survive a dead gloo
+        world, so RankLost propagates to the worker, which exits for
+        the elastic respawn (:mod:`repro.runtime.multiprocess`).  Note
+        the guarded step runs on a side thread; with buffer donation a
+        liveness raise abandons a step that may have consumed its
+        inputs — callers on that path must restore or exit, never
+        retry the same state in place.
+
         ``sleep_fn`` — injection point for the backoff clock (tests
         record delays instead of sleeping)."""
         self.cfg = cfg
@@ -146,6 +163,7 @@ class TrainSupervisor:
         self.degradation = degradation
         self.rebuild_step = rebuild_step
         self.on_rank_loss = on_rank_loss
+        self.liveness = liveness
         self.sleep_fn = sleep_fn
         self._rng = np.random.default_rng(cfg.seed)
         self._fired: set = set()   # (step, event) pairs already injected
@@ -226,7 +244,27 @@ class TrainSupervisor:
                 nan_ev = ev
         if nan_ev is not None:
             return self._poisoned_step(state, batch, nan_ev)
+        if self.liveness is not None:
+            # real liveness: refuse to enter a collective against a peer
+            # already known dead, and poll heartbeats while inside one —
+            # a genuine hang raises in ~poll interval instead of blocking
+            # until the runtime's fatal teardown.
+            self.liveness.check()
+            return self.liveness.guarded(self.step_fn, state, batch)
         return self.step_fn(state, batch)
+
+    def _save(self, step, state):
+        """Checkpoint save under the liveness guard.
+
+        On a multi-process mesh the save's host gather is itself a
+        collective — a peer wedged (SIGSTOP) while we are inside it
+        would hang the save until the XLA runtime's fatal teardown, so
+        it runs guarded exactly like a step."""
+        if self.liveness is not None:
+            self.liveness.check()
+            self.liveness.guarded(self.manager.save, step, state)
+        else:
+            self.manager.save(step, state)
 
     # -- recovery --------------------------------------------------------
 
@@ -278,7 +316,7 @@ class TrainSupervisor:
             # Failures before the first periodic save need something to
             # restore onto — and with buffer donation the pre-step state
             # is unrecoverable in-process once a step has consumed it.
-            self.manager.save(step, state)
+            self._save(step, state)
         last_saved = step
         replay = ReplayBuffer(batches, base_step=step)
         while step < num_steps:
@@ -288,14 +326,18 @@ class TrainSupervisor:
                 log.warning("data exhausted at step %d/%d; saving partial "
                             "run and draining", step, num_steps)
                 if step != last_saved:
-                    self.manager.save(step, state)
+                    self._save(step, state)
                 break
             events = self._events_for(step)
             t0 = time.monotonic()
             try:
                 state, metrics = self._run_step(state, batch, events)
-                # touching the loss forces dispatch, surfacing async
-                # errors — and gates on a finite value
+                # force the full metrics tree (not just the loss): any
+                # leaf may carry an in-flight cross-process collective,
+                # and the checkpoint gather below must not start while
+                # one is still executing.  Also surfaces async errors
+                # and gates on a finite loss.
+                metrics = jax.block_until_ready(metrics)
                 loss = float(metrics["loss"])
                 if not math.isfinite(loss):
                     raise NonFiniteLoss(
@@ -337,7 +379,7 @@ class TrainSupervisor:
             if on_metrics is not None:
                 on_metrics(step, metrics)
             if step % self.cfg.checkpoint_every == 0:
-                self.manager.save(step, state)
+                self._save(step, state)
                 last_saved = step
                 replay.commit(step)
         self.manager.wait()

@@ -1,0 +1,573 @@
+"""Real multi-process scale-out: subprocess driver + worker bootstrap.
+
+Everything before this module exercised the recovery stack inside one
+process on one host's 8-device mesh.  Here the process boundary is
+genuine: a :class:`MultiprocessDriver` spawns N coordinator-wired CPU
+workers (``jax.distributed.initialize`` + gloo cross-process
+collectives, ``--xla_force_host_platform_device_count`` local devices
+each), collects per-process logs and exit codes, and supervises the
+*elastic respawn protocol*:
+
+1. Workers heartbeat (:mod:`repro.runtime.watchdog`) and run every step
+   under the liveness monitor.  A SIGKILLed peer is detected in ~1 s —
+   long before the XLA coordination service's ~40 s fatal teardown —
+   and surfaces as :class:`~repro.runtime.chaos.RankLost`; a stalled
+   (SIGSTOPped / wedged) peer surfaces as
+   :class:`~repro.runtime.chaos.CollectiveTimeout`.
+2. The worker exits with a *protocol code*: :data:`EXIT_RESHARD` (peer
+   permanently lost — relaunch me on the shrunk world) or
+   :data:`EXIT_RESTART` (transient stall — relaunch the same world).
+   In-process survival is impossible on a dead gloo world: the runtime
+   cannot tear down a distributed client whose peer is gone without a
+   fatal abort, so recovery is respawn-based (the torchelastic model).
+3. The driver reaps stragglers, allocates a fresh coordinator port, and
+   relaunches the next *generation* with a dense rank assignment.
+   Workers restore from the shared checkpoint directory + the
+   deterministic seeded batch stream (the cross-process analogue of
+   :class:`~repro.data.pipeline.ReplayBuffer`), so a recovered run's
+   final state is pinned bit-identical against a fault-free run on the
+   shrunk mesh — the invariant ``tests/multiprocess`` enforces.
+
+Worker-side helpers encode the placement rules a multi-process mesh
+needs on the gloo CPU backend (validated empirically, see
+``tests/multiprocess``):
+
+* pin ``jax.default_device`` to a local device — rank > 0's default is
+  otherwise a *remote* device and eager constants race cross-process
+  transfers against collectives;
+* build global arrays by host-staging (``device_put`` from numpy places
+  local shards only); resharding committed device arrays across
+  processes through gloo is not supported;
+* gather non-fully-addressable arrays via
+  ``multihost_utils.process_allgather(tiled=True)`` (the checkpoint
+  path does this automatically).
+
+This module must stay importable without touching the jax backend:
+``jax`` is imported lazily so workers can call :func:`configure` (which
+sets ``XLA_FLAGS``) after importing it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.perfmodel import DCN, HardwareModel
+from repro.runtime.watchdog import (HeartbeatWriter, LivenessMonitor,
+                                    read_heartbeat)
+
+log = logging.getLogger("repro.runtime")
+
+#: worker exit codes — the driver's respawn protocol
+EXIT_OK = 0
+EXIT_RESTART = 16   # transient stall (CollectiveTimeout): same-world respawn
+EXIT_RESHARD = 17   # permanent peer loss (RankLost): shrunk-world respawn
+
+_ENV_PREFIX = "REPRO_MP_"
+
+
+def pick_free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@dataclasses.dataclass
+class WorkerEnv:
+    """Per-worker contract, shipped through the environment."""
+
+    rank: int
+    world: int
+    coordinator: str
+    generation: int = 0
+    heartbeat_dir: str = ""
+    local_devices: int = 4
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def to_env(self) -> dict[str, str]:
+        return {
+            f"{_ENV_PREFIX}RANK": str(self.rank),
+            f"{_ENV_PREFIX}WORLD": str(self.world),
+            f"{_ENV_PREFIX}COORD": self.coordinator,
+            f"{_ENV_PREFIX}GEN": str(self.generation),
+            f"{_ENV_PREFIX}HBDIR": self.heartbeat_dir,
+            f"{_ENV_PREFIX}LOCAL_DEVICES": str(self.local_devices),
+            f"{_ENV_PREFIX}EXTRA": json.dumps(self.extra),
+        }
+
+    @classmethod
+    def from_env(cls, env: Mapping[str, str] | None = None) -> "WorkerEnv":
+        env = os.environ if env is None else env
+        return cls(
+            rank=int(env[f"{_ENV_PREFIX}RANK"]),
+            world=int(env[f"{_ENV_PREFIX}WORLD"]),
+            coordinator=env[f"{_ENV_PREFIX}COORD"],
+            generation=int(env.get(f"{_ENV_PREFIX}GEN", "0")),
+            heartbeat_dir=env.get(f"{_ENV_PREFIX}HBDIR", ""),
+            local_devices=int(env.get(f"{_ENV_PREFIX}LOCAL_DEVICES", "4")),
+            extra=json.loads(env.get(f"{_ENV_PREFIX}EXTRA", "{}")),
+        )
+
+
+# -- worker side -----------------------------------------------------------
+
+def configure(cfg: WorkerEnv, *, platform: str = "cpu",
+              collectives: str = "gloo") -> None:
+    """Point the (not yet initialized) backend at this worker's slice.
+
+    Must run before any jax device/backend touch.  ``XLA_FLAGS`` is
+    *replaced*, not appended — the driver's own device-count flag must
+    not leak into workers."""
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={cfg.local_devices}")
+    import jax
+
+    if platform:
+        jax.config.update("jax_platforms", platform)
+    if platform == "cpu" and cfg.world > 1:
+        jax.config.update("jax_cpu_collectives_implementation", collectives)
+
+
+@dataclasses.dataclass
+class WorkerRuntime:
+    """Live per-worker handles returned by :func:`init_worker`."""
+
+    cfg: WorkerEnv
+    writer: HeartbeatWriter
+    monitor: LivenessMonitor
+    _default_device_ctx: object = None
+
+    # -- placement helpers (the gloo-safe recipes) ----------------------
+    def global_put(self, tree, shardings):
+        """Place a pytree with global shardings by host-staging each leaf.
+
+        Host-staging is mandatory twice over on the gloo CPU backend:
+        resharding a *committed* device array across processes is not
+        supported, and even ``device_put`` from numpy onto a
+        non-addressable sharding would run a per-leaf broadcast
+        collective (jax's equal-value check) — so placement goes through
+        the collective-free :func:`~repro.checkpoint.checkpointer.
+        host_to_device` path."""
+        import jax
+
+        from repro.checkpoint.checkpointer import host_to_device
+
+        return jax.tree.map(
+            lambda x, s: host_to_device(
+                np.asarray(jax.device_get(x)), s), tree, shardings)
+
+    def host_gather(self, tree):
+        """Full host value of every leaf, gathering non-addressable
+        shards through one replicated-output computation (collective:
+        every process must call it)."""
+        from repro.checkpoint.checkpointer import tree_to_host
+
+        return tree_to_host(tree)
+
+    def barrier(self, name: str = "barrier") -> None:
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(name)
+
+    def diagnose(self, exc: BaseException, *, extra_wait_s: float = 3.0):
+        """Translate a transport-level failure into the liveness verdict.
+
+        A peer that dies *inside* a collective surfaces first as a raw
+        XLA/gloo error ("connection closed by peer") — often before its
+        heartbeat goes stale.  Rather than crash on the transport error,
+        poll the watchdog for up to one staleness deadline (plus grace):
+        if it classifies a peer DEAD or STALLED, raise the corresponding
+        :class:`RankLost`/:class:`CollectiveTimeout` so the caller takes
+        the elastic-respawn path; otherwise re-raise the original error.
+        """
+        from repro.runtime.chaos import CollectiveTimeout, RankLost
+
+        deadline = time.monotonic() + self.monitor.stall_after_s + extra_wait_s
+        enabled, self.monitor.enabled = self.monitor.enabled, True
+        try:
+            while time.monotonic() < deadline:
+                self.monitor.check()   # raises RankLost/CollectiveTimeout
+                time.sleep(0.1)
+        except (RankLost, CollectiveTimeout) as verdict:
+            raise verdict from exc
+        finally:
+            self.monitor.enabled = enabled
+        raise exc
+
+    # -- lifecycle ------------------------------------------------------
+    def leave(self, code: int = EXIT_OK, status: str = "leaving") -> None:
+        """Terminate this worker with a protocol exit code.
+
+        ``os._exit`` on purpose: after a peer death the distributed
+        client cannot be shut down cleanly (the shutdown barrier would
+        hang, then abort), and on a healthy world the final barrier has
+        already ordered everything we care about."""
+        sys.stdout.flush()
+        sys.stderr.flush()
+        self.writer.stop(status=status)
+        os._exit(code)
+
+
+def init_worker(cfg: WorkerEnv, *, initialization_timeout: int = 60,
+                stall_after_s: float = 2.0,
+                step_deadline_s: float | None = None) -> WorkerRuntime:
+    """Wire this process into the distributed world and start liveness.
+
+    The returned monitor starts *disarmed* (``enabled=False``): arm it
+    after the first successful step so first-compile time can never be
+    misread as a peer stall."""
+    configure(cfg)
+    import jax
+
+    from repro.launch.distributed import initialize_distributed
+
+    if cfg.world > 1:
+        initialize_distributed(cfg.coordinator, cfg.world, cfg.rank,
+                               initialization_timeout=initialization_timeout)
+    # rank > 0's default device would be process 0's first device — every
+    # eager constant would land remotely and race the collectives.
+    dd = jax.default_device(jax.local_devices()[0])
+    dd.__enter__()
+    writer = HeartbeatWriter(cfg.heartbeat_dir or ".", cfg.rank,
+                             generation=cfg.generation).start()
+    monitor = LivenessMonitor(cfg.heartbeat_dir or ".", cfg.rank, cfg.world,
+                              generation=cfg.generation,
+                              stall_after_s=stall_after_s,
+                              step_deadline_s=step_deadline_s)
+    monitor.enabled = False
+    return WorkerRuntime(cfg=cfg, writer=writer, monitor=monitor,
+                         _default_device_ctx=dd)
+
+
+# -- driver side -----------------------------------------------------------
+
+@dataclasses.dataclass
+class ProcHandle:
+    rank: int
+    popen: subprocess.Popen
+    log_path: str
+    reaped_by_driver: bool = False
+
+    @property
+    def returncode(self):
+        return self.popen.returncode
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    generation: int
+    world: int
+    codes: dict            # rank -> exit code (negative = killed by signal)
+    duration_s: float
+    heartbeat_dir: str
+
+
+@dataclasses.dataclass
+class ElasticReport:
+    """Outcome of :meth:`MultiprocessDriver.run_elastic`."""
+
+    completed: bool
+    generations: list
+    timeline: list         # (event, detail, wall_time) tuples
+
+    def events(self, kind: str):
+        return [t for t in self.timeline if t[0] == kind]
+
+
+class MultiprocessDriver:
+    """Spawn, watch, reap, and elastically respawn worker generations.
+
+    ``worker_argv`` is the worker command after the interpreter (script
+    path + args).  Per-generation artifacts land under ``workdir``:
+    ``logs/g<gen>_r<rank>.log`` and heartbeat dir ``hb_g<gen>``.
+
+    The driver is also the *coordinator-side watchdog*: while waiting on
+    a generation it polls worker heartbeats and pids, and once any
+    worker has exited abnormally it gives the remainder ``hang_grace_s``
+    to finish their own detection before reaping them (SIGCONT+SIGKILL —
+    a SIGSTOPped straggler would otherwise hold the generation open
+    forever)."""
+
+    def __init__(self, worker_argv: Sequence[str], nproc: int, *,
+                 devices_per_proc: int = 4, workdir: str = ".",
+                 extra: dict | None = None,
+                 env: Mapping[str, str] | None = None,
+                 hang_grace_s: float = 30.0):
+        self.worker_argv = list(worker_argv)
+        self.nproc = nproc
+        self.devices_per_proc = devices_per_proc
+        self.workdir = workdir
+        self.extra = dict(extra or {})
+        self.base_env = dict(os.environ if env is None else env)
+        self.hang_grace_s = hang_grace_s
+        self.procs: list[ProcHandle] = []
+        self.generation = -1
+        self.heartbeat_dir = ""
+        self.timeline: list = []
+        os.makedirs(os.path.join(workdir, "logs"), exist_ok=True)
+
+    # -- spawn ----------------------------------------------------------
+    def launch_generation(self, generation: int, world: int,
+                          extra: dict | None = None) -> None:
+        if any(p.popen.poll() is None for p in self.procs):
+            raise RuntimeError("previous generation still running")
+        self.generation = generation
+        self.heartbeat_dir = os.path.join(self.workdir, f"hb_g{generation}")
+        os.makedirs(self.heartbeat_dir, exist_ok=True)
+        coordinator = f"127.0.0.1:{pick_free_port()}"
+        self.procs = []
+        self._mark("launch", {"generation": generation, "world": world})
+        for rank in range(world):
+            cfg = WorkerEnv(rank=rank, world=world, coordinator=coordinator,
+                            generation=generation,
+                            heartbeat_dir=self.heartbeat_dir,
+                            local_devices=self.devices_per_proc,
+                            extra={**self.extra, **(extra or {})})
+            env = dict(self.base_env)
+            env.pop("XLA_FLAGS", None)   # workers set their own device count
+            env.update(cfg.to_env())
+            src = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+            env["PYTHONPATH"] = os.pathsep.join(
+                [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                         if p])
+            log_path = os.path.join(self.workdir, "logs",
+                                    f"g{generation}_r{rank}.log")
+            f = open(log_path, "w")
+            popen = subprocess.Popen(
+                [sys.executable, "-u"] + self.worker_argv,
+                stdout=f, stderr=subprocess.STDOUT, env=env)
+            f.close()
+            self.procs.append(ProcHandle(rank=rank, popen=popen,
+                                         log_path=log_path))
+
+    # -- observe / fault ------------------------------------------------
+    def _mark(self, event: str, detail) -> None:
+        self.timeline.append((event, detail, time.time()))
+
+    def heartbeat_step(self, rank: int) -> int | None:
+        hb = read_heartbeat(self.heartbeat_dir, rank)
+        return None if hb is None else hb.step
+
+    def wait_for_step(self, rank: int, step: int,
+                      timeout_s: float = 300.0) -> int:
+        """Block until ``rank``'s heartbeat reports ``step`` or later."""
+        deadline = time.time() + timeout_s
+        while time.time() < deadline:
+            seen = self.heartbeat_step(rank)
+            if seen is not None and seen >= step:
+                return seen
+            if self.procs[rank].popen.poll() is not None:
+                raise RuntimeError(
+                    f"rank {rank} exited (code {self.procs[rank].returncode})"
+                    f" before reaching step {step}")
+            time.sleep(0.05)
+        raise TimeoutError(f"rank {rank} never reached step {step} "
+                           f"within {timeout_s:.0f}s")
+
+    def kill(self, rank: int, sig: int = signal.SIGKILL) -> float:
+        """Signal one worker; returns the wall time of delivery."""
+        self.procs[rank].popen.send_signal(sig)
+        t = time.time()
+        self._mark("kill", {"generation": self.generation, "rank": rank,
+                            "signal": int(sig)})
+        return t
+
+    def kill_at_step(self, rank: int, step: int,
+                     sig: int = signal.SIGKILL,
+                     timeout_s: float = 300.0) -> float:
+        self.wait_for_step(rank, step, timeout_s)
+        return self.kill(rank, sig)
+
+    # -- reap -----------------------------------------------------------
+    def _reap(self, proc: ProcHandle) -> None:
+        for sig in (signal.SIGCONT, signal.SIGKILL):
+            try:
+                proc.popen.send_signal(sig)
+            except ProcessLookupError:
+                pass
+        proc.popen.wait()
+        proc.reaped_by_driver = True
+        self._mark("reap", {"generation": self.generation,
+                            "rank": proc.rank})
+
+    def wait_generation(self, timeout_s: float = 600.0) -> GenerationResult:
+        """Wait for every worker to exit, reaping stragglers.
+
+        Once any worker exits abnormally (protocol code, crash, or
+        kill), the rest get ``hang_grace_s`` to run their own liveness
+        detection and leave; whoever is still up after that (e.g. a
+        SIGSTOPped rank) is reaped by the driver."""
+        t0 = time.time()
+        abnormal_at: float | None = None
+        while True:
+            running = [p for p in self.procs if p.popen.poll() is None]
+            if not running:
+                break
+            codes = [p.returncode for p in self.procs
+                     if p.popen.poll() is not None]
+            if abnormal_at is None and any(c != EXIT_OK for c in codes):
+                abnormal_at = time.time()
+            now = time.time()
+            if now - t0 > timeout_s:
+                for p in running:
+                    self._reap(p)
+                raise TimeoutError(
+                    f"generation {self.generation} exceeded {timeout_s:.0f}s "
+                    f"({len(running)} workers still up)")
+            if abnormal_at is not None and now - abnormal_at > self.hang_grace_s:
+                for p in running:
+                    log.warning("reaping rank %d (no exit %0.fs after first "
+                                "abnormal exit)", p.rank, self.hang_grace_s)
+                    self._reap(p)
+                break
+            time.sleep(0.1)
+        result = GenerationResult(
+            generation=self.generation,
+            world=len(self.procs),
+            codes={p.rank: p.returncode for p in self.procs},
+            duration_s=time.time() - t0,
+            heartbeat_dir=self.heartbeat_dir)
+        self._mark("generation_end", {"generation": self.generation,
+                                      "codes": dict(result.codes)})
+        return result
+
+    # -- the elastic respawn loop ---------------------------------------
+    def run_elastic(self, *, max_generations: int = 4,
+                    gen_timeout_s: float = 600.0,
+                    faults: Mapping[int, Callable] | None = None,
+                    on_generation_end: Callable | None = None) -> ElasticReport:
+        """Generation loop implementing the respawn protocol.
+
+        ``faults`` maps a generation index to a callable run on a side
+        thread after that generation launches (e.g. ``lambda d:
+        d.kill_at_step(1, 3)``) — the genuine-fault injection point.
+        ``on_generation_end(driver, result)`` runs between generations
+        (tests use it to snapshot the checkpoint directory for the
+        fault-free reference run).
+
+        All workers exiting :data:`EXIT_OK` completes the run.  Any
+        :data:`EXIT_RESHARD` shrinks the next world to the count of
+        cooperating survivors (resharders + clean finishers); otherwise
+        any :data:`EXIT_RESTART` relaunches the same world.  Any other
+        combination (every worker crashed/killed) aborts."""
+        world = self.nproc
+        generations: list[GenerationResult] = []
+        for gen in range(max_generations):
+            self.launch_generation(gen, world)
+            fault = (faults or {}).get(gen)
+            fault_thread = None
+            if fault is not None:
+                fault_thread = threading.Thread(
+                    target=fault, args=(self,), daemon=True,
+                    name=f"fault-g{gen}")
+                fault_thread.start()
+            result = self.wait_generation(gen_timeout_s)
+            generations.append(result)
+            if fault_thread is not None:
+                fault_thread.join(timeout=10)
+            if on_generation_end is not None:
+                on_generation_end(self, result)
+            codes = result.codes.values()
+            if all(c == EXIT_OK for c in codes):
+                return ElasticReport(completed=True, generations=generations,
+                                     timeline=list(self.timeline))
+            next_world = next_generation_world(result.codes)
+            if next_world is None:
+                break
+            world = next_world
+        return ElasticReport(completed=False, generations=generations,
+                             timeline=list(self.timeline))
+
+
+def next_generation_world(codes: Mapping[int, int]) -> int | None:
+    """Respawn decision from one generation's exit codes.
+
+    Pure so the protocol is unit-testable: resharders shrink the world
+    to the cooperating-survivor count, restarters keep it, and a
+    generation with no protocol exits at all (everyone crashed or was
+    killed) returns None — nothing left to respawn around."""
+    vals = list(codes.values())
+    # Anyone who exited through the protocol (or drained cleanly) is a
+    # live process the next generation can be built around — including a
+    # restart voter when a peer's stronger reshard diagnosis wins.
+    survivors = sum(1 for c in vals
+                    if c in (EXIT_OK, EXIT_RESHARD, EXIT_RESTART))
+    if any(c == EXIT_RESHARD for c in vals):
+        return survivors if survivors > 0 else None
+    if any(c == EXIT_RESTART for c in vals):
+        return len(vals)
+    return None
+
+
+# -- measured cross-process link model -------------------------------------
+
+def fit_alpha_beta(sizes_bytes: Sequence[float],
+                   times_s: Sequence[float]) -> tuple[float, float]:
+    """Least-squares alpha-beta fit ``t = alpha + beta * bytes``.
+
+    Returns ``(alpha, beta)`` with both clamped non-negative (timing
+    noise on small payloads can drive the unconstrained fit negative)."""
+    b = np.asarray(sizes_bytes, np.float64)
+    t = np.asarray(times_s, np.float64)
+    A = np.stack([np.ones_like(b), b], axis=1)
+    (alpha, beta), *_ = np.linalg.lstsq(A, t, rcond=None)
+    return float(max(alpha, 0.0)), float(max(beta, 1e-15))
+
+
+def measured_hardware_model(sizes_bytes, times_s, *,
+                            base: HardwareModel = DCN) -> HardwareModel:
+    """A :class:`HardwareModel` whose link constants come from measured
+    ring times (compute-side constants carry over from ``base`` — a
+    link measurement says nothing about the chip)."""
+    alpha, beta = fit_alpha_beta(sizes_bytes, times_s)
+    return dataclasses.replace(base, ici_bw=1.0 / beta, ici_lat=alpha)
+
+
+def measure_ring(mesh, axis: str, sizes_bytes: Sequence[int], *,
+                 iters: int = 5, warmup: int = 2) -> list[float]:
+    """Median all-reduce time over one mesh axis per payload size.
+
+    The payload is sharded over ``axis`` and summed over that dimension
+    with a replicated output — XLA lowers this to the axis ring
+    all-reduce, crossing the process boundary when ``axis`` spans
+    processes.  Returns seconds per call, one per payload size."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.experimental import multihost_utils
+
+    from repro.checkpoint.checkpointer import host_to_device
+
+    k = mesh.shape[axis]
+    out: list[float] = []
+    for nbytes in sizes_bytes:
+        n = max(k, int(nbytes) // 4 // k * k)
+        x_np = np.ones((k, n // k), np.float32)
+        # collective-free placement: a raw device_put onto a sharding
+        # spanning processes runs jax's equal-value broadcast, whose
+        # gloo messages can interleave with the barrier below
+        x = jax.block_until_ready(
+            host_to_device(x_np, NamedSharding(mesh, P(axis, None))))
+        f = jax.jit(lambda v: jnp.sum(v, axis=0),
+                    out_shardings=NamedSharding(mesh, P(None)))
+        for _ in range(warmup):
+            f(x).block_until_ready()
+        multihost_utils.sync_global_devices(f"ring_{nbytes}")
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            f(x).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        out.append(float(np.median(ts)))
+    return out

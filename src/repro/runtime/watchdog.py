@@ -1,0 +1,345 @@
+"""Liveness layer: heartbeat files + watchdog raising the chaos surface.
+
+Every chaos-lane recovery path (:mod:`repro.runtime.fault_tolerance`,
+the serve drain-reshard loop) fires on :class:`~repro.runtime.chaos.
+CollectiveTimeout` / :class:`~repro.runtime.chaos.RankLost` — but until
+the multiprocess lane those exceptions were only ever *injected* by a
+:class:`~repro.runtime.chaos.FaultPlan`.  This module raises them from
+genuine process liveness:
+
+:class:`HeartbeatWriter`
+    A daemon thread that atomically rewrites ``hb_<rank>.json`` every
+    ``interval_s`` with (rank, pid, step, generation, wall time).  The
+    thread keeps beating while the main thread is stuck inside a hung
+    collective (native dispatch releases the GIL), so "process alive but
+    wedged" and "process gone" are distinguishable from the outside.
+
+:class:`LivenessMonitor`
+    Classifies every peer's heartbeat file: fresh -> ``alive``; stale
+    with a dead pid (or a ``leaving`` status) -> ``dead``; stale with a
+    live pid (SIGSTOPped, wedged runtime) -> ``stalled``.  ``check()``
+    converts the first non-alive peer into the existing fault surface —
+    ``dead`` raises :class:`RankLost`, ``stalled`` raises
+    :class:`CollectiveTimeout` — and ``guarded(fn, ...)`` runs one step
+    on a worker thread while polling, so a *real* hang mid-collective
+    (peer SIGKILLed between two ring sends) surfaces in ~1 s instead of
+    after the XLA coordination service's ~40 s fatal teardown.
+
+:class:`Watchdog`
+    Background-thread wrapper over ``monitor.check()`` for tick loops
+    that cannot poll inline (the serve engine between engine steps).
+
+Everything is injectable (clock, pid prober, filesystem root), so the
+classification matrix and both raise paths are unit-tested without
+spawning processes; the genuine cross-process drills live in
+``tests/multiprocess``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import threading
+import time
+from typing import Callable, Mapping
+
+from repro.runtime.chaos import CollectiveTimeout, RankLost
+
+log = logging.getLogger("repro.runtime")
+
+#: heartbeat file name for one rank (all ranks share one directory)
+HEARTBEAT_FMT = "hb_{rank}.json"
+
+#: classification states returned by :meth:`LivenessMonitor.observe`
+ALIVE, STARTING, STALLED, DEAD = "alive", "starting", "stalled", "dead"
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """One rank's most recent liveness record."""
+
+    rank: int
+    pid: int
+    time: float
+    step: int = 0
+    generation: int = 0
+    status: str = "up"           # "up" | "leaving"
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+def heartbeat_path(directory: str, rank: int) -> str:
+    return os.path.join(directory, HEARTBEAT_FMT.format(rank=rank))
+
+
+def write_heartbeat(directory: str, hb: Heartbeat) -> None:
+    """Atomic single-file write: a reader never sees a torn record."""
+    path = heartbeat_path(directory, hb.rank)
+    tmp = f"{path}.tmp.{hb.pid}"
+    with open(tmp, "w") as f:
+        f.write(hb.to_json())
+    os.replace(tmp, path)
+
+
+def read_heartbeat(directory: str, rank: int) -> Heartbeat | None:
+    """Best-effort read; missing/garbled files read as "no heartbeat yet"
+    (a torn write is impossible, but a crashed writer can leave nothing)."""
+    try:
+        with open(heartbeat_path(directory, rank)) as f:
+            return Heartbeat(**json.load(f))
+    except (OSError, ValueError, TypeError):
+        return None
+
+
+def default_pid_alive(pid: int) -> bool:
+    """Is ``pid`` running (including stopped)?  Signal 0 probes without
+    delivering; only meaningful for processes on the same host — a
+    multi-host deployment swaps in an ssh/agent prober here."""
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:  # exists, owned by someone else
+        return True
+    return True
+
+
+class HeartbeatWriter:
+    """Daemon thread beating ``hb_<rank>.json`` every ``interval_s``."""
+
+    def __init__(self, directory: str, rank: int, *, generation: int = 0,
+                 interval_s: float = 0.25, pid: int | None = None,
+                 clock: Callable[[], float] = time.time):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.rank = rank
+        self.generation = generation
+        self.interval_s = interval_s
+        self.pid = os.getpid() if pid is None else pid
+        self.clock = clock
+        self.step = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def beat(self, step: int | None = None, status: str = "up") -> None:
+        if step is not None:
+            self.step = int(step)
+        write_heartbeat(self.directory, Heartbeat(
+            rank=self.rank, pid=self.pid, time=self.clock(), step=self.step,
+            generation=self.generation, status=status))
+
+    def start(self) -> "HeartbeatWriter":
+        self.beat()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"heartbeat-r{self.rank}")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.beat()
+
+    def stop(self, status: str = "leaving") -> None:
+        """Final beat with ``status`` so peers can tell a clean departure
+        (elastic reshard exit) from a crash."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2 * self.interval_s)
+            self._thread = None
+        try:
+            self.beat(status=status)
+        except OSError:  # heartbeat dir torn down first: nothing to say
+            pass
+
+    def __enter__(self) -> "HeartbeatWriter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+@dataclasses.dataclass
+class PeerState:
+    """One peer's classification at one ``observe()`` instant."""
+
+    rank: int
+    state: str                   # ALIVE | STARTING | STALLED | DEAD
+    age_s: float = 0.0
+    pid: int | None = None
+    step: int = 0
+
+
+class LivenessMonitor:
+    """Classify peers from their heartbeat files; raise the chaos surface.
+
+    ``stall_after_s`` is the staleness deadline: a heartbeat older than
+    this marks the peer non-alive (its writer thread beats every ~250 ms,
+    so the default tolerates ~8 consecutive missed beats).  A non-alive
+    peer whose pid is gone — or which wrote a ``leaving`` status — is
+    ``DEAD`` (permanent, :class:`RankLost`); a non-alive peer whose pid
+    still exists is ``STALLED`` (wedged or SIGSTOPped,
+    :class:`CollectiveTimeout` — the transient restart path).  Peers
+    that have not written a first heartbeat stay ``STARTING`` until
+    ``start_grace_s`` (coordinator handshake + first compile), then
+    count as dead.
+
+    ``enabled`` gates ``check()``: workers arm the monitor after their
+    first successful step so a long first compile on a loaded machine is
+    never misread as a stall.
+    """
+
+    def __init__(self, directory: str, rank: int, world: int, *,
+                 generation: int = 0, stall_after_s: float = 2.0,
+                 start_grace_s: float = 120.0,
+                 step_deadline_s: float | None = None,
+                 pid_alive: Callable[[int], bool] = default_pid_alive,
+                 clock: Callable[[], float] = time.time):
+        self.directory = directory
+        self.rank = rank
+        self.world = world
+        self.generation = generation
+        self.stall_after_s = stall_after_s
+        self.start_grace_s = start_grace_s
+        self.step_deadline_s = step_deadline_s
+        self.pid_alive = pid_alive
+        self.clock = clock
+        self.enabled = True
+        self._t0 = clock()
+
+    def _classify(self, rank: int, now: float) -> PeerState:
+        hb = read_heartbeat(self.directory, rank)
+        if hb is None or hb.generation < self.generation:
+            state = STARTING if now - self._t0 < self.start_grace_s else DEAD
+            return PeerState(rank=rank, state=state, age_s=now - self._t0)
+        age = now - hb.time
+        if hb.status != "up":
+            return PeerState(rank=rank, state=DEAD, age_s=age, pid=hb.pid,
+                             step=hb.step)
+        if age <= self.stall_after_s:
+            return PeerState(rank=rank, state=ALIVE, age_s=age, pid=hb.pid,
+                             step=hb.step)
+        state = STALLED if self.pid_alive(hb.pid) else DEAD
+        return PeerState(rank=rank, state=state, age_s=age, pid=hb.pid,
+                         step=hb.step)
+
+    def observe(self) -> Mapping[int, PeerState]:
+        """Classification for every peer rank (not this one)."""
+        now = self.clock()
+        return {r: self._classify(r, now)
+                for r in range(self.world) if r != self.rank}
+
+    def check(self) -> None:
+        """Raise for the first lost/stalled peer.
+
+        ``DEAD`` -> :class:`RankLost` (permanent: elastic shrink);
+        ``STALLED`` -> :class:`CollectiveTimeout` (transient: coordinated
+        restart).  Dead peers win over stalled ones — a dead rank is the
+        stronger diagnosis and its recovery subsumes the restart."""
+        if not self.enabled:
+            return
+        peers = self.observe()
+        for st in peers.values():
+            if st.state == DEAD:
+                log.error("liveness: rank %d lost (pid %s, heartbeat "
+                          "%.1fs stale)", st.rank, st.pid, st.age_s)
+                raise RankLost(st.rank,
+                               f"liveness: rank {st.rank} lost (heartbeat "
+                               f"{st.age_s:.1f}s stale, pid gone)")
+        for st in peers.values():
+            if st.state == STALLED:
+                log.error("liveness: rank %d stalled (pid %s alive, "
+                          "heartbeat %.1fs stale)", st.rank, st.pid, st.age_s)
+                raise CollectiveTimeout(
+                    f"liveness: rank {st.rank} stalled (pid {st.pid} alive, "
+                    f"heartbeat {st.age_s:.1f}s stale)")
+
+    def guarded(self, fn: Callable, *args, deadline_s: float | None = None,
+                poll_s: float = 0.05, **kwargs):
+        """Run ``fn(*args)`` while polling peer liveness.
+
+        The call runs on a daemon thread; the caller polls ``check()``
+        while joining, so a hang inside a collective (the peer died
+        between ring sends) raises within ~``poll_s`` of detection
+        rather than blocking until the XLA runtime's fatal teardown.
+        ``deadline_s`` (default :attr:`step_deadline_s`) additionally
+        bounds the call even with every peer apparently healthy — the
+        deadlocked-but-heartbeating case.
+
+        On a liveness raise the worker thread is *abandoned* mid-call
+        (it is wedged in native code and cannot be cancelled); the
+        caller is expected to checkpoint nothing and exit the process —
+        the elastic-respawn protocol in :mod:`repro.runtime.
+        multiprocess`."""
+        if deadline_s is None:
+            deadline_s = self.step_deadline_s
+        box: list = [None, None]   # [result, exception]
+        done = threading.Event()
+
+        def work():
+            try:
+                box[0] = fn(*args, **kwargs)
+            except BaseException as e:  # surfaced on the caller thread
+                box[1] = e
+            finally:
+                done.set()
+
+        t = threading.Thread(target=work, daemon=True, name="guarded-step")
+        start = self.clock()
+        t.start()
+        while not done.wait(poll_s):
+            self.check()
+            if deadline_s is not None and self.clock() - start > deadline_s:
+                raise CollectiveTimeout(
+                    f"step exceeded deadline {deadline_s:.1f}s with all "
+                    f"peers heartbeating (deadlocked collective?)")
+        if box[1] is not None:
+            raise box[1]
+        return box[0]
+
+
+class Watchdog:
+    """Background-thread watchdog for loops that cannot poll inline.
+
+    Polls ``monitor.check()`` every ``poll_s``; the first raise is
+    parked and re-raised from :meth:`maybe_raise` (call it once per
+    tick) — the serve engine's drain loop does this between engine
+    steps."""
+
+    def __init__(self, monitor: LivenessMonitor, *, poll_s: float = 0.25):
+        self.monitor = monitor
+        self.poll_s = poll_s
+        self.failure: Exception | None = None
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "Watchdog":
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="watchdog")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            try:
+                self.monitor.check()
+            except (RankLost, CollectiveTimeout) as e:
+                self.failure = e
+                return
+
+    def maybe_raise(self) -> None:
+        if self.failure is not None:
+            raise self.failure
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2 * self.poll_s)
+            self._thread = None
+
+    def __enter__(self) -> "Watchdog":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

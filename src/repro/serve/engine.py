@@ -131,11 +131,24 @@ class _EngineBase:
             return req
         return None
 
-    def run_until_drained(self, max_steps: int = 10_000) -> DrainResult:
+    def run_until_drained(self, max_steps: int = 10_000,
+                          liveness=None) -> DrainResult:
+        """Drain the queue; with ``liveness`` (a :class:`~repro.runtime.
+        watchdog.LivenessMonitor`), every tick first checks peer
+        heartbeats and the engine step runs guarded — a peer process
+        dying mid-decode raises :class:`~repro.runtime.chaos.RankLost`
+        from *real* liveness instead of hanging the fleet.  The raise
+        leaves host-side bookkeeping at the last completed tick, so
+        :func:`request_journal` still snapshots a consistent in-flight
+        set for the respawned engine."""
         finished = DrainResult()
         steps = 0
         while self._pending() and steps < max_steps:
-            _, fin = self.step()
+            if liveness is not None:
+                liveness.check()
+                _, fin = liveness.guarded(self.step)
+            else:
+                _, fin = self.step()
             finished.extend(fin)
             steps += 1
         finished.drained = not self._pending()
@@ -425,6 +438,29 @@ class PagedDecodeEngine(_EngineBase):
         self.pos = np.zeros(self.batch, np.int32)
         self._feed = [[] for _ in range(self.batch)]
         return len(inflight)
+
+
+def request_journal(engine) -> list[dict]:
+    """JSON-serializable snapshot of every *unfinished* request.
+
+    In-flight slots first (admission order), then the queue — the order
+    re-admission should honor.  Generated tokens ride along, so a
+    respawned engine (cross-process elastic recovery) resubmits through
+    :func:`resubmit_journal` and each request resumes exactly where it
+    stopped: the replay path rebuilds its cache from prompt + tokens,
+    the same mechanism :meth:`DecodeEngine.reshard` uses in-process."""
+    live = [r for r in engine.slots if r is not None] + list(engine.queue)
+    return [{"uid": r.uid, "prompt": list(r.prompt), "max_new": r.max_new,
+             "tokens": list(r.tokens)} for r in live]
+
+
+def resubmit_journal(engine, journal: list[dict]) -> int:
+    """Re-admit journaled requests (tokens intact) into a fresh engine."""
+    for e in journal:
+        engine.submit(Request(uid=e["uid"], prompt=list(e["prompt"]),
+                              max_new=e["max_new"],
+                              tokens=list(e["tokens"])))
+    return len(journal)
 
 
 def serve_with_chaos(engine, plan, *,

@@ -1,0 +1,67 @@
+"""Fixtures for the real multi-process jax.distributed lane.
+
+Every test here spawns coordinator-wired worker subprocesses through
+:class:`repro.runtime.multiprocess.MultiprocessDriver`; the lane is
+marker-gated (``pytest -m multiprocess``) and deselected from the
+default run by ``pytest.ini``.
+
+``REPRO_MP_LOG_ROOT`` (set by the CI job) redirects every driver's
+workdir under a stable path so per-process worker logs survive the test
+run and can be uploaded as failure artifacts; without it artifacts land
+in pytest's tmp_path.
+"""
+import itertools
+import os
+import re
+
+import pytest
+
+WORKERS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "workers")
+
+
+@pytest.fixture
+def mp_workdir(tmp_path, request):
+    root = os.environ.get("REPRO_MP_LOG_ROOT")
+    if not root:
+        return str(tmp_path)
+    safe = re.sub(r"[^\w.-]", "_", request.node.name)
+    d = os.path.join(root, safe)
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+@pytest.fixture
+def make_driver(mp_workdir):
+    """Factory for drivers with per-driver workdirs under the test's
+    artifact root (a reference run and the elastic run must not share
+    log/heartbeat directories)."""
+    from repro.runtime.multiprocess import MultiprocessDriver
+
+    counter = itertools.count()
+
+    def make(script: str, nproc: int, *, devices_per_proc: int | None = None,
+             extra: dict | None = None, sub: str | None = None, **kw):
+        if devices_per_proc is None:
+            # keep the global device count at 8 (the tier-1 mesh) so a
+            # 2-proc world is 2x4 and a 1-proc world reuses all 8
+            devices_per_proc = max(1, 8 // nproc)
+        workdir = os.path.join(mp_workdir, sub or f"d{next(counter)}")
+        os.makedirs(workdir, exist_ok=True)
+        kw.setdefault("hang_grace_s", 10.0)
+        return MultiprocessDriver([os.path.join(WORKERS, script)], nproc,
+                                  devices_per_proc=devices_per_proc,
+                                  workdir=workdir, extra=extra, **kw)
+
+    return make
+
+
+def read_log(driver, generation: int, rank: int) -> str:
+    path = os.path.join(driver.workdir, "logs",
+                        f"g{generation}_r{rank}.log")
+    with open(path) as f:
+        return f.read()
+
+
+@pytest.fixture
+def log_reader():
+    return read_log

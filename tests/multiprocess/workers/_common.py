@@ -1,0 +1,70 @@
+"""Shared bootstrap for the multiprocess lane workers.
+
+These files are *scripts* run by :class:`repro.runtime.multiprocess.
+MultiprocessDriver` (never imported by pytest): each process reads its
+:class:`~repro.runtime.multiprocess.WorkerEnv` contract from the
+environment, wires itself into the jax.distributed world, and exits
+through the elastic-respawn protocol codes.
+
+Import order matters: ``bootstrap()`` must run before anything touches
+the jax backend (it sets the per-worker ``XLA_FLAGS`` device count), so
+workers import jax and the model stack only *after* calling it.
+"""
+import json
+import os
+
+
+def bootstrap(**init_kw):
+    """(multiprocess module, WorkerEnv, WorkerRuntime) for this process."""
+    from repro.runtime import multiprocess as mp
+
+    cfg = mp.WorkerEnv.from_env()
+    if "stall_after" in cfg.extra:
+        init_kw.setdefault("stall_after_s", float(cfg.extra["stall_after"]))
+    rt = mp.init_worker(cfg, **init_kw)
+    return mp, cfg, rt
+
+
+def arm(rt, step=None):
+    """Beat the heartbeat and arm the liveness monitor (call after the
+    first successful step — never during compile)."""
+    rt.writer.beat(step=step)
+    rt.monitor.enabled = True
+
+
+def put_batch(ctx, batch_size: int, batch):
+    """Host-stage one data batch onto the global mesh: leaves with a
+    leading batch dim shard over the dp axes, everything else replicates.
+    Placement is collective-free (each process materializes only its
+    addressable shards) — the gloo-safe recipe."""
+    import jax
+    import numpy as np
+
+    from repro.checkpoint.checkpointer import host_to_device
+
+    def put(a):
+        a = np.asarray(a)
+        if a.ndim >= 1 and a.shape[0] == batch_size:
+            sh = ctx.sharding("batch", *([None] * (a.ndim - 1)))
+        else:
+            sh = ctx.sharding(*([None] * a.ndim))
+        return host_to_device(a, sh)
+
+    return jax.tree.map(put, batch)
+
+
+def param_shardings(ctx, param_specs):
+    import jax
+
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+    return jax.tree.map(lambda s: ctx.sharding(*s), param_specs,
+                        is_leaf=is_spec)
+
+
+def write_json(path: str, obj) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)

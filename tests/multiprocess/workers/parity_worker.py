@@ -1,0 +1,87 @@
+"""Cross-process numerical parity worker.
+
+Runs on the full coordinator-wired world and checks, across a *real*
+process boundary, the invariants the tier-1 suite only proves on a
+single process's 8-device mesh:
+
+* fused vs bulk loss parity for a transformer (the ring collectives
+  cross the gloo process boundary on the data axis);
+* fused vs bulk parity for DLRM (the embedding all-to-all rings over
+  the flattened *world* axis — every hop crosses processes);
+* :class:`~repro.runtime.straggler.ProcessTelemetry` all-gathers one
+  EWMA per process and spreads it over local devices.
+
+Rank 0 writes the measured losses to ``result_dir/parity.json``.
+"""
+import os
+
+from _common import bootstrap, param_shardings, put_batch, write_json
+
+
+def _loss(ctx, bundle, params, batch):
+    import jax
+
+    fn = jax.jit(lambda p, b: bundle.loss_fn(ctx)(p, b))
+    out = fn(params, batch)
+    loss = out[0] if isinstance(out, tuple) else out
+    return float(loss)
+
+
+def main():
+    mp, cfg, rt = bootstrap()
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import make_batches
+    from repro.models.common import split_params
+    from repro.parallel.sharding import FusionConfig
+    from repro.runtime.straggler import ProcessTelemetry, StragglerMonitor
+
+    x = cfg.extra
+    batch = int(x.get("batch", 8))
+    seq = int(x.get("seq", 32))
+    result_dir = x["result_dir"]
+    out = {"world": cfg.world, "rank": cfg.rank, "losses": {}}
+
+    for arch in ("chatglm3-6b", "dlrm"):
+        ctx = make_host_mesh(fusion=FusionConfig(mode="fused"))
+        bundle = get_arch(arch).reduced()
+        params_p = bundle.init_params(jax.random.PRNGKey(0))
+        params, param_specs = split_params(params_p)
+        params = rt.global_put(params, param_shardings(ctx, param_specs))
+        b = put_batch(ctx, batch,
+                      next(iter(make_batches(bundle, batch, seq, seed=0))))
+
+        fused = _loss(ctx, bundle, params, b)
+        bulk = _loss(ctx.with_fusion(dataclasses.replace(
+            ctx.fusion, mode="bulk")), bundle, params, b)
+        out["losses"][arch] = {"fused": fused, "bulk": bulk}
+        np.testing.assert_allclose(fused, bulk, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"{arch} fused!=bulk across "
+                                           f"process boundary")
+        print(f"parity r{cfg.rank}: {arch} fused={fused:.6f} "
+              f"bulk={bulk:.6f}", flush=True)
+
+    # per-process telemetry: each process contributes a distinct EWMA;
+    # the gathered vector must have world-device length, process-major.
+    mon = StragglerMonitor()
+    mon.record(0.1 * (cfg.rank + 1))
+    tel = ProcessTelemetry(mon, len(jax.devices()))
+    times = tel(0.1 * (cfg.rank + 1))
+    assert len(times) == len(jax.devices()), times
+    per_proc = sorted(set(round(t, 6) for t in times))
+    assert len(per_proc) == cfg.world, (per_proc, cfg.world)
+    out["telemetry"] = times
+
+    rt.barrier("parity_done")
+    if cfg.rank == 0:
+        write_json(os.path.join(result_dir, "parity.json"), out)
+    rt.leave(mp.EXIT_OK)
+
+
+if __name__ == "__main__":
+    main()

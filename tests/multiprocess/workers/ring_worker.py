@@ -1,0 +1,87 @@
+"""Cross-process link measurement worker.
+
+Times real all-reduces over the cross-process ``data`` axis, fits the
+alpha-beta line, and validates the :class:`~repro.core.perfmodel.
+MeshHardwareModel` story end to end:
+
+1. measured ring times -> :func:`~repro.runtime.multiprocess.
+   measured_hardware_model` (a HardwareModel with measured link
+   constants) vs the static DCN constants;
+2. the measured model slots into a per-axis ``MeshHardwareModel`` (the
+   cross-process axis rides the measured link class, intra-process axes
+   keep V5E) and drives the ``--calibrate`` measured-sweep path, which
+   times real fused-op candidates over the same cross-process links.
+
+Rank 0 writes ``result_dir/ring.json`` with both models' predictions.
+"""
+import dataclasses
+import os
+
+from _common import bootstrap, param_shardings, put_batch, write_json
+
+
+def main():
+    mp, cfg, rt = bootstrap()
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+    from repro.core.calibrate import warmup_and_calibrate
+    from repro.core.perfmodel import DCN, V5E, MeshHardwareModel, resolve_hw
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import make_batches
+    from repro.models.common import split_params
+    from repro.parallel.sharding import FusionConfig
+
+    x = cfg.extra
+    result_dir = x["result_dir"]
+    sizes = [int(s) for s in x.get("sizes", [1 << 20, 4 << 20, 16 << 20])]
+
+    ctx = make_host_mesh(fusion=FusionConfig(mode="fused",
+                                             granularity="auto"))
+    times = mp.measure_ring(ctx.mesh, "data", sizes)
+    alpha, beta = mp.fit_alpha_beta(sizes, times)
+    measured = mp.measured_hardware_model(sizes, times)
+    print(f"ring r{cfg.rank}: data-axis alpha={alpha * 1e6:.1f}us "
+          f"bw={measured.ici_bw / 1e9:.3f} GB/s", flush=True)
+
+    # the measured link class attaches to the cross-process axis; the
+    # intra-process model axis keeps the chip's own ICI constants
+    mhw = MeshHardwareModel.from_mapping({"data": measured}, default=V5E)
+    ctx2 = dataclasses.replace(ctx, hw=mhw)
+    assert resolve_hw(ctx2.hw, "data").ici_bw == measured.ici_bw
+    assert resolve_hw(ctx2.hw, "model").ici_bw == V5E.ici_bw
+
+    # drive the --calibrate measured sweep through the measured model:
+    # candidate timing runs real fused collectives across the process
+    # boundary (identical code on every process -> same collective order)
+    bundle = get_arch(x.get("arch", "chatglm3-6b")).reduced()
+    batch, seq = int(x.get("batch", 8)), int(x.get("seq", 32))
+    params_p = bundle.init_params(jax.random.PRNGKey(0))
+    params, param_specs = split_params(params_p)
+    params = rt.global_put(params, param_shardings(ctx2, param_specs))
+    b = put_batch(ctx2, batch,
+                  next(iter(make_batches(bundle, batch, seq, seed=0))))
+    loss = jax.jit(lambda p, bb: bundle.loss_fn(ctx2)(p, bb))
+    decisions = warmup_and_calibrate(ctx2, loss, params, b, iters=1)
+
+    rt.barrier("ring_done")
+    if cfg.rank == 0:
+        write_json(os.path.join(result_dir, "ring.json"), {
+            "world": cfg.world,
+            "sizes": sizes,
+            "times_s": times,
+            "alpha_s": alpha,
+            "beta_s_per_byte": beta,
+            "measured_bw": measured.ici_bw,
+            "measured_lat": measured.ici_lat,
+            "dcn_pred_s": [s / DCN.ici_bw + DCN.ici_lat for s in sizes],
+            "measured_pred_s": [s / measured.ici_bw + measured.ici_lat
+                                for s in sizes],
+            "calibrated_keys": len(decisions),
+        })
+    rt.leave(mp.EXIT_OK)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Multi-process serve worker: batched decode with the batch sharded
+over the cross-process data axis, real liveness on every tick, and
+journal-based drain recovery.
+
+The decode wrapper pins the cross-process dataflow explicitly:
+
+* tokens/positions shard over ``data`` (spanning processes), the KV
+  cache shards on its batch dimension, and the logits are *replicated*
+  — so every decode step ends in an all-gather across the process
+  boundary (the fused GEMV+collective serving pattern);
+* the cache is host-staged onto the global mesh once, on the first
+  call (committed-array resharding across gloo processes is not
+  supported), and then carried as a global array between steps;
+* the engine reads logits as host numpy via the locally-addressable
+  replica, so the engine code itself stays mesh-agnostic.
+
+On a liveness raise (peer SIGKILLed mid-drain) rank 0 journals every
+unfinished request — generated tokens intact — and exits EXIT_RESHARD;
+the respawned generation resubmits the journal and every request still
+drains to completion.
+
+extra keys: result_dir, journal, [requests, batch, max_new, arch,
+stall_after, tick_sleep].
+"""
+import os
+import time
+
+from _common import arm, bootstrap, param_shardings, write_json
+
+
+class CrossProcessDecode:
+    """decode(tokens [B,1], cache, pos [B]) -> (host logits, global cache)
+    with the batch dim sharded over the data axis."""
+
+    def __init__(self, decode, params, ctx, batch):
+        import jax
+
+        self.ctx = ctx
+        self.batch = batch
+        self._decode = decode
+        self._params = params
+        self._jit = None
+        self._cache_is_global = False
+        self._jax = jax
+
+    def _cache_sharding(self, leaf):
+        dims = [i for i, d in enumerate(leaf.shape) if d == self.batch]
+        spec = [None] * leaf.ndim
+        if dims:
+            spec[dims[0]] = "batch"
+        return self.ctx.sharding(*spec)
+
+    def __call__(self, tokens, cache, pos):
+        import numpy as np
+
+        from repro.checkpoint.checkpointer import host_to_device
+        jax = self._jax
+
+        t = host_to_device(np.asarray(tokens),
+                           self.ctx.sharding("batch", None))
+        p = host_to_device(np.asarray(pos), self.ctx.sharding("batch"))
+        if not self._cache_is_global:
+            cache = jax.tree.map(
+                lambda l: host_to_device(np.asarray(jax.device_get(l)),
+                                         self._cache_sharding(l)), cache)
+            self._cache_is_global = True
+        if self._jit is None:
+            cache_sh = jax.tree.map(lambda l: l.sharding, cache)
+            logits_sh = self.ctx.sharding(None)   # replicated: the
+            # cross-process all-gather every step
+            # (params must be an argument — jit cannot close over an
+            # array spanning non-addressable devices)
+            self._jit = jax.jit(
+                self._decode, out_shardings=(logits_sh, cache_sh))
+        logits, cache = self._jit(self._params, t, cache, p)
+        host = np.asarray(logits.addressable_data(0))
+        return host, cache
+
+
+def main():
+    mp, cfg, rt = bootstrap()
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.common import split_params
+    from repro.runtime.chaos import CollectiveTimeout, RankLost
+    from repro.serve.engine import (DecodeEngine, Request, request_journal,
+                                    resubmit_journal)
+
+    x = cfg.extra
+    batch = int(x.get("batch", 6))
+    n_requests = int(x.get("requests", 12))
+    max_new = int(x.get("max_new", 48))
+    result_dir = x["result_dir"]
+    journal_path = x.get("journal")
+    tick_sleep = float(x.get("tick_sleep", 0.0))
+
+    ctx = make_host_mesh()
+    bundle = get_arch(x.get("arch", "chatglm3-6b")).reduced()
+    vocab = bundle.config.vocab
+    params_p = bundle.init_params(jax.random.PRNGKey(0))
+    params, param_specs = split_params(params_p)
+    params = rt.global_put(params, param_shardings(ctx, param_specs))
+
+    decode = CrossProcessDecode(bundle.decode_fn(ctx), params, ctx, batch)
+    engine = DecodeEngine(decode, bundle.init_cache, batch,
+                          max_seq=bundle.config.max_seq)
+
+    tracked = {}
+    if journal_path and os.path.exists(journal_path):
+        with open(journal_path) as f:
+            journal = __import__("json").load(f)
+        n = resubmit_journal(engine, journal)
+        tracked = {r.uid: r for r in engine.queue}
+        print(f"serve r{cfg.rank}/g{cfg.generation}: resubmitted {n} "
+              f"journaled requests", flush=True)
+    else:
+        rng = np.random.default_rng(0)
+        for i in range(n_requests):
+            req = Request(uid=i,
+                          prompt=rng.integers(
+                              0, vocab, size=int(rng.integers(2, 6))).tolist(),
+                          max_new=max_new)
+            tracked[i] = req
+            engine.submit(req)
+
+    # per-tick heartbeat steps so the driver can kill a peer "at tick k"
+    orig_step = engine.step
+    tick = [0]
+
+    def step():
+        out = orig_step()
+        tick[0] += 1
+        arm(rt, step=tick[0])
+        if tick_sleep:
+            time.sleep(tick_sleep)
+        return out
+
+    engine.step = step
+    print(f"serve r{cfg.rank}/g{cfg.generation}: world={cfg.world} "
+          f"mesh={dict(ctx.mesh.shape)} draining {len(tracked)} requests",
+          flush=True)
+
+    def finished_tokens():
+        return {str(r.uid): list(r.tokens)
+                for r in tracked.values() if r.done}
+
+    try:
+        try:
+            res = engine.run_until_drained(max_steps=100_000,
+                                           liveness=rt.monitor)
+        except (RankLost, CollectiveTimeout):
+            raise
+        except Exception as e:
+            # a peer dying inside a collective surfaces as a raw
+            # transport error first — let the watchdog name the culprit
+            rt.diagnose(e)
+        assert res.drained, "engine stopped before draining"
+        rt.barrier("serve_done")
+        if cfg.rank == 0:
+            write_json(os.path.join(result_dir,
+                                    f"tokens_g{cfg.generation}.json"),
+                       {"drained": True, "ticks": tick[0],
+                        "tokens": finished_tokens()})
+        rt.leave(mp.EXIT_OK)
+    except (RankLost, CollectiveTimeout) as e:
+        kind = "RankLost" if isinstance(e, RankLost) else "CollectiveTimeout"
+        print(f"serve r{cfg.rank}: {kind} from liveness: {e}", flush=True)
+        if cfg.rank == 0:
+            journal = request_journal(engine)
+            if journal_path:
+                write_json(journal_path, journal)
+            write_json(os.path.join(result_dir,
+                                    f"tokens_g{cfg.generation}.json"),
+                       {"drained": False, "ticks": tick[0],
+                        "tokens": finished_tokens(),
+                        "journaled": [e_["uid"] for e_ in journal]})
+            print(f"serve r0: journaled {len(journal)} unfinished "
+                  f"requests", flush=True)
+        rt.leave(mp.EXIT_RESHARD if isinstance(e, RankLost)
+                 else mp.EXIT_RESTART)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Multi-process training worker: short supervised run with real
+liveness, checkpoint/restore, and the elastic-respawn protocol exits.
+
+The driver's elastic drills exercise every path:
+
+* generation 0 (world N): train with per-step heartbeats; a SIGKILLed
+  peer surfaces as RankLost from the liveness monitor -> exit
+  EXIT_RESHARD; a SIGSTOPped peer surfaces as CollectiveTimeout ->
+  exit EXIT_RESTART.
+* generation 1 (survivor world): restore the latest checkpoint from the
+  shared directory, fast-forward the deterministic seeded batch stream
+  to the restored step (the cross-process ReplayBuffer analogue), and
+  finish the run.  Rank 0 writes the final state so the test can pin it
+  bit-identical against a fault-free run on the same shrunk mesh.
+
+extra keys: steps, batch, seq, ckpt_every, ckpt_dir, result_dir,
+[arch, stall_after, lr].
+"""
+import json
+import os
+import time
+
+from _common import arm, bootstrap, put_batch, write_json
+
+
+def main():
+    mp, cfg, rt = bootstrap()
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import _shardings, make_batches
+    from repro.models.common import split_params
+    from repro.runtime.chaos import CollectiveTimeout, RankLost
+    from repro.runtime.fault_tolerance import SupervisorConfig, TrainSupervisor
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.step import (TrainConfig, build_train_step,
+                                  init_train_state, train_state_specs)
+
+    x = cfg.extra
+    steps = int(x.get("steps", 20))
+    batch = int(x.get("batch", 8))
+    seq = int(x.get("seq", 32))
+    ckpt_dir = x["ckpt_dir"]
+    result_dir = x["result_dir"]
+    os.makedirs(result_dir, exist_ok=True)
+
+    ctx = make_host_mesh()
+    bundle = get_arch(x.get("arch", "chatglm3-6b")).reduced()
+    params_p = bundle.init_params(jax.random.PRNGKey(0))
+    params, param_specs = split_params(params_p)
+    tc = TrainConfig(optimizer=OptimizerConfig(
+        name=bundle.optimizer, lr=float(x.get("lr", 1e-3)),
+        warmup_steps=2, total_steps=steps))
+    state = init_train_state(tc, params)
+    state_sh = _shardings(ctx, train_state_specs(tc, param_specs))
+    state = rt.global_put(state, state_sh)
+
+    raw_step = jax.jit(build_train_step(bundle.loss_fn(ctx), tc),
+                       donate_argnums=(0,))
+
+    def step_fn(state, b):
+        return raw_step(state, put_batch(ctx, batch, b))
+
+    sup = TrainSupervisor(
+        SupervisorConfig(checkpoint_dir=ckpt_dir,
+                         checkpoint_every=int(x.get("ckpt_every", 3)),
+                         max_restarts=0, async_save=False),
+        step_fn, state_shardings=state_sh, liveness=rt.monitor)
+
+    # A fresh process must fast-forward the seeded batch stream to the
+    # restored step itself (ReplayBuffer only covers in-process restarts).
+    state, start = sup.maybe_restore(state)
+    batches = iter(make_batches(bundle, batch, seq, seed=0))
+    for _ in range(start):
+        next(batches)
+    print(f"worker r{cfg.rank}/g{cfg.generation}: world={cfg.world} "
+          f"start_step={start} mesh={dict(ctx.mesh.shape)}", flush=True)
+
+    records = []
+
+    def on_metrics(step, metrics):
+        records.append({"step": step, "loss": float(metrics["loss"]),
+                        "t": time.time()})
+        arm(rt, step=step)
+        print(f"step {step} loss {records[-1]['loss']:.4f}", flush=True)
+
+    result = {"rank": cfg.rank, "world": cfg.world,
+              "generation": cfg.generation, "start_step": start,
+              "steps": records, "completed": False, "exit_reason": None}
+
+    def dump(reason):
+        result["exit_reason"] = reason
+        write_json(os.path.join(
+            result_dir, f"result_g{cfg.generation}_r{cfg.rank}.json"), result)
+
+    try:
+        try:
+            final, step = sup.run(state, batches, steps, start_step=start,
+                                  on_metrics=on_metrics)
+        except (RankLost, CollectiveTimeout):
+            raise
+        except Exception as e:
+            # a peer dying inside a collective surfaces as a raw
+            # transport error first — let the watchdog name the culprit
+            rt.diagnose(e)
+        result["completed"] = True
+        host = rt.host_gather(final)
+        if cfg.rank == 0:
+            leaves = [np.asarray(v) for v in jax.tree.leaves(host)]
+            np.savez(os.path.join(result_dir,
+                                  f"final_g{cfg.generation}.npz"), *leaves)
+        rt.barrier("train_done")
+        dump("ok")
+        rt.leave(mp.EXIT_OK)
+    except RankLost as e:
+        print(f"worker r{cfg.rank}: RankLost from liveness: {e}", flush=True)
+        dump(f"rank_lost:{e.rank}")
+        rt.leave(mp.EXIT_RESHARD)
+    except CollectiveTimeout as e:
+        print(f"worker r{cfg.rank}: CollectiveTimeout from liveness: {e}",
+              flush=True)
+        dump("collective_timeout")
+        rt.leave(mp.EXIT_RESTART)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Edge-case tests for :mod:`repro.runtime.elastic`: non-prefix survivor
+sets (the lost process owned the *first* devices) and batch rescale
+under grad accumulation."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.parallel.sharding import ParallelContext
+from repro.runtime.elastic import rescale_batch, shrink_context
+from repro.compat import make_mesh
+
+
+@pytest.fixture
+def ctx24():
+    return ParallelContext.from_mesh(make_mesh((2, 4), ("data", "model")))
+
+
+class TestShrinkLostDevices:
+    def test_default_keeps_prefix(self, ctx24):
+        new = shrink_context(ctx24)
+        old = np.asarray(ctx24.mesh.devices).reshape(-1)
+        kept = np.asarray(new.mesh.devices).reshape(-1)
+        assert [d.id for d in kept] == [d.id for d in old[:4]]
+
+    def test_lost_prefix_process_keeps_tail(self, ctx24):
+        # The process owning devices 0..3 died: the survivors are the
+        # *tail* of the flattened world.  Blindly keeping the prefix
+        # would rebuild the mesh around dead hardware.
+        new = shrink_context(ctx24, lost=range(0, 4))
+        old = np.asarray(ctx24.mesh.devices).reshape(-1)
+        kept = np.asarray(new.mesh.devices).reshape(-1)
+        assert [d.id for d in kept] == [d.id for d in old[4:]]
+        assert dict(new.mesh.shape) == {"data": 1, "model": 4}
+
+    def test_lost_interior_slice(self, ctx24):
+        # losing the middle of the world: survivors are 0,1 then 6,7
+        new = shrink_context(ctx24, lost=[2, 3, 4, 5])
+        old = np.asarray(ctx24.mesh.devices).reshape(-1)
+        kept = [d.id for d in np.asarray(new.mesh.devices).reshape(-1)]
+        assert kept == [old[0].id, old[1].id, old[6].id, old[7].id]
+
+    def test_lost_out_of_range_raises(self, ctx24):
+        with pytest.raises(ValueError, match="outside the flattened world"):
+            shrink_context(ctx24, lost=[99])
+
+    def test_too_many_lost_raises(self, ctx24):
+        # 6 dead of 8 leaves 2 survivors, but a factor-2 shrink of (2,4)
+        # still needs 4 devices.
+        with pytest.raises(ValueError, match="survive"):
+            shrink_context(ctx24, lost=range(0, 6))
+
+    def test_axes_and_hw_carry_over(self, ctx24):
+        new = shrink_context(ctx24, lost=range(0, 4))
+        assert new.mesh.axis_names == ctx24.mesh.axis_names
+        assert new.hw is ctx24.hw
+
+
+class TestRescaleBatchMicrobatches:
+    def test_clean_rescale_no_warning(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert rescale_batch(16, 4, 2, microbatches=2) == 8
+
+    def test_shrink_below_microbatch_multiple_rounds_up(self):
+        # per-device 2, dp 4 -> 1: new batch 2 does not divide into 4
+        # microbatches — rounded up to 4 with a loud warning.
+        with pytest.warns(RuntimeWarning, match="microbatches"):
+            assert rescale_batch(8, 4, 1, microbatches=4) == 4
+
+    def test_shrink_off_multiple_rounds_up(self):
+        # batch 12 over dp 4 -> dp 3 gives 9, not a multiple of 2
+        with pytest.warns(RuntimeWarning, match="rounding up"):
+            assert rescale_batch(12, 4, 3, microbatches=2) == 10
+
+    def test_microbatches_one_never_warns(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert rescale_batch(8, 4, 1, microbatches=1) == 2
+
+    def test_indivisible_global_batch_still_warns(self):
+        with pytest.warns(RuntimeWarning, match="does not divide"):
+            rescale_batch(4, 8, 4)

@@ -1,0 +1,116 @@
+"""Unit tests for the pure parts of :mod:`repro.runtime.multiprocess`:
+the worker-env wire format, the respawn-protocol decision function and
+the measured alpha-beta hardware-model fit.  Everything that needs a
+real coordinator-wired world lives in ``tests/multiprocess``."""
+import numpy as np
+import pytest
+
+from repro.core.perfmodel import DCN
+from repro.runtime.multiprocess import (EXIT_OK, EXIT_RESHARD,
+                                        EXIT_RESTART, WorkerEnv,
+                                        fit_alpha_beta,
+                                        measured_hardware_model,
+                                        next_generation_world,
+                                        pick_free_port)
+
+
+def test_worker_env_roundtrip():
+    cfg = WorkerEnv(rank=2, world=4, coordinator="127.0.0.1:12345",
+                    generation=1, heartbeat_dir="/tmp/hb", local_devices=2,
+                    extra={"steps": 8, "ckpt_dir": "/tmp/ck"})
+    env = cfg.to_env()
+    assert all(k.startswith("REPRO_MP_") for k in env)
+    back = WorkerEnv.from_env({**env, "UNRELATED": "x"})
+    assert back == cfg
+
+
+def test_worker_env_defaults():
+    cfg = WorkerEnv(rank=0, world=1, coordinator="h:1", generation=0,
+                    heartbeat_dir="/tmp/hb")
+    back = WorkerEnv.from_env(cfg.to_env())
+    assert back.local_devices == cfg.local_devices
+    assert back.extra == {}
+
+
+def test_pick_free_port_is_bindable():
+    import socket
+
+    port = pick_free_port()
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", port))
+
+
+class TestNextGenerationWorld:
+    def test_reshard_shrinks_to_survivors(self):
+        # rank 1 SIGKILLed (-9), the other two exited with the reshard
+        # protocol code: next world = number of survivors.
+        codes = {0: EXIT_RESHARD, 1: -9, 2: EXIT_RESHARD}
+        assert next_generation_world(codes) == 2
+
+    def test_restart_keeps_world_size(self):
+        codes = {0: EXIT_RESTART, 1: EXIT_RESTART}
+        assert next_generation_world(codes) == 2
+
+    def test_reshard_wins_over_restart(self):
+        # mixed signals: the permanent diagnosis (reshard) subsumes the
+        # transient one.
+        codes = {0: EXIT_RESHARD, 1: EXIT_RESTART, 2: -9}
+        assert next_generation_world(codes) == 2
+
+    def test_all_ok_is_terminal(self):
+        # run_elastic checks for completion before consulting this
+        # function; an all-OK generation carries no respawn request.
+        assert next_generation_world({0: EXIT_OK, 1: EXIT_OK}) is None
+
+    def test_all_crashed_is_unrecoverable(self):
+        assert next_generation_world({0: -9, 1: 1}) is None
+
+    def test_clean_exits_count_as_survivors(self):
+        # a rank that drained and exited 0 while its peers voted reshard
+        # still exists for the next generation.
+        codes = {0: EXIT_RESHARD, 1: EXIT_OK, 2: -9}
+        assert next_generation_world(codes) == 2
+
+
+def test_fit_alpha_beta_recovers_synthetic_line():
+    alpha, beta = 40e-6, 1.0 / 2e9          # 40us latency, 2 GB/s
+    sizes = [1 << 20, 4 << 20, 16 << 20]
+    times = [alpha + beta * s for s in sizes]
+    a, b = fit_alpha_beta(sizes, times)
+    assert a == pytest.approx(alpha, rel=1e-6)
+    assert b == pytest.approx(beta, rel=1e-6)
+
+
+def test_fit_alpha_beta_clamps_negative_intercept():
+    # noisy small-transfer data can produce a negative intercept; the
+    # model clamps to physical values.
+    sizes = [1e6, 2e6]
+    times = [1e-4, 3e-4]                    # implies alpha < 0
+    a, b = fit_alpha_beta(sizes, times)
+    assert a >= 0.0
+    assert b > 0.0
+
+
+def test_measured_hardware_model_replaces_link_constants():
+    sizes = [1 << 20, 8 << 20]
+    beta = 1.0 / 1.5e9
+    times = [1e-4 + beta * s for s in sizes]
+    hw = measured_hardware_model(sizes, times)
+    assert hw.ici_bw == pytest.approx(1.5e9, rel=1e-6)
+    assert hw.ici_lat == pytest.approx(1e-4, rel=1e-6)
+    # non-link constants are inherited from the base (DCN) model
+    assert hw.hbm_bw == DCN.hbm_bw
+
+
+def test_measured_model_feeds_perf_predictions():
+    # the measured model must slot into the same prediction path the
+    # --calibrate sweep uses: slower measured links -> larger predicted
+    # collective time.
+    sizes = [1 << 20, 8 << 20]
+    fast = measured_hardware_model(sizes, [s / 10e9 + 1e-5 for s in sizes])
+    slow = measured_hardware_model(sizes, [s / 1e9 + 1e-3 for s in sizes])
+    nbytes = 4 << 20
+    t_fast = nbytes / fast.ici_bw + fast.ici_lat
+    t_slow = nbytes / slow.ici_bw + slow.ici_lat
+    assert t_slow > t_fast
+    assert np.isfinite(t_slow)

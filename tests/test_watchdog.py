@@ -1,0 +1,209 @@
+"""Unit tests for the liveness layer (no subprocesses: clock and pid
+prober are injected, so the whole classification matrix and both raise
+paths run in-process).  The genuine cross-process drills — SIGKILL and
+SIGSTOP against real jax.distributed workers — live in
+``tests/multiprocess``."""
+import threading
+import time
+
+import pytest
+
+from repro.runtime.chaos import CollectiveTimeout, RankLost
+from repro.runtime.watchdog import (ALIVE, DEAD, STALLED, STARTING,
+                                    Heartbeat, HeartbeatWriter,
+                                    LivenessMonitor, Watchdog,
+                                    heartbeat_path, read_heartbeat,
+                                    write_heartbeat)
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    hb = Heartbeat(rank=3, pid=4242, time=123.5, step=7, generation=2,
+                   status="up")
+    write_heartbeat(str(tmp_path), hb)
+    back = read_heartbeat(str(tmp_path), 3)
+    assert back == hb
+
+
+def test_read_missing_and_garbled(tmp_path):
+    assert read_heartbeat(str(tmp_path), 0) is None
+    with open(heartbeat_path(str(tmp_path), 0), "w") as f:
+        f.write("{not json")
+    assert read_heartbeat(str(tmp_path), 0) is None
+    with open(heartbeat_path(str(tmp_path), 0), "w") as f:
+        f.write('{"unexpected": 1}')
+    assert read_heartbeat(str(tmp_path), 0) is None
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    write_heartbeat(str(tmp_path), Heartbeat(rank=0, pid=1, time=0.0))
+    names = {p.name for p in tmp_path.iterdir()}
+    assert names == {"hb_0.json"}
+
+
+def test_writer_beats_in_background(tmp_path):
+    w = HeartbeatWriter(str(tmp_path), 0, interval_s=0.02)
+    with w:
+        time.sleep(0.1)
+        hb1 = read_heartbeat(str(tmp_path), 0)
+        time.sleep(0.1)
+        hb2 = read_heartbeat(str(tmp_path), 0)
+    assert hb1 is not None and hb2 is not None
+    assert hb2.time > hb1.time
+    # final beat on stop carries the departure status
+    assert read_heartbeat(str(tmp_path), 0).status == "leaving"
+
+
+def _monitor(tmp_path, *, now, world=2, pid_alive=lambda pid: True,
+             **kw):
+    clock = lambda: now[0]
+    return LivenessMonitor(str(tmp_path), 0, world, pid_alive=pid_alive,
+                           clock=clock, **kw)
+
+
+def test_classification_matrix(tmp_path):
+    now = [1000.0]
+    alive_pids = {1: True}
+    mon = _monitor(tmp_path, now=now, stall_after_s=2.0, start_grace_s=30.0,
+                   pid_alive=lambda pid: alive_pids.get(pid, False))
+
+    # no heartbeat yet, inside the grace window -> STARTING
+    assert mon.observe()[1].state == STARTING
+
+    # fresh heartbeat -> ALIVE
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=1, time=now[0]))
+    assert mon.observe()[1].state == ALIVE
+
+    # stale heartbeat, pid alive -> STALLED (SIGSTOP / wedged runtime)
+    now[0] += 5.0
+    assert mon.observe()[1].state == STALLED
+
+    # stale heartbeat, pid gone -> DEAD
+    alive_pids[1] = False
+    assert mon.observe()[1].state == DEAD
+
+    # explicit departure status -> DEAD even when fresh
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=1, time=now[0],
+                                             status="leaving"))
+    assert mon.observe()[1].state == DEAD
+
+
+def test_no_heartbeat_past_grace_is_dead(tmp_path):
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, start_grace_s=10.0)
+    assert mon.observe()[1].state == STARTING
+    now[0] = 11.0
+    assert mon.observe()[1].state == DEAD
+
+
+def test_stale_generation_reads_as_not_started(tmp_path):
+    # A gen-0 heartbeat left behind by the previous incarnation must not
+    # read as a live gen-1 peer.
+    now = [0.0]
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=1, time=now[0],
+                                             generation=0))
+    mon = _monitor(tmp_path, now=now, generation=1, start_grace_s=10.0)
+    assert mon.observe()[1].state == STARTING
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=1, time=now[0],
+                                             generation=1))
+    assert mon.observe()[1].state == ALIVE
+
+
+def test_check_raises_rank_lost_for_dead_peer(tmp_path):
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, pid_alive=lambda pid: False)
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=99, time=0.0))
+    now[0] = 10.0
+    with pytest.raises(RankLost) as ei:
+        mon.check()
+    assert "liveness" in str(ei.value)
+
+
+def test_check_raises_collective_timeout_for_stalled_peer(tmp_path):
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, pid_alive=lambda pid: True)
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=99, time=0.0))
+    now[0] = 10.0
+    with pytest.raises(CollectiveTimeout) as ei:
+        mon.check()
+    assert "stalled" in str(ei.value)
+
+
+def test_dead_wins_over_stalled(tmp_path):
+    # rank 1 stalled, rank 2 dead: the dead rank is the stronger
+    # diagnosis and must be the one raised.
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, world=3,
+                   pid_alive=lambda pid: pid == 1)
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=1, time=0.0))
+    write_heartbeat(str(tmp_path), Heartbeat(rank=2, pid=2, time=0.0))
+    now[0] = 10.0
+    with pytest.raises(RankLost) as ei:
+        mon.check()
+    assert ei.value.rank == 2
+
+
+def test_disarmed_monitor_never_raises(tmp_path):
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, pid_alive=lambda pid: False)
+    mon.enabled = False
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=99, time=0.0))
+    now[0] = 100.0
+    mon.check()   # no raise while disarmed (first-compile window)
+    mon.enabled = True
+    with pytest.raises(RankLost):
+        mon.check()
+
+
+def test_guarded_passes_through_result_and_exception(tmp_path):
+    mon = LivenessMonitor(str(tmp_path), 0, 1)   # no peers: check no-ops
+    assert mon.guarded(lambda a, b: a + b, 2, 3) == 5
+
+    class Boom(RuntimeError):
+        pass
+
+    def boom():
+        raise Boom("inner")
+
+    with pytest.raises(Boom):
+        mon.guarded(boom)
+
+
+def test_guarded_raises_when_peer_dies_mid_step(tmp_path):
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, pid_alive=lambda pid: False)
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=99, time=0.0))
+    release = threading.Event()
+
+    def hang():
+        now[0] = 10.0          # peer goes stale while we are "in" the step
+        release.wait(5.0)
+
+    with pytest.raises(RankLost):
+        mon.guarded(hang, poll_s=0.01)
+    release.set()
+
+
+def test_guarded_step_deadline(tmp_path):
+    # all peers healthy (world of 1) but the step wedges: the deadline
+    # backstop converts it into CollectiveTimeout.
+    mon = LivenessMonitor(str(tmp_path), 0, 1)
+    release = threading.Event()
+    with pytest.raises(CollectiveTimeout) as ei:
+        mon.guarded(lambda: release.wait(5.0), deadline_s=0.05, poll_s=0.01)
+    assert "deadline" in str(ei.value)
+    release.set()
+
+
+def test_watchdog_parks_and_reraises(tmp_path):
+    now = [0.0]
+    mon = _monitor(tmp_path, now=now, pid_alive=lambda pid: False)
+    write_heartbeat(str(tmp_path), Heartbeat(rank=1, pid=99, time=0.0))
+    wd = Watchdog(mon, poll_s=0.01)
+    with wd:
+        wd.maybe_raise()       # healthy so far
+        now[0] = 10.0
+        deadline = time.time() + 2.0
+        while wd.failure is None and time.time() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(RankLost):
+            wd.maybe_raise()
