@@ -122,6 +122,8 @@ def render_report(reports, ctx: ParallelContext) -> str:
             lines.append("    fusible: yes")
         else:
             lines.append(f"    fusible: no — {r.reason}")
+        if r.kernel:
+            lines.append(f"    kernel: {r.kernel}")
     n_rw = sum(1 for r in reports if r.rewritten)
     lines.append(f"{n_rw}/{len(reports)} site(s) rewritten")
     return "\n".join(lines)

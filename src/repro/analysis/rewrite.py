@@ -64,6 +64,7 @@ class SiteReport:
     fused_us: float | None = None
     q: int | None = None
     wire: str | None = None
+    kernel: str = ""
 
     @property
     def savings_pct(self) -> float | None:
@@ -259,12 +260,31 @@ def _score_embedding(site, ctx) -> SiteReport:
                    n * dec.q, ds)
 
 
+def _moe_kernel_note(ctx, key_shape) -> str:
+    """Device-initiated dispatch-kernel availability for an MoE site:
+    mesh-shape gate (the interpreter maps multi-axis meshes through the
+    flattened world), degradation quarantine, and the wire constraint
+    (the PUT payload has no per-chunk fp8 scale — fp8 clamps to bf16)."""
+    from repro.kernels.fused_dispatch_a2a.ops import (
+        fused_dispatch_a2a_kernel_available)
+    if not fused_dispatch_a2a_kernel_available(ctx.mesh):
+        return "unavailable — interpret mode needs a known mesh shape"
+    if is_quarantined("moe_a2a_kernel", key_shape):
+        return "unavailable — quarantined by the degradation policy"
+    note = ("available — device-initiated dispatch PUT ring chained "
+            "with the FFN+combine kernel (mode='kernel')")
+    if ctx.fusion.wire == "fp8":
+        note += "; wire='fp8' clamps to bf16 on the PUT payload"
+    return note
+
+
 def _score_moe(site, ctx) -> SiteReport:
     n_ring, e_loc, cap, d = site.detail["buf_shape"]
     d_ff = site.detail["d_ff"] or d
     axis, n = ctx.tp_axis, ctx.tp
     rpt = SiteReport(site.family, site.pathstr, site.axes, site.in_shapes,
                      fusible=False, rewritten=False)
+    rpt.kernel = _moe_kernel_note(ctx, (n_ring, e_loc, cap, d))
     reason = (_gate_common(site, ctx, flag="moe_a2a", op="moe_a2a",
                            key_shape=(n_ring, e_loc, cap, d))
               or _wire_gate(ctx, axis))

@@ -222,6 +222,7 @@ def choose_overlap(
     skew: int = 0,
     wire: str = "f32",
     fixed_q: int | None = None,
+    allow_fp8: bool = True,
 ) -> Decision:
     """Pick ``(chunks_per_rank, wire_dtype)`` minimizing the modeled fused
     time, jointly per (op, mesh axis).
@@ -241,8 +242,12 @@ def choose_overlap(
     (a pinned ``--granularity`` with ``--wire auto``).  ``skew`` is the
     measured schedule rotation the caller is running under — it does not
     move the alpha-beta model, but keys the decision so a later measured
-    sweep can record per-bucket winners.  The decision is memoized under
-    the full constraint key.
+    sweep can record per-bucket winners.  ``allow_fp8=False`` clamps fp8
+    candidates (including an explicit ``wire="fp8"`` request) to bf16 —
+    the device-initiated kernels have no per-chunk-scale path, and the
+    clamp must be recorded in the cached :class:`Decision` so the cache
+    never promises a wire the kernel cannot ship.  The decision is
+    memoized under the full constraint key.
     """
     hw = resolve_hw(hw, axis)
     ring = n_dev if divisor_ring is None else divisor_ring
@@ -255,9 +260,13 @@ def choose_overlap(
         return hit
     qs = ([int(fixed_q)] if fixed_q is not None
           else _divisor_candidates(divisor_of, ring, max_q))
+    cands = wire_candidates(wire, hw)
+    if not allow_fp8:
+        cands = list(dict.fromkeys("bf16" if w == "fp8" else w
+                                   for w in cands))
     best: Decision | None = None
     best_t = float("inf")
-    for w in wire_candidates(wire, hw):
+    for w in cands:
         factor = wire_itemsize(w, dtype_bytes) / float(dtype_bytes)
         w_best_q, w_best_t = qs[0], float("inf")
         for q in qs:
@@ -332,19 +341,27 @@ def tune_all_to_all(chunk_elems: int, flops_per_dest: float, *,
                     dtype_bytes: int, n_dev: int, sub_dim: int,
                     hw: HardwareModel | MeshHardwareModel = V5E,
                     axis=None, skew: int = 0, wire: str = "f32",
-                    fixed_q: int | None = None) -> Decision:
+                    fixed_q: int | None = None,
+                    kernel: bool = False) -> Decision:
     """Granularity for the direct-send compute + All-to-All family.
 
     The payload is per-destination already, so only ``q | sub_dim``
-    constrains the sub split (``divisor_ring=1``)."""
+    constrains the sub split (``divisor_ring=1``).  ``kernel=True``
+    tunes the device-initiated Pallas path under its own ``TuneKey`` op
+    (``"all_to_all_kernel"``): the decision space differs — the kernel
+    stages PUT payloads without a per-chunk-scale path, so fp8
+    candidates are clamped to bf16 and the clamp is recorded in the
+    cached :class:`Decision`."""
     wire_b = float(chunk_elems * dtype_bytes) * (n_dev - 1)
     return choose_overlap(
-        "all_to_all", shape=(chunk_elems, int(flops_per_dest)),
+        "all_to_all_kernel" if kernel else "all_to_all",
+        shape=(chunk_elems, int(flops_per_dest)),
         dtype_bytes=dtype_bytes, n_dev=n_dev,
         flops=flops_per_dest * n_dev,
         hbm_bytes=float(chunk_elems * dtype_bytes * n_dev),
         wire_bytes=wire_b, divisor_of=sub_dim, divisor_ring=1, hw=hw,
-        axis=axis, skew=skew, wire=wire, fixed_q=fixed_q)
+        axis=axis, skew=skew, wire=wire, fixed_q=fixed_q,
+        allow_fp8=not kernel)
 
 
 def tune_ring_attention(b: int, s_loc: int, n_heads: int, n_kv_heads: int,

@@ -8,6 +8,8 @@ and Pallas device-initiated kernels — nothing else in the model changes.
 from repro.core.matmul_allreduce import matmul_allreduce
 from repro.core.allgather_matmul import allgather_matmul, matmul_reducescatter, allgather_seq
 from repro.core.moe_all_to_all import moe_dispatch_all_to_all, fused_expert_ffn_combine
+from repro.kernels.fused_dispatch_a2a import fused_dispatch_a2a
+from repro.kernels.fused_gemm_a2a import fused_moe_kernel
 from repro.core.embedding_all_to_all import embedding_all_to_all
 from repro.core.loss import sharded_cross_entropy
 from repro.core.collectives import (
@@ -58,6 +60,8 @@ __all__ = [
     "allgather_seq",
     "moe_dispatch_all_to_all",
     "fused_expert_ffn_combine",
+    "fused_dispatch_a2a",
+    "fused_moe_kernel",
     "embedding_all_to_all",
     "sharded_cross_entropy",
     "ring_reduce_scatter_compute",

@@ -36,18 +36,26 @@ from repro.compat import shard_map
 
 
 def _resolve(ctx, chunks_per_rank, wire, *, sub_dim, chunk_elems,
-             flops_per_dest, dtype_bytes, skew=0):
+             flops_per_dest, dtype_bytes, skew=0, kernel=False):
     """FusionConfig/override -> feasible (chunks_per_rank, wire).
     Sub-chunks are cut along the capacity axis, so q must divide
-    ``sub_dim`` (= C)."""
-    return resolve_overlap(
+    ``sub_dim`` (= C).  ``kernel=True`` tunes the device-initiated path
+    under its own ``TuneKey`` op (fp8 clamped to bf16 in the decision)."""
+    dec = resolve_overlap(
         chunks_per_rank, ctx.fusion.granularity, wire, ctx.fusion.wire,
         lambda fq, wr: tune_all_to_all(chunk_elems, flops_per_dest,
                                        dtype_bytes=dtype_bytes, n_dev=ctx.tp,
                                        sub_dim=sub_dim, hw=ctx.hw,
                                        axis=ctx.tp_axis, skew=skew, wire=wr,
-                                       fixed_q=fq),
+                                       fixed_q=fq, kernel=kernel),
         dim=sub_dim, ring=1)
+    if kernel and dec.wire == "fp8":
+        # a pinned --wire fp8 bypasses the tuner sweep; record the
+        # kernel-path clamp in the decision the caller sees
+        from repro.kernels import clamp_kernel_wire
+
+        dec = dec._replace(wire=clamp_kernel_wire(dec.wire, "moe_a2a_kernel"))
+    return dec
 
 
 def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
@@ -69,6 +77,10 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     order by the measured straggler bucket (Fig. 14).  ``wire``
     compresses each remote send on the producer side (one rounding per
     token; the locally-consumed block stays exact).
+
+    ``mode="kernel"`` runs the device-initiated Pallas dispatch A2A
+    (remote DMA into the peers' by-source slots) where the backend
+    supports it; falls back to fused.
     """
     mode = mode or ctx.fusion.resolve("moe_a2a")
     mode = degrade_mode("moe_dispatch_a2a", x.shape, mode)
@@ -80,12 +92,25 @@ def moe_dispatch_all_to_all(ctx: ParallelContext, x, *, mode: str | None = None,
     e_loc = e_glob // ctx.tp      # expert dim is tp-sharded (in_specs)
     dp = ctx.batch_axes if b % ctx.dp == 0 else None
     b_loc = b // (ctx.dp if dp is not None else 1)
+    if mode == "kernel":
+        from repro.kernels.fused_dispatch_a2a.ops import (
+            fused_dispatch_a2a, fused_dispatch_a2a_kernel_available)
+
+        if not fused_dispatch_a2a_kernel_available(ctx.mesh):
+            mode = "fused"
     dec = (None if mode == "bulk" else
            _resolve(ctx, chunks_per_rank, wire, sub_dim=cap,
                     chunk_elems=b_loc * e_loc * cap * dmodel,
                     flops_per_dest=0.0, dtype_bytes=x.dtype.itemsize,
-                    skew=skew))
+                    skew=skew, kernel=mode == "kernel"))
     q, wire_dt = (1, "f32") if dec is None else (dec.q, dec.wire)
+    if mode == "kernel":
+        # device-initiated path: the global kernel entry owns the
+        # shard_map (it flattens multi-axis meshes under interpret mode)
+        return fused_dispatch_a2a(ctx, x,
+                                  comm_aware=schedule == "comm_aware",
+                                  chunks_per_rank=q, skew=skew,
+                                  wire=wire_dt)
 
     def local_fn(xl):
         # xl: [B_loc, n_ep, E_local, C, D]; exchange dim 1 across ranks.
@@ -184,14 +209,21 @@ def fused_expert_ffn_combine(
                     dtype_bytes=x_dispatched.dtype.itemsize, skew=skew))
     q, wire_dt = (1, "f32") if dec is None else (dec.q, dec.wire)
     if mode == "kernel":
-        # the Pallas PUT path stages its tx buffers in the wire dtype
-        # (fp8's per-chunk scale is an XLA-path feature: clamp to bf16)
+        from repro.kernels.fused_gemm_a2a.ops import fused_gemm_a2a
+
+        # the kernel-path tune key clamps fp8 to bf16 in the Decision
+        # (the PUT staging has no per-chunk-scale path)
         kdec = _resolve(ctx, 1, wire, sub_dim=cap,
                         chunk_elems=b_loc * e_loc * cap * dmodel,
                         flops_per_dest=2.0 * 3 * b_loc * e_loc * cap
                         * dmodel * d_ff,
-                        dtype_bytes=x_dispatched.dtype.itemsize, skew=skew)
-        wire_dt = "bf16" if kdec.wire == "fp8" else kdec.wire
+                        dtype_bytes=x_dispatched.dtype.itemsize, skew=skew,
+                        kernel=True)
+        # the global kernel entry owns the shard_map (it flattens
+        # multi-axis meshes under interpret mode)
+        return fused_gemm_a2a(ctx, x_dispatched, w_up, w_gate, w_down,
+                              act=act, comm_aware=schedule == "comm_aware",
+                              skew=skew, wire=kdec.wire)
 
     def ffn_block(xb, wu, wg, wd):
         # xb: [B_loc, E_local, C, D] -> same shape
@@ -206,12 +238,6 @@ def fused_expert_ffn_combine(
             flat = xt.reshape((xt.shape[0] * xt.shape[1],) + xt.shape[2:])
             y = ffn_block(flat, wu, wg, wd).reshape(xt.shape)
             out = bulk_all_to_all(y, axis)
-        elif mode == "kernel":
-            from repro.kernels.fused_gemm_a2a.ops import fused_gemm_a2a_shard
-
-            out = fused_gemm_a2a_shard(xt, wu, wg, wd, axis, act=act,
-                                       comm_aware=schedule == "comm_aware",
-                                       wire=wire_dt)
         else:
             sub = cap // q
 

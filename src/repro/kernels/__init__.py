@@ -24,3 +24,24 @@ def interpret_mode() -> bool:
     import jax
 
     return jax.default_backend() != "tpu"
+
+
+_FP8_CLAMP_WARNED: set = set()
+
+
+def clamp_kernel_wire(wire: str, op: str) -> str:
+    """Device-initiated kernels stage PUT payloads at the wire dtype but
+    have no per-chunk-scale path, so ``"fp8"`` is clamped to ``"bf16"``.
+    Warns once per op family so ``--wire fp8`` users see the clamp instead
+    of silently reading bf16 decisions out of the tune cache."""
+    if wire != "fp8":
+        return wire
+    if op not in _FP8_CLAMP_WARNED:
+        _FP8_CLAMP_WARNED.add(op)
+        import warnings
+
+        warnings.warn(
+            f"{op}: wire='fp8' is an XLA-path feature (per-chunk scale); "
+            f"the device-initiated kernel clamps the PUT payload to bf16",
+            stacklevel=3)
+    return "bf16"

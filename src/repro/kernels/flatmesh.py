@@ -1,0 +1,85 @@
+"""Flattened-world shard_map plumbing for device-initiated kernels.
+
+The CPU interpreter for ``pltpu.make_async_remote_copy`` can only
+discharge a remote DMA when the enclosing shard_map names a *single*
+mesh axis (the discharge gathers each device's target id over that one
+axis).  On a real 2-D ``(data, model)`` mesh the kernels therefore run
+their shard_map over a flattened 1-D view of the same devices — one
+named world axis with the ring axis fastest-varying — and confine each
+PUT ring to its row by logical-id arithmetic: world rank
+``w = base + ring_pos`` with ``base = (w // ring) * ring``, so a PUT to
+ring position ``dest`` targets logical id ``base + dest`` and never
+leaves the row.  On TPU (Mosaic) none of this is needed: mesh-coordinate
+device ids confine the ring to one axis natively, so the kernels keep
+the multi-axis shard_map there.
+
+The helpers below build the flattened mesh and move the MoE global
+layouts (``[B, n_ep, E, C, D]`` activations, ``[E, ...]`` expert
+weights) into/out of the world-major layout the single-axis in_specs
+need.  They are validation-path plumbing — plain reshapes/transposes XLA
+executes outside the kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+WORLD_AXIS = "kworld"
+
+
+def needs_flat_world(mesh) -> bool:
+    """True when the kernel path must run over the flattened 1-D view:
+    interpret mode (CPU validation) on a multi-axis mesh."""
+    from repro.kernels import interpret_mode
+
+    return (interpret_mode() and mesh is not None
+            and len(mesh.axis_names) > 1)
+
+
+def flat_world_mesh(mesh, ring_axis: str) -> Mesh:
+    """Single-named-axis view of ``mesh`` with ``ring_axis`` fastest-
+    varying, so each contiguous group of ``mesh.shape[ring_axis]`` world
+    ranks is one PUT-ring row."""
+    names = [a for a in mesh.axis_names if a != ring_axis] + [ring_axis]
+    perm = [mesh.axis_names.index(a) for a in names]
+    devs = np.transpose(mesh.devices, perm).reshape(-1)
+    return Mesh(devs, (WORLD_AXIS,))
+
+
+def moe_to_world(x, rows: int, ring: int, *, b_sharded: bool):
+    """``[B, n_ep, E, C, D]`` -> ``[W, B_loc, n_ep, E_loc, C, D]`` with
+    dim 0 world-major (row-major over the ``rows`` data rows, ring
+    position fastest).  ``b_sharded=False`` replicates the full batch
+    into every row (the dp-indivisible case)."""
+    b, n_ep, e, c, d = x.shape
+    if b_sharded:
+        x = x.reshape(rows, b // rows, n_ep, e, c, d)
+    else:
+        x = jnp.broadcast_to(x[None], (rows, b, n_ep, e, c, d))
+    b_loc = x.shape[1]
+    x = x.reshape(rows, b_loc, n_ep, ring, e // ring, c, d)
+    x = jnp.transpose(x, (0, 3, 1, 2, 4, 5, 6))
+    return x.reshape(rows * ring, b_loc, n_ep, e // ring, c, d)
+
+
+def moe_from_world(y, rows: int, ring: int, *, b_sharded: bool):
+    """Inverse of :func:`moe_to_world`.  In the replicated-batch case
+    every row computed the same row-confined exchange, so row 0 is the
+    answer."""
+    w, b_loc, n_ep, e_loc, c, d = y.shape
+    y = y.reshape(rows, ring, b_loc, n_ep, e_loc, c, d)
+    y = jnp.transpose(y, (0, 2, 3, 1, 4, 5, 6))
+    y = y.reshape(rows, b_loc, n_ep, ring * e_loc, c, d)
+    if b_sharded:
+        return y.reshape(rows * b_loc, n_ep, ring * e_loc, c, d)
+    return y[0]
+
+
+def weights_to_world(w, rows: int, ring: int):
+    """``[E, ...]`` expert weights (ring-sharded on dim 0, replicated
+    across rows) -> ``[W, E_loc, ...]`` world-major."""
+    e = w.shape[0]
+    w = w.reshape((ring, e // ring) + w.shape[1:])
+    w = jnp.broadcast_to(w[None], (rows,) + w.shape)
+    return w.reshape((rows * ring, e // ring) + w.shape[3:])

@@ -1,0 +1,11 @@
+from repro.kernels.fused_dispatch_a2a.ops import (
+    fused_dispatch_a2a,
+    fused_dispatch_a2a_kernel_available,
+    fused_dispatch_a2a_shard,
+)
+
+__all__ = [
+    "fused_dispatch_a2a",
+    "fused_dispatch_a2a_kernel_available",
+    "fused_dispatch_a2a_shard",
+]

@@ -1,0 +1,17 @@
+"""Oracle for the device-initiated dispatch All-to-All kernel.
+
+Per-shard semantics: every EP rank holds routed token blocks
+``xt [n, B, E, C, D]`` stacked by *destination* rank; the kernel must
+return the blocks *sent to this rank by every source* — a pure bulk
+All-to-All over the leading dim (the dispatch moves data only; the
+expert FFN happens on the receiving side).
+"""
+from __future__ import annotations
+
+from jax import lax
+
+
+def fused_dispatch_a2a_ref_shard(xt, axis_name):
+    """Inside shard_map: bulk-synchronous dispatch exchange."""
+    return lax.all_to_all(xt, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)

@@ -2,10 +2,14 @@ from repro.kernels.fused_gemm_a2a.ops import (
     fused_gemm_a2a,
     fused_gemm_a2a_kernel_available,
     fused_gemm_a2a_shard,
+    fused_moe_chain_shard,
+    fused_moe_kernel,
 )
 
 __all__ = [
     "fused_gemm_a2a",
     "fused_gemm_a2a_kernel_available",
     "fused_gemm_a2a_shard",
+    "fused_moe_chain_shard",
+    "fused_moe_kernel",
 ]

@@ -70,8 +70,9 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
                      n_dev, e_loc, tile_k, tile_f, dm, f, act,
                      axis_name, id_style, use_rx):
     my = ids_ref[0]
+    base = ids_ref[1]
     i = pl.program_id(0)
-    step_off = lambda s: ids_ref[1 + s]
+    step_off = lambda s: ids_ref[2 + s]
     kp_d = -(-dm // tile_k)
     kp_f = -(-f // tile_f)
     items = _weight_schedule(e_loc, kp_d, kp_f)
@@ -163,7 +164,7 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
         # layout; no receive-side shuffle)
         tx_ref[i] = block.astype(tx_ref.dtype)
         remote_tile_put(tx_ref.at[i], recv_ref.at[my], send_sem, recv_sem,
-                        dest, axis_name, id_style).start()
+                        base + dest, axis_name, id_style).start()
 
     @pl.when(off == 0)
     def _():
@@ -173,7 +174,7 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
     def _():
         def desc():
             return remote_tile_put(tx_ref.at[0], recv_ref.at[0], send_sem,
-                                   recv_sem, my, axis_name, id_style)
+                                   recv_sem, base + my, axis_name, id_style)
 
         drain(desc, n_dev - 1, recv=True)   # peers' blocks landed
         drain(desc, n_dev - 1, recv=False)  # our PUTs drained
@@ -186,20 +187,24 @@ def _gemm_a2a_kernel(ids_ref, x_hbm, wu_hbm, wg_hbm, wd_hbm, o_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_dev", "act", "comm_aware",
+                   static_argnames=("n_dev", "act", "comm_aware", "skew",
                                     "collective_id", "interpret",
                                     "axis_name", "id_style", "tile_k",
                                     "tile_f", "wire"))
-def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
-                          axis_name, act, comm_aware=True, collective_id=8,
-                          interpret=True, id_style=None, tile_k=None,
-                          tile_f=None, wire="f32"):
+def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, ring_base, *,
+                          n_dev, axis_name, act, comm_aware=True, skew=0,
+                          collective_id=8, interpret=True, id_style=None,
+                          tile_k=None, tile_f=None, wire="f32"):
     """Per-shard fused expert FFN + combine All-to-All.
 
     xt: [n_dev, B, E_loc, C, D] dispatched tokens stacked by combine
     destination; w_up/w_gate: [E_loc, D, F]; w_down: [E_loc, F, D];
-    my_ep: int32 ring position.  Returns [n_dev, B, E_loc, C, D] stacked
-    by *source* rank (the bulk All-to-All's layout).
+    my_ep: int32 ring position; ring_base: logical id of ring position 0
+    (0 on a 1-D mesh; on a flattened multi-axis world the row base, so a
+    PUT to ring position ``dest`` targets logical id ``ring_base + dest``
+    and stays row-confined).  ``skew`` rotates the remote send order by
+    the measured straggler bucket.  Returns [n_dev, B, E_loc, C, D]
+    stacked by *source* rank (the bulk All-to-All's layout).
 
     ``tile_k`` / ``tile_f`` bound the contraction panels of the up/gate
     and down GEMMs (``None`` = whole depth; values need not divide D or F
@@ -261,8 +266,9 @@ def fused_gemm_a2a_pallas(xt, w_up, w_gate, w_down, my_ep, *, n_dev,
             pltpu.SemaphoreType.DMA,                  # recv
         ],
     )
-    step_off, _ = step_schedule(n_dev, 1, comm_aware)
+    step_off, _ = step_schedule(n_dev, 1, comm_aware, skew)
     ids = jnp.concatenate([my_ep.astype(jnp.int32)[None],
+                           ring_base.astype(jnp.int32)[None],
                            jnp.asarray(step_off, jnp.int32)])
     return pl.pallas_call(
         kernel,

@@ -108,18 +108,28 @@ def drain(descriptor_fn, count: int, *, recv: bool):
             c.wait_send()
 
 
-def step_schedule(n_dev: int, tiles_per_rank: int, comm_aware: bool):
+def step_schedule(n_dev: int, tiles_per_rank: int, comm_aware: bool,
+                  skew: int = 0):
     """Static per-grid-step (offset, sub-tile) lists.
 
     Remote tiles first — farthest peer first under comm-aware scheduling
     (paper Fig. 7b), natural order otherwise — and the locally-reduced
-    tiles always last, so local compute hides remote wire time.  The
-    lists are meant to ride in the scalar-prefetch operand (a Pallas
-    kernel body cannot capture array constants), indexed by the traced
-    ``program_id``.
+    tiles always last, so local compute hides remote wire time.  ``skew``
+    rotates the remote portion of the offset order by the measured
+    straggler bucket (Fig. 14), mirroring
+    :func:`repro.core.scheduling.ring_offsets`; the local tiles keep
+    their final position so the remote-ahead-of-local rule (and the
+    kernels' tx-slot indexing, which relies on remote steps preceding the
+    local one) is preserved.  The lists are meant to ride in the
+    scalar-prefetch operand (a Pallas kernel body cannot capture array
+    constants), indexed by the traced ``program_id``.
     """
     offs = (list(range(n_dev - 1, 0, -1)) if comm_aware
             else list(range(1, n_dev))) + [0]
+    if skew and n_dev > 1:
+        remote = offs[:-1]
+        r = skew % len(remote)
+        offs = remote[r:] + remote[:r] + [0]
     step_off = []
     step_sub = []
     for off in offs:

@@ -22,6 +22,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import direct_all_to_all_compute, bulk_all_to_all
+from repro.kernels.flatmesh import needs_flat_world
 from repro.models.common import dense_init, key_iter
 from repro.parallel.sharding import ParallelContext
 from repro.compat import shard_map
@@ -90,11 +91,26 @@ def moe_apply(ctx: ParallelContext, params, x, cfg: MoEConfig, *,
     if not seq_sharded and cfg.n_experts % n_world_ep == 0 and len(ep_ax) >= 2:
         return _moe_decode_ep(ctx, params, x, cfg, act, ep_ax, n_world_ep)
 
+    if mode == "kernel":
+        from repro.kernels.fused_gemm_a2a.ops import (
+            fused_gemm_a2a_kernel_available)
+
+        if not fused_gemm_a2a_kernel_available(ctx.mesh):
+            mode = "fused"
+        elif needs_flat_world(ctx.mesh):
+            # the chained Pallas kernels cannot run inside the model's
+            # multi-axis shard_map under the interpreter — stage the layer
+            # as routing -> global chained kernel -> unpermute so the
+            # kernel entry can flatten the mesh itself
+            return _moe_kernel_staged(ctx, params, x, cfg, act, schedule,
+                                      x_spec, dp)
+
     shared = params.get("shared")
     if shared is not None:
         def fn(xl, w_r, wg, wu, wd, swg, swu, swd):
             return _moe_local(cfg, xl, w_r, wg, wu, wd, (swg, swu, swd),
-                              mode, schedule, axis, n_ep, act)
+                              mode, schedule, axis, n_ep, act,
+                              skew=ctx.fusion.skew)
         in_specs = (x_spec, P(None, None), P(axis, None, None),
                     P(axis, None, None), P(axis, None, None),
                     P(None, None), P(None, None), P(None, None))
@@ -104,7 +120,8 @@ def moe_apply(ctx: ParallelContext, params, x, cfg: MoEConfig, *,
     else:
         def fn(xl, w_r, wg, wu, wd):
             return _moe_local(cfg, xl, w_r, wg, wu, wd, None,
-                              mode, schedule, axis, n_ep, act)
+                              mode, schedule, axis, n_ep, act,
+                              skew=ctx.fusion.skew)
         in_specs = (x_spec, P(None, None), P(axis, None, None),
                     P(axis, None, None), P(axis, None, None))
         args = (x, params["router"], params["w_gate"], params["w_up"],
@@ -193,24 +210,21 @@ def _moe_decode_ep(ctx: ParallelContext, params, x, cfg: MoEConfig, act,
     return out
 
 
-def _moe_local(cfg, xl, w_r, wg, wu, wd, shared, mode, schedule, axis,
-               n_ep, act):
-    """Per-rank MoE body: route -> dispatch A2A -> fused expert FFN+combine."""
-    D, E, K = cfg.d_model, cfg.n_experts, cfg.top_k
-    E_loc = E // n_ep
-    b_loc, s_loc, _ = xl.shape
-    toks = xl.reshape(-1, D)
-    T = toks.shape[0]
+def _route(cfg: MoEConfig, toks, w_r):
+    """Capacity-based top-k routing (f32).  Deterministic in the tokens,
+    so the staged kernel path can recompute it on the unpermute side
+    instead of threading index arrays through the exchange.
 
-    # --- routing (f32) -----------------------------------------------------
+    Returns (gate_w [T, K], e_clip [T*K], p_clip [T*K], valid [T*K], C).
+    """
+    E, K = cfg.n_experts, cfg.top_k
+    T = toks.shape[0]
     logits = toks.astype(jnp.float32) @ w_r
     probs = jax.nn.softmax(logits, axis=-1)
     gate_w, gate_i = lax.top_k(probs, K)                  # [T, K]
     if cfg.norm_topk_prob:
         gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
     gate_w = gate_w * cfg.router_scale
-
-    # --- capacity slots ------------------------------------------------------
     # capacity floor 1 (a floor of 4 pads decode's few tokens/rank 4x)
     C = int(max(1, -(-T * K * cfg.capacity_factor // E)))
     flat_e = gate_i.reshape(-1)                           # [T*K]
@@ -220,32 +234,65 @@ def _moe_local(cfg, xl, w_r, wg, wu, wd, shared, mode, schedule, axis,
     valid = pos < C
     e_clip = jnp.where(valid, flat_e, 0)
     p_clip = jnp.where(valid, pos, 0)
-    src = jnp.where(valid[:, None], jnp.repeat(toks, K, axis=0), 0)
+    return gate_w, e_clip, p_clip, valid, C
 
-    buf = jnp.zeros((E, C, D), xl.dtype).at[e_clip, p_clip].add(
-        src.astype(xl.dtype), mode="drop")
+
+def _dispatch_buf(cfg: MoEConfig, toks, e_clip, p_clip, valid, C, dtype):
+    """Scatter routed tokens into the [E, C, D] capacity-slot buffer."""
+    E, D = cfg.n_experts, cfg.d_model
+    src = jnp.where(valid[:, None], jnp.repeat(toks, cfg.top_k, axis=0), 0)
+    return jnp.zeros((E, C, D), dtype).at[e_clip, p_clip].add(
+        src.astype(dtype), mode="drop")
+
+
+def _unpermute(cfg: MoEConfig, out_buf, gate_w, e_clip, p_clip, valid, shape,
+               dtype):
+    """Gather expert outputs back to token rows, gate-weighted."""
+    K, D = cfg.top_k, cfg.d_model
+    picked = out_buf[e_clip, p_clip]                      # [T*K, D]
+    picked = jnp.where(valid[:, None], picked, 0).reshape(-1, K, D)
+    y = (picked.astype(jnp.float32) * gate_w[..., None]).sum(axis=1)
+    return y.reshape(shape).astype(dtype)
+
+
+def _moe_local(cfg, xl, w_r, wg, wu, wd, shared, mode, schedule, axis,
+               n_ep, act, skew=0):
+    """Per-rank MoE body: route -> dispatch A2A -> fused expert FFN+combine."""
+    D, E = cfg.d_model, cfg.n_experts
+    E_loc = E // n_ep
+    toks = xl.reshape(-1, D)
+
+    # --- routing + capacity slots -------------------------------------------
+    gate_w, e_clip, p_clip, valid, C = _route(cfg, toks, w_r)
+    buf = _dispatch_buf(cfg, toks, e_clip, p_clip, valid, C, xl.dtype)
     buf = buf.reshape(n_ep, E_loc, C, D)
 
-    # --- dispatch All-to-All (decomposed per destination when fused) -------
-    if mode == "bulk":
+    def ffn(xb):  # [E_loc, C, D] -> [E_loc, C, D]
+        g = jnp.einsum("ecd,edf->ecf", xb, wg)
+        u = jnp.einsum("ecd,edf->ecf", xb, wu)
+        return jnp.einsum("ecf,efd->ecd", act(g) * u, wd)
+
+    if mode == "kernel":
+        # chained device-initiated dispatch -> FFN -> combine: the dispatch
+        # kernel's rx buffer feeds the FFN+combine kernel directly
+        from repro.kernels.fused_gemm_a2a.ops import fused_moe_chain_shard
+
+        comb = fused_moe_chain_shard(
+            buf[:, None], wu, wg, wd, axis, act=act,
+            comm_aware=schedule == "comm_aware", skew=skew)[:, 0]
+    elif mode == "bulk":
         recv = bulk_all_to_all(buf, axis)                 # [n_src, E_loc, C, D]
+        y = jax.vmap(ffn)(recv)                           # all GEMMs first...
+        comb = bulk_all_to_all(y, axis)                   # ...then one A2A
     else:
+        # --- dispatch All-to-All (decomposed per destination) --------------
         def produce_d(dest):
             return lax.dynamic_index_in_dim(buf, dest, axis=0, keepdims=False)
         recv = direct_all_to_all_compute(
             produce_d, jax.ShapeDtypeStruct((E_loc, C, D), xl.dtype),
             axis, schedule=schedule)
 
-    # --- expert FFN fused with combine All-to-All (the paper's GEMM+A2A) ---
-    def ffn(xb):  # [E_loc, C, D] -> [E_loc, C, D]
-        g = jnp.einsum("ecd,edf->ecf", xb, wg)
-        u = jnp.einsum("ecd,edf->ecf", xb, wu)
-        return jnp.einsum("ecf,efd->ecd", act(g) * u, wd)
-
-    if mode == "bulk":
-        y = jax.vmap(ffn)(recv)                           # all GEMMs first...
-        comb = bulk_all_to_all(y, axis)                   # ...then one A2A
-    else:
+        # --- expert FFN fused with combine A2A (the paper's GEMM+A2A) ------
         def produce_c(dest):
             xb = lax.dynamic_index_in_dim(recv, dest, axis=0, keepdims=False)
             return ffn(xb)
@@ -254,17 +301,71 @@ def _moe_local(cfg, xl, w_r, wg, wu, wd, shared, mode, schedule, axis,
             axis, schedule=schedule)
 
     # --- un-permute + weighted combine --------------------------------------
-    out_buf = comb.reshape(E, C, D)
-    picked = out_buf[e_clip, p_clip]                      # [T*K, D]
-    picked = jnp.where(valid[:, None], picked, 0).reshape(T, K, D)
-    y = (picked.astype(jnp.float32) * gate_w[..., None]).sum(axis=1)
-    out = y.reshape(b_loc, s_loc, D).astype(xl.dtype)
+    out = _unpermute(cfg, comb.reshape(E, C, D), gate_w, e_clip, p_clip,
+                     valid, xl.shape, xl.dtype)
 
     # --- shared expert (dense, sequence-local) ------------------------------
     if shared is not None:
         swg, swu, swd = shared
         out = out + ((act(xl @ swg) * (xl @ swu)) @ swd).astype(xl.dtype)
     return out
+
+
+def _moe_kernel_staged(ctx: ParallelContext, params, x, cfg: MoEConfig, act,
+                       schedule, x_spec, dp):
+    """Three-stage kernel-mode layer for meshes the interpreter cannot map
+    the chained kernels over directly (multi-axis under interpret mode):
+
+      1. routing shard_map emits each rank's dispatch buffer into the
+         global ``[rows, n_ep, E, C, D]`` layout,
+      2. :func:`repro.core.fused.fused_moe_kernel` runs the chained
+         dispatch -> FFN -> combine over its own (flattened) shard_map,
+      3. an unpermute shard_map recomputes the (deterministic) routing
+         and gathers expert outputs back to token rows.
+    """
+    from repro.kernels.fused_gemm_a2a.ops import fused_moe_kernel
+
+    axis, n_ep = ctx.tp_axis, ctx.tp
+    D, E = cfg.d_model, cfg.n_experts
+    E_loc = E // n_ep
+    w_r = params["router"]
+    skew = ctx.fusion.skew
+
+    def route_fn(xl, wr):
+        toks = xl.reshape(-1, D)
+        _, e_clip, p_clip, valid, C = _route(cfg, toks, wr)
+        buf = _dispatch_buf(cfg, toks, e_clip, p_clip, valid, C, xl.dtype)
+        return buf.reshape(1, n_ep, E_loc, C, D)
+
+    buf_spec = P(dp, None, axis, None, None)
+    buf = shard_map(route_fn, mesh=ctx.mesh,
+                    in_specs=(x_spec, P(None, None)), out_specs=buf_spec,
+                    check_vma=False)(x, w_r)
+
+    comb = fused_moe_kernel(ctx, buf, params["w_up"], params["w_gate"],
+                            params["w_down"], act=act,
+                            comm_aware=schedule == "comm_aware", skew=skew)
+
+    shared = params.get("shared")
+
+    def unpermute_fn(xl, wr, cl, *sw):
+        toks = xl.reshape(-1, D)
+        gate_w, e_clip, p_clip, valid, _ = _route(cfg, toks, wr)
+        out_buf = cl[0].reshape(E, -1, D)
+        out = _unpermute(cfg, out_buf, gate_w, e_clip, p_clip, valid,
+                         xl.shape, xl.dtype)
+        if sw:
+            swg, swu, swd = sw
+            out = out + ((act(xl @ swg) * (xl @ swu)) @ swd).astype(xl.dtype)
+        return out
+
+    in_specs = (x_spec, P(None, None), buf_spec)
+    args = (x, w_r, comb)
+    if shared is not None:
+        in_specs += (P(None, None), P(None, None), P(None, None))
+        args += (shared["w_gate"], shared["w_up"], shared["w_down"])
+    return shard_map(unpermute_fn, mesh=ctx.mesh, in_specs=in_specs,
+                     out_specs=x_spec, check_vma=False)(*args)
 
 
 def moe_aux_loss(router_probs, gate_i, n_experts: int):

@@ -150,6 +150,39 @@ def test_report_renders_families_and_savings():
     assert "site(s) rewritten" in text
 
 
+def test_report_moe_kernel_availability():
+    """--explain-comm reports device-initiated dispatch-kernel
+    availability per MoE site: mesh-shape gate, quarantine, and the
+    fp8->bf16 wire clamp."""
+    ctx, bundle, params, batch0, closed = _trace("dbrx-132b")
+    text = explain_comm(ctx, bundle.loss_fn(ctx), params, batch0)
+    assert "kernel: available — device-initiated dispatch PUT ring" in text
+    assert "mode='kernel'" in text
+
+    # wire='fp8' is an XLA-path feature: the kernel note pins the clamp
+    ctx8 = ctx.with_fusion(FusionConfig(mode="auto", wire="fp8"))
+    plan = plan_rewrites(build_comm_graph(closed, ctx8), ctx8)
+    moe = [r for r in plan.reports
+           if r.family == cg.MOE_DISPATCH_COMBINE][0]
+    assert "clamps to bf16" in moe.kernel
+
+    # quarantined (op, shape) keys gate the kernel like the fused path
+    graph = build_comm_graph(closed, ctx)
+    site = [s for s in graph.sites
+            if s.family == cg.MOE_DISPATCH_COMBINE][0]
+    key = ("moe_a2a_kernel", tuple(site.detail["buf_shape"]))
+    pol = DegradationPolicy(DegradeConfig(max_failures=1))
+    set_degradation_policy(pol)
+    try:
+        assert pol.record_failure(key) == [key]
+        plan = plan_rewrites(graph, ctx)
+        moe = [r for r in plan.reports
+               if r.family == cg.MOE_DISPATCH_COMBINE][0]
+        assert "quarantined" in moe.kernel
+    finally:
+        set_degradation_policy(None)
+
+
 def test_auto_mode_resolves_to_bulk_at_trace_time():
     f = FusionConfig(mode="auto")
     for fam in ("ag_matmul", "matmul_rs", "moe_a2a", "embed_a2a", "kv_ag"):

@@ -20,9 +20,9 @@ import pytest
 
 from repro.core import autotune
 from repro.core.fused import (allgather_matmul, embedding_all_to_all,
-                              fused_expert_ffn_combine, matmul_allreduce,
-                              matmul_reducescatter, moe_dispatch_all_to_all,
-                              sharded_cross_entropy)
+                              fused_expert_ffn_combine, fused_moe_kernel,
+                              matmul_allreduce, matmul_reducescatter,
+                              moe_dispatch_all_to_all, sharded_cross_entropy)
 from repro.core.perfmodel import DCN, V5E
 from repro.models.attention import context_attention
 from repro.parallel.sharding import FusionConfig
@@ -107,6 +107,36 @@ def _mk_moe_combine(ctx, rng, dtype, ragged):
                 ctx, xd, wu, wg, wd, act=jax.nn.silu, mode="bulk"))
 
 
+def _mk_moe_dispatch_kernel(ctx, rng, dtype, ragged):
+    """Device-initiated dispatch A2A (Pallas PUT ring) vs the bulk path.
+    Runs on the session's 2-D (data, model) mesh — the kernel entry maps
+    it through the flattened world under interpret mode."""
+    B, n_ep, E, C, D = (4, 4, 8, 6, 16) if ragged else (4, 4, 8, 8, 16)
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(dtype)
+    return (lambda q: moe_dispatch_all_to_all(
+                ctx, xd, mode="kernel", chunks_per_rank=q,
+                wire=ctx.fusion.wire),
+            lambda: moe_dispatch_all_to_all(ctx, xd, mode="bulk"))
+
+
+def _mk_moe_chain_kernel(ctx, rng, dtype, ragged):
+    """Chained dispatch -> FFN -> combine kernel vs the two-step bulk
+    combinator path (dispatch A2A then FFN+combine A2A)."""
+    B, n_ep, E, C, D, F = (4, 4, 8, 6, 16, 24) if ragged \
+        else (4, 4, 8, 8, 16, 24)
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(dtype)
+    wu = rng.standard_normal((E, D, F)).astype(dtype)
+    wg = rng.standard_normal((E, D, F)).astype(dtype)
+    wd = rng.standard_normal((E, F, D)).astype(dtype)
+    return (lambda q: fused_moe_kernel(
+                ctx, xd, wu, wg, wd, act=jax.nn.silu,
+                chunks_per_rank=1 if q is None else q,
+                wire=ctx.fusion.wire),
+            lambda: fused_expert_ffn_combine(
+                ctx, moe_dispatch_all_to_all(ctx, xd, mode="bulk"),
+                wu, wg, wd, act=jax.nn.silu, mode="bulk"))
+
+
 def _mk_embedding_a2a(ctx, rng, dtype, ragged):
     B, T, L, V, D = (16, 8, 3, 32, 12) if ragged else (16, 8, 4, 32, 8)
     idx = rng.integers(0, V, size=(B, T, L)).astype(np.int32)
@@ -145,7 +175,9 @@ OPS = {
     "matmul_reducescatter": _mk_matmul_reducescatter,
     "allgather_matmul": _mk_allgather_matmul,
     "moe_dispatch": _mk_moe_dispatch,
+    "moe_dispatch_kernel": _mk_moe_dispatch_kernel,
     "moe_combine": _mk_moe_combine,
+    "moe_chain_kernel": _mk_moe_chain_kernel,
     "embedding_a2a": _mk_embedding_a2a,
     "ring_attention": _mk_ring_attention,
     "ce_loss": _mk_ce_loss,
@@ -362,3 +394,88 @@ def test_auto_granularity_resolves_per_op(ctx, rng):
     assert {"matmul_allreduce", "allgather_matmul", "all_to_all",
             "ring_attention", "ce_ring"} <= ops_seen
     autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# device-initiated MoE kernel chain: bit-identity, skew, dispatch grads
+# ---------------------------------------------------------------------------
+def _chain_operands(ctx, rng, ragged=True):
+    B, n_ep, E, C, D, F = (4, 4, 8, 6, 16, 24) if ragged \
+        else (4, 4, 8, 8, 16, 24)
+    xd = rng.standard_normal((B, n_ep, E, C, D)).astype(np.float32)
+    wu = rng.standard_normal((E, D, F)).astype(np.float32)
+    wg = rng.standard_normal((E, D, F)).astype(np.float32)
+    wd = rng.standard_normal((E, F, D)).astype(np.float32)
+    return xd, wu, wg, wd
+
+
+@pytest.mark.parametrize("ragged", [False, True], ids=["even", "ragged"])
+def test_moe_chain_kernel_bit_identical_2d(ctx, rng, ragged):
+    """Acceptance: the chained dispatch->FFN->combine kernel path is
+    bit-identical (f32 wire) to the combinator path on the 2-D mesh."""
+    xd, wu, wg, wd = _chain_operands(ctx, rng, ragged)
+    yk = jax.jit(lambda: fused_moe_kernel(
+        ctx, xd, wu, wg, wd, act=jax.nn.silu))()
+    ref = jax.jit(lambda: fused_expert_ffn_combine(
+        ctx, moe_dispatch_all_to_all(ctx, xd, mode="bulk"),
+        wu, wg, wd, act=jax.nn.silu, mode="bulk"))()
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(ref))
+
+
+@pytest.mark.parametrize("skew", [1, 2])
+def test_moe_chain_kernel_skew_parity(ctx, rng, skew):
+    """A skew-rotated remote PUT order reorders only the wire traffic,
+    never the math: still bit-identical at wire='f32'."""
+    xd, wu, wg, wd = _chain_operands(ctx, rng)
+    yk = jax.jit(lambda: fused_moe_kernel(
+        ctx, xd, wu, wg, wd, act=jax.nn.silu, skew=skew,
+        chunks_per_rank=2))()
+    ref = jax.jit(lambda: fused_expert_ffn_combine(
+        ctx, moe_dispatch_all_to_all(ctx, xd, mode="bulk"),
+        wu, wg, wd, act=jax.nn.silu, mode="bulk"))()
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(ref))
+
+
+@pytest.mark.parametrize("skew", [1, 2])
+def test_moe_dispatch_kernel_skew_parity(ctx, rng, skew):
+    xd, _, _, _ = _chain_operands(ctx, rng)
+    yk = jax.jit(lambda: moe_dispatch_all_to_all(
+        ctx, xd, mode="kernel", skew=skew, chunks_per_rank=2))()
+    ref = jax.jit(lambda: moe_dispatch_all_to_all(ctx, xd, mode="bulk"))()
+    np.testing.assert_array_equal(np.asarray(yk), np.asarray(ref))
+
+
+def test_moe_dispatch_kernel_grad_exact(ctx, rng):
+    """Grads flow through the device-initiated dispatch boundary: the A2A
+    is self-adjoint on the shard axis, so the custom VJP is the same
+    kernel on the cotangent — bit-identical to the bulk path's grad."""
+    xd, _, _, _ = _chain_operands(ctx, rng)
+
+    def loss(mode):
+        return lambda v: (moe_dispatch_all_to_all(
+            ctx, v, mode=mode) ** 2).sum()
+
+    gk = jax.jit(jax.grad(loss("kernel")))(xd)
+    gb = jax.jit(jax.grad(loss("bulk")))(xd)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gb))
+
+
+def test_moe_chain_kernel_grad_parity(ctx, rng):
+    """The chained kernel is trainable: its VJP differentiates the pure
+    reference of the same math, so grads track the bulk path's."""
+    xd, wu, wg, wd = _chain_operands(ctx, rng)
+
+    def loss_kernel(v, a, b, c):
+        return (fused_moe_kernel(
+            ctx, v, a, b, c, act=jax.nn.silu) ** 2).sum()
+
+    def loss_bulk(v, a, b, c):
+        disp = moe_dispatch_all_to_all(ctx, v, mode="bulk")
+        return (fused_expert_ffn_combine(
+            ctx, disp, a, b, c, act=jax.nn.silu, mode="bulk") ** 2).sum()
+
+    gk = jax.jit(jax.grad(loss_kernel, argnums=(0, 1, 2, 3)))(xd, wu, wg, wd)
+    gb = jax.jit(jax.grad(loss_bulk, argnums=(0, 1, 2, 3)))(xd, wu, wg, wd)
+    for a, b in zip(gk, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
